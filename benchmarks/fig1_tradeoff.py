@@ -1,0 +1,80 @@
+"""Paper Figure 1: the latency-quality trade-off curves.
+
+(a) FPX enables a smooth latency/accuracy frontier per model;
+(b) SF win rate vs latency has an interior Pareto optimum;
+(c) HFT daily yield vs latency has an interior optimum.
+
+Emits CSV curves (results/fig1_*.csv) — plotting left to the reader.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from common import (LADDER, N_ACT, PROMPT_LEN, build_ladder, make_spec,
+                    task_teacher, write_table)
+
+sys.path.insert(0, "src")
+from repro.bench import agents as ag
+from repro.bench.hft import HFTBench, run_session
+from repro.bench.streetfighter import play_match
+from repro.models.modules import ExecContext
+
+GAMMAS = tuple(round(0.1 * i, 1) for i in range(11))
+
+
+def frontier(task: str, ladder) -> list:
+    teacher = task_teacher(task)
+    rows = []
+    for sim in LADDER:
+        for g in GAMMAS:
+            spec = make_spec(task, sim, ladder, gamma=g)
+            agent = ag.LLMAgent(spec, n_actions=N_ACT[task])
+            acc = ag.eval_decision_accuracy(
+                spec.params, spec.sim_cfg, teacher,
+                ctx=ExecContext(policy=spec.policy,
+                                default_bits=spec.default_bits),
+                prompt_len=PROMPT_LEN[task], n_actions=N_ACT[task])
+            rows.append([sim, f"{g:.1f}", f"{spec.avg_bits:.1f}",
+                         f"{agent.latency_s*1e3:.1f}", f"{acc:.4f}"])
+    return rows
+
+
+def reward_curve(task: str, ladder, sim: str) -> list:
+    rows = []
+    for g in GAMMAS:
+        spec = make_spec(task, sim, ladder, gamma=g)
+        n_act = N_ACT[task]
+        agent = ag.LLMAgent(spec, n_actions=n_act)
+        if task == "hft":
+            env = HFTBench()
+            r = float(np.mean([run_session(env, agent, seed=s)["daily_yield"]
+                               for s in range(3)]))
+        else:
+            ref = ag.LLMAgent(make_spec(task, "qwen-sim-3b", ladder,
+                                        gamma=None, bits=16), n_actions=n_act)
+            r = 100.0 * np.mean([play_match(agent, ref, rounds=1, seed=s) == 0
+                                 for s in range(10)])
+        rows.append([sim, f"{g:.1f}", f"{agent.latency_s*1e3:.1f}", f"{r:.2f}"])
+        print(f"fig1 {task} {sim} gamma={g:.1f}: lat={agent.latency_s*1e3:.0f}ms "
+              f"reward={r:+.2f}")
+    return rows
+
+
+def main():
+    hft_ladder = build_ladder("hft")
+    sf_ladder = build_ladder("sf")
+    write_table("results/fig1a_frontier_hft.csv",
+                ["model", "gamma", "avg_bits", "latency_ms", "decision_acc"],
+                frontier("hft", hft_ladder))
+    write_table("results/fig1b_sf_reward.csv",
+                ["model", "gamma", "latency_ms", "winrate_pct"],
+                reward_curve("sf", sf_ladder, "qwen-sim-3b"))
+    write_table("results/fig1c_hft_reward.csv",
+                ["model", "gamma", "latency_ms", "daily_yield_pct"],
+                reward_curve("hft", hft_ladder, "qwen-sim-14b"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""§Roofline: three-term roofline per (arch x input-shape) from the dry-run.
+
+  compute term    = step_FLOPs / (chips x 197 TF/s bf16)
+  memory term     = step_HBM_bytes / (chips x 819 GB/s)
+  collective term = per-chip collective bytes / 50 GB/s ICI link bw
+
+Collective bytes come from the compiled SPMD HLO (loop-aware parse in
+launch/dryrun.py; shapes there are already per-chip).  FLOPs/bytes use the
+analytic workload model below: XLA's cost_analysis() counts scan bodies
+ONCE (verified empirically — 2-layer and 4-layer models report identical
+flops), so raw cost_analysis is recorded as a cross-check only.
+
+Emits results/roofline.md + results/roofline.csv, consumed by EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import latency as lat
+
+CHIPS = 256
+PEAK = lat.PEAK_BF16
+HBM = lat.HBM_BW
+ICI = lat.ICI_BW
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+# ---------------------------------------------------------------------------
+# Analytic workload model (global FLOPs / HBM bytes per step)
+# ---------------------------------------------------------------------------
+
+def _linear_flops_bytes(cfg: ModelConfig, n_tokens: int, w_bytes: float = 2.0
+                        ) -> Tuple[float, float]:
+    """All linears across layers: (flops, weight bytes)."""
+    fl = wb = 0.0
+    for d_in, d_out, mult in lat._per_layer_linears(cfg):
+        fl += cfg.n_layers * 2.0 * n_tokens * mult * d_in * d_out
+        wb += cfg.n_layers * d_in * d_out * w_bytes
+    # embedding + lm head
+    fl += 2.0 * n_tokens * cfg.d_model * cfg.vocab
+    wb += cfg.d_model * cfg.vocab * w_bytes * (1 if cfg.tie_embeddings else 2)
+    if cfg.encdec:
+        enc_tokens = n_tokens  # encoder processes audio frames ~ seq tokens
+        for d_in, d_out, mult in lat._per_layer_linears(cfg):
+            fl += cfg.n_enc_layers * 2.0 * enc_tokens * mult * d_in * d_out
+            wb += cfg.n_enc_layers * d_in * d_out * w_bytes
+    return fl, wb
+
+
+def _attn_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Score+combine FLOPs (4 * tokens * context * q_width), window-aware."""
+    if cfg.arch_type == "ssm":
+        # mLSTM chunkwise: ~attention within chunks of 64
+        B, S = shape.global_batch, (1 if shape.kind == "decode" else shape.seq_len)
+        di = int(cfg.d_model * cfg.mlstm_proj_factor)
+        chunk = 64 if shape.kind != "decode" else 1
+        return 4.0 * B * S * chunk * di
+    B = shape.global_batch
+    qw = cfg.n_heads * cfg.head_dim
+    if shape.kind == "decode":
+        ctx_full, new = shape.seq_len, 1
+    else:
+        ctx_full, new = shape.seq_len / 2.0, shape.seq_len   # causal avg
+    W = cfg.sliding_window
+    L = cfg.n_layers
+    if W and cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        n_glob = L // sb
+        n_loc = L - n_glob
+    elif W:
+        n_loc, n_glob = L, 0
+    else:
+        n_loc, n_glob = 0, L
+    fl = 0.0
+    if n_glob:
+        fl += n_glob * 4.0 * B * new * ctx_full * qw
+    if n_loc:
+        fl += n_loc * 4.0 * B * new * min(ctx_full, W) * qw
+    if cfg.arch_type == "hybrid":
+        # mamba scan flops: ~6 * tokens * d_inner * state
+        fl += L * 6.0 * B * new * cfg.d_inner * cfg.ssm_state
+    if cfg.cross_attn_every:
+        n_cross = L // cfg.cross_attn_every
+        fl += n_cross * 4.0 * B * new * cfg.vision_tokens * qw
+    if cfg.encdec:
+        fl += L * 4.0 * B * new * cfg.audio_frames * qw
+    return fl
+
+
+def _kv_bytes(cfg: ModelConfig, shape: InputShape, dtype_bytes: int = 2) -> float:
+    """Decode-step KV cache read traffic (bytes)."""
+    if shape.kind != "decode" or cfg.arch_type == "ssm":
+        if cfg.arch_type == "ssm" and shape.kind == "decode":
+            pass
+        if cfg.arch_type != "ssm":
+            return 0.0
+        # xlstm decode: matrix state read/write
+        di = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = di // cfg.n_heads
+        per = cfg.n_heads * hd * hd * 4.0 * 2        # C read+write, fp32
+        return shape.global_batch * cfg.n_layers * per
+    B, S = shape.global_batch, shape.seq_len
+    kvw = cfg.n_kv_heads * cfg.head_dim
+    W = cfg.sliding_window
+    L = cfg.n_layers
+    if W and cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        n_glob = L // sb
+        n_loc = L - n_glob
+    elif W:
+        n_loc, n_glob = L, 0
+    else:
+        n_loc, n_glob = 0, L
+    total = n_glob * 2.0 * B * S * kvw * dtype_bytes
+    total += n_loc * 2.0 * B * min(S, W or S) * kvw * dtype_bytes
+    if cfg.arch_type == "hybrid":
+        total += L * B * cfg.d_inner * cfg.ssm_state * 4.0 * 2
+    return total
+
+
+def _attn_score_bytes(cfg: ModelConfig, shape: InputShape) -> float:
+    """HBM traffic of materialized (B,H,Sq,Skv) attention scores — the naive
+    (non-flash) attention baseline writes+reads them in fp32.  A fused
+    (flash/chunked) attention keeps them in VMEM: pass flash=True to
+    ``analytic`` to model that optimization (§Perf iteration)."""
+    if cfg.arch_type == "ssm" or shape.kind == "decode":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    L = cfg.n_layers
+    W = cfg.sliding_window
+    if W and cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        n_glob = L // sb
+        n_loc = L - n_glob
+    elif W:
+        n_loc, n_glob = L, 0
+    else:
+        n_loc, n_glob = 0, L
+    per = 0.0
+    if n_glob:
+        per += n_glob * B * cfg.n_heads * S * S * 0.5     # causal half
+    if n_loc:
+        per += n_loc * B * cfg.n_heads * S * min(S, W)
+    return per * 4.0 * 2.0      # fp32, write+read
+
+
+def analytic(cfg: ModelConfig, shape: InputShape, *,
+             flash: bool = False, w_bits: float = 16.0) -> Dict[str, float]:
+    """Global FLOPs / HBM bytes per step.
+
+    flash:  fused attention (no S^2 score materialization) — §Perf variant.
+    w_bits: weight storage width (16 baseline; 8/4/mixed for the FPX
+            quantized-serving §Perf variant)."""
+    n_tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                     else shape.seq_len)
+    lin_fl, w_bytes = _linear_flops_bytes(cfg, n_tokens,
+                                          w_bytes=w_bits / 8.0)
+    attn_fl = _attn_flops(cfg, shape)
+    fwd = lin_fl + attn_fl
+    score_b = 0.0 if flash else _attn_score_bytes(cfg, shape)
+    if shape.kind == "train":
+        flops = 3.0 * fwd                       # fwd + bwd(2x)
+        hbm = 3.0 * w_bytes + 3.0 * w_bytes * 2  # grads + fp32 adam moments
+        hbm += 14.0 * n_tokens * cfg.d_model * cfg.n_layers  # act traffic
+        hbm += 3.0 * score_b
+    elif shape.kind == "prefill":
+        flops = fwd
+        hbm = w_bytes + 12.0 * n_tokens * cfg.d_model * cfg.n_layers + score_b
+    else:
+        flops = fwd
+        hbm = w_bytes + _kv_bytes(cfg, shape) + \
+            8.0 * n_tokens * cfg.d_model * cfg.n_layers
+
+    n_active = cfg.n_active_params
+    model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * n_tokens
+    return {"flops": flops, "hbm_bytes": hbm, "model_flops": model_flops}
+
+
+BOTTLENECK_FIX = {
+    "compute": "more chips / lower-precision matmuls (int8 MXU) / sparser attn",
+    "memory": "quantized weights+KV (FPX: 2-4x fewer HBM bytes), fused attention",
+    "collective": "resharding: avoid per-layer activation all-reduce (2D sharding), overlap collectives with compute",
+}
+
+
+def roofline_row(cfg: ModelConfig, shape: InputShape,
+                 dr: Optional[dict]) -> Dict[str, object]:
+    a = analytic(cfg, shape)
+    t_c = a["flops"] / (CHIPS * PEAK)
+    t_m = a["hbm_bytes"] / (CHIPS * HBM)
+    coll = dr.get("collective_bytes", {}) if dr else {}
+    coll_bytes = float(sum(coll.values()))     # per-chip (SPMD shapes)
+    t_x = coll_bytes / ICI
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops": a["model_flops"],
+        "useful_ratio": a["model_flops"] / max(a["flops"], 1.0),
+        "fix": BOTTLENECK_FIX[dom],
+        "raw_cost_flops": (dr or {}).get("cost", {}).get("flops"),
+        "collective_bytes": coll_bytes,
+    }
+
+
+def load_dryrun(path: str) -> Dict[Tuple[str, str], dict]:
+    out = {}
+    if not os.path.exists(path):
+        return out
+    for line in open(path):
+        r = json.loads(line)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main(jsonl: str = None):
+    jsonl = jsonl or os.path.join(RESULTS, "dryrun_single.jsonl")
+    dr = load_dryrun(jsonl)
+    rows = []
+    for arch in ASSIGNED:
+        for sname, shape in INPUT_SHAPES.items():
+            rec = dr.get((arch, sname))
+            if rec and "skipped" in rec:
+                continue
+            cfg = get_config(arch)
+            rows.append(roofline_row(cfg, shape, rec))
+
+    os.makedirs(RESULTS, exist_ok=True)
+    md = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful FLOP ratio | what moves it down |",
+          "|---|---|---|---|---|---|---|---|"]
+    csv = ["arch,shape,compute_s,memory_s,collective_s,dominant,"
+           "model_flops,useful_ratio,collective_bytes_per_chip"]
+    for r in rows:
+        md.append(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+                  f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+                  f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {r['fix']} |")
+        csv.append(f"{r['arch']},{r['shape']},{r['compute_s']:.6e},"
+                   f"{r['memory_s']:.6e},{r['collective_s']:.6e},"
+                   f"{r['dominant']},{r['model_flops']:.3e},"
+                   f"{r['useful_ratio']:.3f},{r['collective_bytes']:.3e}")
+        print(f"{r['arch']:24s} {r['shape']:12s} c={r['compute_s']:.2e} "
+              f"m={r['memory_s']:.2e} x={r['collective_s']:.2e} -> {r['dominant']}")
+    open(os.path.join(RESULTS, "roofline.md"), "w").write("\n".join(md) + "\n")
+    open(os.path.join(RESULTS, "roofline.csv"), "w").write("\n".join(csv) + "\n")
+    print(f"# wrote results/roofline.md ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

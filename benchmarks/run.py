@@ -1,0 +1,79 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
+``us_per_call`` is the modeled TPU action latency (microseconds) of the
+headline configuration; ``derived`` is the table's headline metric.
+Full tables land in results/*.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the reward simulations (tables 1/2/fig1)")
+    args, _ = ap.parse_known_args()
+
+    rows = []
+
+    # --- Table 4: quantization latency ladder (analytic, fast) -----------
+    import table4_latency
+    t4 = table4_latency.main()
+    fp4_14b = next(r for r in t4 if r[0] == "qwen2.5-14b" and r[1] == "FP4")
+    rows.append(("table4_latency", float(fp4_14b[2]) * 1e3,
+                 f"fp4_14b_rel={fp4_14b[3]}"))
+
+    # --- Roofline table (from dry-run artifacts) --------------------------
+    import roofline
+    rl = roofline.main()
+    if rl:
+        dom = max(rl, key=lambda r: max(r["compute_s"], r["memory_s"],
+                                        r["collective_s"]))
+        worst_term = max(dom["compute_s"], dom["memory_s"], dom["collective_s"])
+        rows.append(("roofline", worst_term * 1e6,
+                     f"worst={dom['arch']}/{dom['shape']}:{dom['dominant']}"))
+
+    if not args.fast:
+        # --- Table 1: HFT daily yield + SF ELO ----------------------------
+        import table1_hft
+        t1h = table1_hft.main()
+        best = t1h[0]
+        rows.append(("table1_hft", float(best[2]) * 1e3,
+                     f"best={best[0]}:yield={best[4]}%"))
+
+        import table1_sf
+        ratings = table1_sf.main()
+        top = max(ratings, key=ratings.get)
+        rows.append(("table1_sf", 0.0, f"best={top}:elo={ratings[top]:.1f}"))
+
+        # --- Table 2: gamma sweeps ----------------------------------------
+        import table2_gamma
+        hft_rows, sf_rows = table2_gamma.main()
+        best_g = max(hft_rows, key=lambda r: float(r[3]))
+        rows.append(("table2_hft_gamma", float(best_g[1]) * 1e3,
+                     f"gamma*={best_g[0]}:yield={best_g[3]}%"))
+        best_g = max(sf_rows, key=lambda r: float(r[3]))
+        rows.append(("table2_sf_gamma", float(best_g[1]) * 1e3,
+                     f"gamma*={best_g[0]}:winrate={best_g[3]}%"))
+
+        # --- Figure 1 curves ----------------------------------------------
+        import fig1_tradeoff
+        fig1_tradeoff.main()
+        rows.append(("fig1_tradeoff", 0.0, "curves=results/fig1*.csv"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Table 1 (bottom) / Table 3: StreetFighter ELO tournament.
+
+Round-robin over (model size x precision) agents, paper protocol: matches
+per pairing, ELO updated per round.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from common import LADDER, build_ladder, make_spec, write_table
+
+sys.path.insert(0, "src")
+from repro.bench import agents as ag, elo
+from repro.bench.streetfighter import SFGame, play_match
+
+ROUNDS_PER_PAIR = 8      # paper: 40 matches per pairing; 8 keeps CPU tractable
+                         # (each "round" here is a best-of-3 match)
+
+
+def main(gammas=(0.2, 0.3)) -> dict:
+    ladder = build_ladder("sf")
+    specs = []
+    for sim in LADDER:
+        specs.append(make_spec("sf", sim, ladder, gamma=None, bits=16))
+        specs.append(make_spec("sf", sim, ladder, gamma=None, bits=8))
+        for g in gammas:
+            specs.append(make_spec("sf", sim, ladder, gamma=g))
+    agents = [ag.LLMAgent(s, n_actions=5) for s in specs]
+    names = [s.name for s in specs]
+
+    def play(i: int, j: int, seed: int) -> float:
+        w = play_match(agents[i], agents[j], rounds=1, seed=seed)
+        return 1.0 if w == 0 else 0.0
+
+    ratings = elo.tournament(names, play, rounds_per_pair=ROUNDS_PER_PAIR)
+    rows = sorted(
+        ([n, f"{s.avg_bits:.1f}", f"{agents[k].latency_s*1e3:.0f}",
+          f"{ratings[n]:.2f}"]
+         for k, (n, s) in enumerate(zip(names, specs))),
+        key=lambda r: -float(r[-1]))
+    for r in rows:
+        print(f"{r[0]:18s} bits={r[1]:>4} lat={r[2]:>5}ms ELO={r[3]:>8}")
+    write_table("results/table1_sf.csv",
+                ["model", "bitwidth_avg", "latency_ms", "elo"], rows)
+    return ratings
+
+
+if __name__ == "__main__":
+    main()

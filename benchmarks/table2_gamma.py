@@ -1,0 +1,81 @@
+"""Paper Table 2: performance under compression levels (gamma sweep).
+
+HFTBench with the 14B-class model and StreetFighter (vs the FP16 3B) with
+the 3B-class model, sweeping gamma over {0, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0}.
+Reports modeled latency, decision quality, and task reward — the paper's
+interior-optimum claim (gamma* > 0, task-dependent) is the check.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from common import (N_ACT, PROMPT_LEN, build_ladder, make_spec, task_teacher,
+                    write_table)
+
+sys.path.insert(0, "src")
+from repro.bench import agents as ag
+from repro.bench.hft import HFTBench, run_session
+from repro.bench.streetfighter import play_match
+from repro.core import latency as lat_mod
+from repro.models.modules import ExecContext
+
+GAMMAS = (0.0, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0)
+
+
+def hft_sweep(ladder) -> list:
+    teacher = task_teacher("hft")
+    rows = []
+    for g in GAMMAS:
+        spec = make_spec("hft", "qwen-sim-14b", ladder, gamma=g)
+        agent = ag.LLMAgent(spec, n_actions=3)
+        env = HFTBench()
+        y = float(np.mean([run_session(env, agent, seed=s)["daily_yield"]
+                           for s in range(4)]))
+        acc = ag.eval_decision_accuracy(
+            spec.params, spec.sim_cfg, teacher,
+            ctx=ExecContext(policy=spec.policy, default_bits=spec.default_bits),
+            prompt_len=PROMPT_LEN["hft"], n_actions=3)
+        rows.append([f"{g:.1f}", f"{agent.latency_s*1e3:.0f}",
+                     f"{acc:.3f}", f"{y:.2f}"])
+        print(f"HFT 14B gamma={g:.1f}: lat={agent.latency_s*1e3:.0f}ms "
+              f"acc={acc:.3f} yield={y:+.2f}%")
+    return rows
+
+
+def sf_sweep(ladder) -> list:
+    teacher = task_teacher("sf")
+    ref = ag.LLMAgent(make_spec("sf", "qwen-sim-3b", ladder, gamma=None,
+                                bits=16), n_actions=5)
+    rows = []
+    for g in GAMMAS:
+        spec = make_spec("sf", "qwen-sim-3b", ladder, gamma=g)
+        agent = ag.LLMAgent(spec, n_actions=5)
+        wins = sum(play_match(agent, ref, rounds=1, seed=s) == 0
+                   for s in range(16))
+        acc = ag.eval_decision_accuracy(
+            spec.params, spec.sim_cfg, teacher,
+            ctx=ExecContext(policy=spec.policy, default_bits=spec.default_bits),
+            prompt_len=PROMPT_LEN["sf"], n_actions=5)
+        rows.append([f"{g:.1f}", f"{agent.latency_s*1e3:.0f}",
+                     f"{acc:.3f}", f"{100*wins/16:.1f}"])
+        print(f"SF 3B gamma={g:.1f}: lat={agent.latency_s*1e3:.0f}ms "
+              f"acc={acc:.3f} winrate={100*wins/16:.1f}%")
+    return rows
+
+
+def main():
+    hft_rows = hft_sweep(build_ladder("hft"))
+    sf_rows = sf_sweep(build_ladder("sf"))
+    write_table("results/table2_hft_gamma.csv",
+                ["gamma", "latency_ms", "decision_acc", "daily_yield_pct"],
+                hft_rows)
+    write_table("results/table2_sf_gamma.csv",
+                ["gamma", "latency_ms", "decision_acc", "winrate_pct"],
+                sf_rows)
+    return hft_rows, sf_rows
+
+
+if __name__ == "__main__":
+    main()

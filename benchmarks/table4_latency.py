@@ -1,0 +1,46 @@
+"""Paper Table 4: per-action latency across quantization schemes.
+
+Derived from the analytic TPU-v5e roofline latency model (core.latency):
+FP16 / FP8 / W4A16(int) / FP4 for each Qwen2.5 size.  The validation target
+is the paper's *ordering and ratios* (FP8 ~ 0.55x FP16, FP4 ~ 0.3x, W4A16
+worse than FP8 and relatively worst for small models), not RTX-5090
+milliseconds.
+"""
+from __future__ import annotations
+
+import sys
+
+from common import write_table
+
+sys.path.insert(0, "src")
+from repro.configs import QWEN_FULL
+from repro.core import latency as lat_mod
+
+#: paper Table 4 (RTX 5090, ms) for ratio comparison
+PAPER = {
+    "qwen2.5-1.5b": {"FP16": 203, "FP8": 142, "W4A16(int)": 254, "FP4": 83},
+    "qwen2.5-3b": {"FP16": 349, "FP8": 222, "W4A16(int)": 323, "FP4": 147},
+    "qwen2.5-7b": {"FP16": 619, "FP8": 394, "W4A16(int)": 537, "FP4": 248},
+    "qwen2.5-14b": {"FP16": 1302, "FP8": 801, "W4A16(int)": 792, "FP4": 492},
+}
+
+
+def main():
+    rows = []
+    for name, cfg in QWEN_FULL.items():
+        ours = lat_mod.quant_ladder(cfg)
+        for scheme, t in ours.items():
+            ours_rel = t / ours["FP16"]
+            paper_rel = PAPER[name][scheme] / PAPER[name]["FP16"]
+            rows.append([name, scheme, f"{t*1e3:.0f}", f"{ours_rel:.2f}",
+                         f"{paper_rel:.2f}"])
+            print(f"{name:14s} {scheme:12s} {t*1e3:7.0f} ms   "
+                  f"rel={ours_rel:.2f} (paper rel={paper_rel:.2f})")
+    write_table("results/table4_latency.csv",
+                ["model", "scheme", "latency_ms_tpu", "rel_fp16_ours",
+                 "rel_fp16_paper"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""StreetFighter: a real-time duel between a fast-compressed and a slow
+full-precision agent.
+
+    PYTHONPATH=src python examples/street_fighter.py [--steps 300]
+"""
+import argparse
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.bench import agents as ag
+from repro.bench.streetfighter import SFGame, play_match, N_ACTIONS
+from repro.configs import get_config
+from repro.core import assign, calibrate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--matches", type=int, default=11)
+args = ap.parse_args()
+
+game = SFGame()
+teacher = game.teacher
+
+cfg = get_config("qwen-sim-7b")
+params, acc = ag.train_decision_model(cfg, teacher, steps=args.steps,
+                                      batch=32, prompt_len=24)
+print(f"# trained qwen-sim-7b: action accuracy {acc:.3f}")
+
+rng = np.random.default_rng(5)
+eps = calibrate.calibrate(
+    params, cfg, [ag.decision_batch(teacher, rng, batch=4, prompt_len=24)])
+full = get_config("qwen2.5-7b")
+
+fp16 = ag.LLMAgent(ag.AgentSpec(
+    name="7b-fp16", sim_cfg=cfg, params=params, full_cfg=full), n_actions=N_ACTIONS)
+asn = assign.assign_precision(eps, 0.3)
+fpx = ag.LLMAgent(ag.AgentSpec(
+    name="7b-fpx0.3", sim_cfg=cfg, params=params, full_cfg=full,
+    policy=asn, default_bits=8, avg_bits=assign.avg_bits(asn)),
+    n_actions=N_ACTIONS)
+
+print(f"#  fp16 latency {fp16.latency_s*1e3:.0f}ms vs "
+      f"fpx(0.3) latency {fpx.latency_s*1e3:.0f}ms")
+wins = sum(play_match(fpx, fp16, rounds=1, seed=s) == 0
+           for s in range(args.matches))
+print(f"# FPX wins {wins}/{args.matches} matches vs FP16 "
+      f"({100*wins/args.matches:.0f}% winrate)")
+print("Street Fighter is latency-dominant: the FP16 7B (316ms) misses the "
+      "~200ms action cadence; FPX compression (139ms) fits it — the same "
+      "model wins by punching on time (paper Table 2, bottom).")

@@ -1,0 +1,13 @@
+"""FPX: adaptive mixed-precision inference for latency-sensitive LLM agents.
+
+Reproduction of "Win Fast or Lose Slow" (NeurIPS 2025) as a multi-pod
+JAX/Pallas framework.  Entry points:
+
+    repro.configs.get_config("<arch>")     # the 10 assigned architectures
+    repro.core.{quant,calibrate,assign,fpx,latency}   # the paper's method
+    repro.models.transformer               # forward / prefill / decode
+    repro.serving.engine.ServingEngine     # FPX-aware batched serving
+    repro.bench.{hft,streetfighter}        # the two benchmarks
+    repro.launch.{mesh,dryrun,train,serve} # distribution + launchers
+"""
+__version__ = "0.1.0"

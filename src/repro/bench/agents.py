@@ -1,0 +1,134 @@
+"""LLM decision agents for the benchmarks.
+
+An agent = a sim-scale model from the zoo (the executable stand-in for a
+Qwen2.5 checkpoint, DESIGN.md §7) + an FPX precision assignment + the
+analytic TPU latency of the *full-scale* model it represents.
+
+The causal chain the paper studies is preserved end to end:
+  model size        -> decision accuracy (capacity vs the Teacher function)
+  FPX gamma         -> real quantization noise in the forward pass
+  avg bitwidth      -> modeled action latency
+  latency           -> decayed fills (HFT) / stale whiffs (SF)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.env import ACTION_BASE, Teacher
+from repro.configs.base import ModelConfig
+from repro.core import latency as lat_mod
+from repro.models import transformer
+from repro.models.modules import ExecContext
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Decision-supervision training (the sim ladder's "pretraining")
+# ---------------------------------------------------------------------------
+
+def decision_batch(teacher: Teacher, rng: np.random.Generator, *,
+                   batch: int, prompt_len: int) -> Dict[str, np.ndarray]:
+    feats = rng.integers(0, teacher.n_values, (batch, teacher.n_features))
+    toks = teacher.encode(feats, prompt_len + 1)
+    labels = teacher.label(feats)
+    toks[:, prompt_len] = ACTION_BASE + labels      # target action token
+    mask = np.zeros_like(toks, dtype=np.float32)
+    mask[:, prompt_len] = 1.0                        # loss only on the action
+    return {"tokens": toks, "mask": mask}
+
+
+def train_decision_model(cfg: ModelConfig, teacher: Teacher, *,
+                         steps: int = 1500, batch: int = 64,
+                         prompt_len: int = 32, lr: float = 2e-3,
+                         seed: int = 0, log_every: int = 0):
+    """Supervised training: prompt -> correct action token.  Returns
+    (params, final_accuracy)."""
+    from repro.training.train_step import make_train_step
+
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 10),
+                          total_steps=steps, weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    opt = adamw_init(params)
+    rng = np.random.default_rng(seed + 1)
+    acc = 0.0
+    for i in range(steps):
+        b = decision_batch(teacher, rng, batch=batch, prompt_len=prompt_len)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, m = step_fn(params, opt, b)
+        acc = float(m["accuracy"])
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            print(f"  [{cfg.name}] step {i}: loss={float(m['loss']):.3f} "
+                  f"action-acc={acc:.3f}")
+    return params, acc
+
+
+def eval_decision_accuracy(params, cfg: ModelConfig, teacher: Teacher, *,
+                           ctx: Optional[ExecContext] = None,
+                           n: int = 512, prompt_len: int = 32,
+                           n_actions: int = 3, seed: int = 99) -> float:
+    ctx = ctx or ExecContext()
+    rng = np.random.default_rng(seed)
+    feats = rng.integers(0, teacher.n_values, (n, teacher.n_features))
+    toks = jnp.asarray(teacher.encode(feats, prompt_len))
+    labels = teacher.label(feats)
+    logits = transformer.forward(params, cfg, {"tokens": toks}, ctx,
+                                 unroll=True)
+    act_logits = logits[:, -1, ACTION_BASE:ACTION_BASE + n_actions]
+    pred = np.asarray(act_logits.argmax(-1))
+    return float((pred == labels).mean())
+
+
+# ---------------------------------------------------------------------------
+# The agent
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AgentSpec:
+    name: str
+    sim_cfg: ModelConfig                 # executable model
+    params: Any
+    full_cfg: ModelConfig                # latency-model scale
+    policy: Optional[Dict[str, int]] = None
+    default_bits: int = 16
+    avg_bits: float = 16.0
+    gamma: float = 0.0
+    prompt_len_real: int = 512           # the paper's observation prompts
+    gen_tokens: int = 16                 # action phrase length
+
+
+class LLMAgent:
+    """decide(obs) -> (action, latency_s); scoring jitted once per policy."""
+
+    def __init__(self, spec: AgentSpec, *, n_actions: int = 3,
+                 hw: lat_mod.Hardware = lat_mod.V5E,
+                 latency_floor_s: float = 0.0,
+                 latency_override_s: Optional[float] = None):
+        self.spec = spec
+        self.n_actions = n_actions
+        ctx = ExecContext(policy=spec.policy, default_bits=spec.default_bits)
+        cfg = spec.sim_cfg
+
+        def score(params, tokens):
+            logits = transformer.forward(params, cfg, {"tokens": tokens},
+                                         ctx, unroll=True)
+            return logits[:, -1, ACTION_BASE:ACTION_BASE + n_actions]
+
+        self._score = jax.jit(score)
+        if latency_override_s is not None:
+            self.latency_s = latency_override_s
+        else:
+            self.latency_s = lat_mod.decision_latency(
+                spec.full_cfg, prompt_len=spec.prompt_len_real,
+                gen_tokens=spec.gen_tokens, w_bits=spec.avg_bits, hw=hw)
+        self.latency_s = max(self.latency_s, latency_floor_s)
+
+    def decide(self, obs: Dict[str, Any]) -> Tuple[int, float]:
+        toks = jnp.asarray(obs["tokens"])[None, :]
+        act = int(np.asarray(self._score(self.spec.params, toks)).argmax())
+        return act, self.latency_s

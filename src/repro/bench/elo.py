@@ -1,0 +1,31 @@
+"""ELO rating (Elo, 1967) — the paper's StreetFighter metric."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+
+def expected(ra: float, rb: float) -> float:
+    return 1.0 / (1.0 + 10 ** ((rb - ra) / 400.0))
+
+
+def update(ra: float, rb: float, score_a: float, k: float = 16.0
+           ) -> Tuple[float, float]:
+    ea = expected(ra, rb)
+    return ra + k * (score_a - ea), rb + k * ((1 - score_a) - (1 - ea))
+
+
+def tournament(names: Sequence[str], play, *, rounds_per_pair: int = 40,
+               k: float = 16.0, base: float = 0.0,
+               seed: int = 0) -> Dict[str, float]:
+    """Round-robin: ``play(i, j, round)`` returns 1.0 if i wins else 0.0.
+
+    The paper reports ELO *deltas* around 0 (Table 1/3); ``base=0``
+    matches that convention."""
+    ratings = {n: base for n in names}
+    for i in range(len(names)):
+        for j in range(i + 1, len(names)):
+            for r in range(rounds_per_pair):
+                s = play(i, j, seed * 100_000 + r)
+                ratings[names[i]], ratings[names[j]] = update(
+                    ratings[names[i]], ratings[names[j]], s, k)
+    return ratings

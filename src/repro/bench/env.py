@@ -1,0 +1,96 @@
+"""The latency-sensitive agent decision task contract (paper Sec. 3.1).
+
+    r = sum_t R(a_{t+Dt} | E_{t+Dt})          (paper Eq. 5)
+
+The environment *advances while the agent thinks*: ``step`` takes the
+action AND the inference latency ``Dt`` that produced it, and scores the
+action against the environment state at execution time — not at
+observation time.  Both benchmarks implement this contract.
+
+Observations are token sequences (the "prompt"); hidden task-relevant
+structure is embedded in feature tokens via a random *teacher* function
+that agents must learn to decode — the executable analogue of "correctly
+interpreting market conditions / game state" (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+# token-protocol layout within the sim vocab (512)
+PAD, BOS = 0, 1
+ACTION_BASE = 2           # action ids occupy [2, 2+n_actions)
+FEAT_BASE = 16            # feature tokens start here
+
+
+@dataclasses.dataclass
+class Teacher:
+    """Random ground-truth decision function over K categorical features.
+
+    A *chained lookup*: ``s_0 = f_0; s_i = T_i[s_{i-1}, f_i]; label = s_K
+    mod n_classes`` with random tables T_i.  Function composition of depth
+    K needs circuit depth ~K: shallow models plateau, deeper/wider models
+    keep climbing — the capacity-graded difficulty the paper's Qwen ladder
+    supplies.  (A smooth random-MLP teacher is NOT capacity-graded: every
+    sim-scale model saturates it — measured before switching.)  The deep
+    composition is also fragile to weight noise, which is what makes FP4
+    quantization visibly costly.
+
+    ``hidden``/``temperature`` kept for config compatibility: ``hidden``
+    scales nothing here; chain length = n_features."""
+    n_features: int
+    n_values: int
+    n_classes: int
+    seed: int = 0
+    hidden: int = 64
+    temperature: float = 0.5
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.tables = rng.integers(
+            0, self.n_values,
+            size=(self.n_features, self.n_values, self.n_values))
+
+    def label(self, feats: np.ndarray) -> np.ndarray:
+        """feats: (..., K) ints -> (...) class labels."""
+        f = np.atleast_2d(feats)
+        state = f[..., 0].copy()
+        for i in range(1, self.n_features):
+            state = self.tables[i][state, f[..., i]]
+        out = state % self.n_classes
+        return out.reshape(feats.shape[:-1]) if feats.ndim > 1 else out[0]
+
+    def logits(self, feats: np.ndarray) -> np.ndarray:
+        lab = self.label(feats)
+        return np.eye(self.n_classes)[lab] / max(self.temperature, 1e-3)
+
+    def encode(self, feats: np.ndarray, prompt_len: int) -> np.ndarray:
+        """Feature ints -> token prompt (BOS + feature tokens + PAD)."""
+        toks = FEAT_BASE + feats * 1 + \
+            (np.arange(feats.shape[-1]) * self.n_values)
+        out = np.full((*feats.shape[:-1], prompt_len), PAD, np.int32)
+        out[..., 0] = BOS
+        k = feats.shape[-1]
+        out[..., 1:1 + k] = toks
+        return out
+
+
+class LatencySensitiveEnv:
+    """Abstract env: observe -> (think for Dt) -> act against evolved state."""
+
+    n_actions: int = 3
+
+    def reset(self, seed: int = 0) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def observe(self) -> Dict[str, Any]:
+        """Returns {"tokens": (prompt_len,) int32, ...context...}."""
+        raise NotImplementedError
+
+    def step(self, action: int, latency_s: float) -> Tuple[float, bool, Dict]:
+        """Apply ``action`` computed with ``latency_s`` thinking time.
+        Returns (reward, done, info).  The env advances by ``latency_s``
+        before the action lands."""
+        raise NotImplementedError

@@ -1,0 +1,87 @@
+"""Checkpointing: msgpack-framed numpy tensor store (no orbax offline).
+
+Layout: a single ``.ckpt`` file holding a manifest (tree structure, dtypes,
+shapes) followed by raw little-endian tensor payloads.  Restore is
+sharding-aware: pass ``sharding_tree`` (or a single sharding) to place
+tensors as they load — on the dry-run meshes this is how a real deployment
+would stream a checkpoint into a sharded model.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any, *, step: Optional[int] = None) -> None:
+    leaves, treedef = _flatten(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "step": step,
+        "tensors": [{"dtype": str(np.asarray(l).dtype),
+                     "shape": list(np.asarray(l).shape)} for l in leaves],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(manifest))
+        for leaf in leaves:
+            arr = np.ascontiguousarray(np.asarray(leaf))
+            f.write(msgpack.packb(arr.tobytes()))
+    os.replace(tmp, path)
+
+
+def restore(path: str, like: Any, *, sharding_tree: Any = None) -> Any:
+    """``like``: a pytree (of arrays or ShapeDtypeStructs) giving structure."""
+    leaves_like, treedef = _flatten(like)
+    shardings = None
+    if sharding_tree is not None:
+        shardings = jax.tree_util.tree_leaves(
+            sharding_tree, is_leaf=lambda x: hasattr(x, "device_set") or x is None)
+        if len(shardings) == 1:
+            shardings = shardings * len(leaves_like)
+
+    unpacker_leaves = []
+    with open(path, "rb") as f:
+        unpacker = msgpack.Unpacker(f, raw=False, max_buffer_size=1 << 31)
+        manifest = next(iter(unpacker))
+        for i, meta in enumerate(manifest["tensors"]):
+            buf = next(iter(unpacker))
+            arr = np.frombuffer(buf, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"])
+            want = leaves_like[i]
+            assert tuple(arr.shape) == tuple(want.shape), (arr.shape, want.shape)
+            if shardings is not None and shardings[i] is not None:
+                arr = jax.device_put(arr, shardings[i])
+            else:
+                arr = jnp.asarray(arr)
+            unpacker_leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, unpacker_leaves)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f.split("_")[1].split(".")[0])
+             for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".ckpt")]
+    return max(steps) if steps else None
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step}.ckpt")
+    save(path, tree, step=step)
+    return path
+
+
+def restore_step(ckpt_dir: str, step: int, like: Any, **kw) -> Any:
+    return restore(os.path.join(ckpt_dir, f"step_{step}.ckpt"), like, **kw)

@@ -1,0 +1,40 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned arch."""
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.configs.llama_3_2_vision_11b import CONFIG as _llama_vision
+from repro.configs.gemma_7b import CONFIG as _gemma7b
+from repro.configs.dbrx_132b import CONFIG as _dbrx
+from repro.configs.hymba_1_5b import CONFIG as _hymba
+from repro.configs.gemma3_4b import CONFIG as _gemma3_4b
+from repro.configs.granite_moe_1b_a400m import CONFIG as _granite
+from repro.configs.gemma3_12b import CONFIG as _gemma3_12b
+from repro.configs.starcoder2_15b import CONFIG as _starcoder2
+from repro.configs.seamless_m4t_medium import CONFIG as _seamless
+from repro.configs.qwen_sim import QWEN_FULL, QWEN_SIM, SIM_TO_FULL
+
+#: The 10 architectures assigned to this paper.
+ASSIGNED = {
+    "xlstm-1.3b": _xlstm,
+    "llama-3.2-vision-11b": _llama_vision,
+    "gemma-7b": _gemma7b,
+    "dbrx-132b": _dbrx,
+    "hymba-1.5b": _hymba,
+    "gemma3-4b": _gemma3_4b,
+    "granite-moe-1b-a400m": _granite,
+    "gemma3-12b": _gemma3_12b,
+    "starcoder2-15b": _starcoder2,
+    "seamless-m4t-medium": _seamless,
+}
+
+REGISTRY = {**ASSIGNED, **QWEN_FULL, **QWEN_SIM}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES", "ASSIGNED",
+           "REGISTRY", "QWEN_FULL", "QWEN_SIM", "SIM_TO_FULL", "get_config"]

@@ -1,0 +1,156 @@
+"""Model configuration schema + input-shape suite + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    source: str = ""                  # citation (paper / model card)
+
+    ffn_kind: str = "swiglu"          # swiglu | geglu | gelu
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    norm_plus_one: bool = False       # gemma-style (1+g) RMSNorm
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    tie_embeddings: bool = True
+
+    # attention pattern
+    sliding_window: Optional[int] = None   # window for local layers
+    local_global_ratio: int = 0            # e.g. 5 => 5 local : 1 global; 0 => all global
+    attn_bias: bool = False
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 2.0
+
+    # ssm / hybrid (mamba branch)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+
+    # xlstm
+    slstm_every: int = 0              # every k-th block is sLSTM (7:1 -> 8)
+    mlstm_proj_factor: float = 2.0
+
+    # vlm
+    cross_attn_every: int = 0         # every k-th layer is a cross-attn layer
+    vision_tokens: int = 1601
+    vision_dim: int = 0               # 0 => d_model
+
+    # audio / enc-dec
+    encdec: bool = False
+    n_enc_layers: int = 0
+    audio_frames: int = 4096
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_model * self.ssm_expand
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k decode (bounded or linear per-token state)."""
+        return self.arch_type in ("ssm", "hybrid") or self.sliding_window is not None
+
+    @property
+    def n_params(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, dff, L = self.d_model, self.d_ff, self.n_layers
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.arch_type == "ssm":
+            di = int(d * self.mlstm_proj_factor)
+            per_m = d * 2 * di + 3 * di * di + di * 2 * self.n_heads + di * d
+            per_s = d * 4 * d * 2 + d * int(d * 8 / 3) * 2
+            n_s = L // self.slstm_every if self.slstm_every else 0
+            return emb + (L - n_s) * per_m + n_s * per_s
+        attn = d * self.n_heads * self.head_dim * 2 + \
+            d * self.n_kv_heads * self.head_dim * 2
+        if self.n_experts:
+            ffn = self.n_experts * (3 if self.ffn_kind != "gelu" else 2) * d * dff \
+                + d * self.n_experts
+        else:
+            ffn = (3 if self.ffn_kind != "gelu" else 2) * d * dff
+        per = attn + ffn
+        if self.arch_type == "hybrid":
+            di = self.d_inner
+            per += d * 2 * di + di * (64 + 2 * self.ssm_state) + 64 * di + di * d
+        if self.cross_attn_every:
+            per += (attn // self.cross_attn_every)
+        total = emb + L * per
+        if self.encdec:
+            total += self.n_enc_layers * (attn + ffn)
+        return total
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if not self.n_experts:
+            return self.n_params
+        d, dff, L = self.d_model, self.d_ff, self.n_layers
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * self.n_heads * self.head_dim * 2 + \
+            d * self.n_kv_heads * self.head_dim * 2
+        ffn = self.top_k * (3 if self.ffn_kind != "gelu" else 2) * d * dff
+        return emb + L * (attn + ffn)
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: <=2-ish layers, d_model<=512, <=4 experts."""
+        changes = dict(
+            name=self.name + "-smoke",
+            n_layers=min(self.n_layers, 2),
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=min(self.head_dim, 64),
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+        )
+        if self.n_experts:
+            changes["n_experts"] = min(self.n_experts, 4)
+            changes["top_k"] = min(self.top_k, 2)
+        if self.slstm_every:
+            changes["n_layers"] = 2
+            changes["slstm_every"] = 2     # 1 mLSTM + 1 sLSTM
+            changes["n_heads"] = 2
+        if self.cross_attn_every:
+            changes["n_layers"] = 2
+            changes["cross_attn_every"] = 2
+            changes["vision_tokens"] = 16
+            changes["vision_dim"] = 0
+        if self.encdec:
+            changes["n_enc_layers"] = 2
+            changes["audio_frames"] = 16
+        if self.local_global_ratio:
+            changes["local_global_ratio"] = 1  # 1 local : 1 global in 2 layers
+        if self.sliding_window:
+            changes["sliding_window"] = 8
+        if self.n_kv_heads > min(self.n_heads, 4):
+            changes["n_kv_heads"] = changes["n_heads"]
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,21 @@
+"""dbrx-132b [moe]: 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    arch_type="moe",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=10752,           # per-expert FFN width
+    vocab=100352,
+    source="hf:databricks/dbrx-base",
+    ffn_kind="swiglu",
+    rope_theta=500000.0,
+    tie_embeddings=False,
+    n_experts=16,
+    top_k=4,
+    capacity_factor=2.0,  # dbrx is dropless; cf=2 makes drops negligible (DESIGN.md)
+)

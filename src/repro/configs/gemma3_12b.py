@@ -1,0 +1,24 @@
+"""gemma3-12b [dense]: 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt family scaling]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    arch_type="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab=262144,
+    source="hf:google/gemma-3-1b-pt",
+    ffn_kind="geglu",
+    norm_plus_one=True,
+    embed_scale=True,
+    qk_norm=True,
+    tie_embeddings=True,
+    sliding_window=1024,
+    local_global_ratio=5,
+    rope_theta=1000000.0,
+)

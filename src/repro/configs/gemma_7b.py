@@ -1,0 +1,19 @@
+"""gemma-7b [dense]: GeGLU, head_dim=256 [arXiv:2403.08295]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    arch_type="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,        # 7b is MHA (MQA is the 2b variant)
+    head_dim=256,
+    d_ff=24576,
+    vocab=256000,
+    source="arXiv:2403.08295",
+    ffn_kind="geglu",
+    norm_plus_one=True,
+    embed_scale=True,
+    tie_embeddings=True,
+)

@@ -1,0 +1,21 @@
+"""granite-moe-1b-a400m [moe]: 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    arch_type="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,             # per-expert FFN width (fine-grained experts)
+    vocab=49155,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    ffn_kind="swiglu",
+    tie_embeddings=True,
+    n_experts=32,
+    top_k=8,
+    capacity_factor=2.0,
+)

@@ -1,0 +1,28 @@
+"""hymba-1.5b [hybrid]: parallel attn + mamba heads per block [arXiv:2411.13676].
+
+Each block runs an attention branch and a mamba (selective-SSM) branch on the
+same input in parallel and mean-combines their normalized outputs.  Most
+layers use sliding-window attention; layers {0, mid, last} are global
+full-attention (per the paper).  Meta-tokens are not modeled (DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab=32001,
+    source="arXiv:2411.13676",
+    ffn_kind="swiglu",
+    tie_embeddings=True,
+    sliding_window=1024,
+    local_global_ratio=0,   # hybrid uses explicit global set {first, mid, last}
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_conv=4,
+)

@@ -1,0 +1,26 @@
+"""llama-3.2-vision-11b [vlm]: cross-attn image layers every 5th layer
+[hf:meta-llama/Llama-3.2-11B-Vision].
+
+The ViT vision encoder + projector is the allowed modality-frontend stub:
+``input_specs`` feeds precomputed patch embeddings (B, 1601, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    arch_type="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    ffn_kind="swiglu",
+    rope_theta=500000.0,
+    tie_embeddings=False,
+    cross_attn_every=5,   # layers 4, 9, ... gain gated cross-attn to image tokens
+    vision_tokens=1601,
+    vision_dim=0,         # projector output width == d_model
+)

@@ -1,0 +1,47 @@
+"""The paper's own model family: Qwen2.5 {1.5B, 3B, 7B, 14B} (arXiv:2412.15115).
+
+Two variants are provided:
+
+* ``QWEN_FULL``  — the real architecture shapes, used for latency modeling
+  (Table 4 ladder) and dry-run analysis.
+* ``QWEN_SIM``   — proportionally scaled-down "sim-scale" models that are
+  actually *trained and run* inside HFTBench / StreetFighter on CPU.  The
+  widths keep the real family's ordering (bigger => more capacity), so the
+  paper's causal chain (model size x precision -> quality; bits -> latency)
+  is preserved while remaining executable in this container (DESIGN.md §7).
+"""
+from repro.configs.base import ModelConfig
+
+
+def _qwen(name, n_layers, d_model, n_heads, n_kv_heads, d_ff, vocab=151936):
+    return ModelConfig(
+        name=name, arch_type="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_kv_heads, head_dim=d_model // n_heads,
+        d_ff=d_ff, vocab=vocab, source="arXiv:2412.15115",
+        ffn_kind="swiglu", rope_theta=1000000.0, tie_embeddings=True,
+        attn_bias=True,
+    )
+
+
+QWEN_FULL = {
+    "qwen2.5-1.5b": _qwen("qwen2.5-1.5b", 28, 1536, 12, 2, 8960),
+    "qwen2.5-3b": _qwen("qwen2.5-3b", 36, 2048, 16, 2, 11008),
+    "qwen2.5-7b": _qwen("qwen2.5-7b", 28, 3584, 28, 4, 18944),
+    "qwen2.5-14b": _qwen("qwen2.5-14b", 48, 5120, 40, 8, 13824),
+}
+
+# sim-scale: ~1000x fewer params, same relative ordering and depth ratios.
+QWEN_SIM = {
+    "qwen-sim-1.5b": _qwen("qwen-sim-1.5b", 4, 48, 4, 2, 128, vocab=512),
+    "qwen-sim-3b": _qwen("qwen-sim-3b", 5, 64, 4, 2, 192, vocab=512),
+    "qwen-sim-7b": _qwen("qwen-sim-7b", 6, 96, 4, 2, 256, vocab=512),
+    "qwen-sim-14b": _qwen("qwen-sim-14b", 8, 128, 4, 2, 384, vocab=512),
+}
+
+#: Map a sim model to the full model whose latency it represents.
+SIM_TO_FULL = {
+    "qwen-sim-1.5b": "qwen2.5-1.5b",
+    "qwen-sim-3b": "qwen2.5-3b",
+    "qwen-sim-7b": "qwen2.5-7b",
+    "qwen-sim-14b": "qwen2.5-14b",
+}

@@ -1,0 +1,25 @@
+"""seamless-m4t-medium [audio]: encoder-decoder, multimodal [arXiv:2308.11596].
+
+The mel-spectrogram + conv feature extractor is the allowed modality-frontend
+stub: ``input_specs`` feeds precomputed frame embeddings (B, frames, 1024) to
+the transformer encoder; the 12-layer decoder cross-attends to encoder output.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    arch_type="audio",
+    n_layers=12,          # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,        # MHA
+    head_dim=64,
+    d_ff=4096,
+    vocab=256206,
+    source="arXiv:2308.11596",
+    ffn_kind="gelu",
+    tie_embeddings=True,
+    encdec=True,
+    n_enc_layers=12,
+    audio_frames=4096,
+)

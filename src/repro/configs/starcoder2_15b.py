@@ -1,0 +1,20 @@
+"""starcoder2-15b [dense]: GQA + RoPE + 4096 sliding window [arXiv:2402.19173]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab=49152,
+    source="arXiv:2402.19173",
+    ffn_kind="gelu",
+    attn_bias=True,
+    tie_embeddings=True,
+    sliding_window=4096,   # the real model's SWA => bounded cache, long_500k eligible
+    rope_theta=100000.0,
+)

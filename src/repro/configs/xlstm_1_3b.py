@@ -1,0 +1,18 @@
+"""xlstm-1.3b [ssm]: sLSTM + mLSTM blocks, 7:1 ratio [arXiv:2405.04517]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    arch_type="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,            # mLSTM heads
+    n_kv_heads=4,
+    head_dim=1024,        # d_inner(=2*d_model) / n_heads
+    d_ff=0,               # mLSTM blocks carry their own up/down projection
+    vocab=50304,
+    source="arXiv:2405.04517",
+    slstm_every=8,        # blocks 7, 15, ... are sLSTM => 7:1 mLSTM:sLSTM
+    mlstm_proj_factor=2.0,
+    tie_embeddings=True,
+)

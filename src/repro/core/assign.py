@@ -1,0 +1,128 @@
+"""Precision assignment (paper Eq. 7).
+
+Given per-layer calibration errors eps_l and a compression ratio gamma,
+assign FP4 to the gamma*L most quantization-tolerant linear layers and FP8
+to the rest:
+
+    S_gamma = argmin_{|S| = gamma L} sum_{l in S} eps_l
+    delta(l) = 4 if l in S_gamma else 8
+
+Also provides the translation from unrolled layer names ("L{g}.L{s}.rel")
+to the per-segment policy arrays that ride through scanned stacks
+("super/local_inner/rel" -> (G, R) bit arrays) — see transformer.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import segment_layout
+
+#: Layers never demoted below 8 bits: tiny matmuls with outsized quality
+#: impact (MoE router) and the output head.
+PINNED_PATTERNS = (r"\.router$", r"^lm_head$", r"\.xgate$")
+
+
+def is_pinned(name: str) -> bool:
+    return any(re.search(p, name) for p in PINNED_PATTERNS)
+
+
+def assign_precision(eps: Dict[str, float], gamma: float,
+                     pinned: Optional[Set[str]] = None) -> Dict[str, int]:
+    """delta(l) in {4, 8} per layer name.  gamma in [0, 1]."""
+    assert 0.0 <= gamma <= 1.0, gamma
+    names = sorted(eps)
+    eligible = [n for n in names if not is_pinned(n) and
+                (pinned is None or n not in pinned)]
+    k = int(round(gamma * len(names)))
+    k = min(k, len(eligible))
+    by_err = sorted(eligible, key=lambda n: eps[n])
+    s_gamma = set(by_err[:k])
+    return {n: (4 if n in s_gamma else 8) for n in names}
+
+
+def avg_bits(assignment: Dict[str, int]) -> float:
+    """Paper's "Bitwidth Avg" column."""
+    if not assignment:
+        return 16.0
+    return float(np.mean(list(assignment.values())))
+
+
+# ---------------------------------------------------------------------------
+# Unrolled name -> scanned policy-array slot
+# ---------------------------------------------------------------------------
+
+_NAME = re.compile(r"^L(?P<a>\d+)(?:\.L(?P<b>\d+))?\.(?P<rel>.+)$|"
+                   r"^Lx(?P<xg>\d+)\.(?P<xrel>.+)$")
+
+
+def name_to_slot(cfg: ModelConfig, name: str) -> Tuple[str, Tuple[int, ...]]:
+    """Map an unrolled calibration name to (policy_key, index)."""
+    m = _NAME.match(name)
+    if not m:
+        return name, ()              # un-prefixed (lm_head etc.): static key
+    if m.group("xg") is not None:    # VLM cross-KV precompute scan
+        return f"cross/{m.group('xrel')}", (int(m.group("xg")),)
+    a = int(m.group("a"))
+    b = m.group("b")
+    rel = m.group("rel")
+    t = cfg.arch_type
+
+    if t == "ssm":
+        if b is not None:
+            return f"super/mlstm_inner/{rel}", (a, int(b))
+        return f"super/{rel}", (a,)
+    if t == "vlm":
+        ce = cfg.cross_attn_every
+        G = cfg.n_layers // ce
+        if b is not None:
+            return f"groups/self_inner/{rel}", (a, int(b))
+        if a < G:                     # cross block inside group a
+            return f"groups/{rel}", (a,)
+        return f"tail/{rel}", (a - G * ce,)
+    if t == "hybrid":
+        for seg, idxs in segment_layout(cfg):
+            if a in idxs:
+                return f"{seg}/{rel}", (idxs.index(a),)
+        raise KeyError(name)
+    if t == "audio":
+        seg = "enc" if rel.startswith("enc") else "dec"
+        return f"{seg}/{rel}", (a,)
+    if cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        G = cfg.n_layers // sb
+        if b is not None:
+            return f"super/local_inner/{rel}", (a, int(b))
+        if a < G:
+            return f"super/{rel}", (a,)
+        return f"tail/{rel}", (a - G * sb,)
+    return f"layers/{rel}", (a,)
+
+
+def build_policy(cfg: ModelConfig, assignment: Dict[str, int],
+                 default_bits: int = 8) -> Dict[str, object]:
+    """Convert a per-name assignment into a scanned-forward policy dict.
+
+    Returns {policy_key: (…)-shaped int array} plus static int entries.
+    Unfilled slots default to ``default_bits``."""
+    slots: Dict[str, Dict[Tuple[int, ...], int]] = {}
+    static: Dict[str, int] = {}
+    for nm, bits in assignment.items():
+        key, idx = name_to_slot(cfg, nm)
+        if not idx:
+            static[key] = bits
+            continue
+        slots.setdefault(key, {})[idx] = bits
+
+    policy: Dict[str, object] = dict(static)
+    for key, entries in slots.items():
+        ndim = len(next(iter(entries)))
+        shape = tuple(max(i[d] for i in entries) + 1 for d in range(ndim))
+        arr = np.full(shape, default_bits, dtype=np.int32)
+        for idx, bits in entries.items():
+            arr[idx] = bits
+        policy[key] = arr
+    return policy

@@ -1,0 +1,53 @@
+"""Offline calibration (paper Sec. 4.2, Algorithm 1).
+
+Runs FP16 inference on a held-out LM calibration set, simulating each linear
+layer's FP4 execution on the same inputs (the rest of the network stays
+FP16), and records the relative quantization error
+
+    eps_l = ||A_l^fp16 - A_l^fp4||_2 / ||A_l^fp16||_2.
+
+The capture happens inside ``modules.quant_linear`` (ExecContext.collect),
+so it covers every linear in every architecture — attention projections,
+FFNs, MoE expert stacks, SSM projections, cross-attention — with zero
+per-arch code.  Wikitext-2 is license-gated offline; the calibration stream
+is a synthetic LM corpus with matched statistics (see data.pipeline).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.modules import ExecContext
+
+
+def calibrate(params, cfg: ModelConfig, batches: Iterable[Dict[str, jax.Array]],
+              ) -> Dict[str, float]:
+    """Return eps_l per linear-layer name (unrolled names: ``L{i}.<rel>``)."""
+    collect: Dict[str, List[jax.Array]] = {}
+    ctx = ExecContext(default_bits=16, collect=collect)
+    for batch in batches:
+        transformer.forward(params, cfg, batch, ctx, unroll=True)
+    return {k: float(jnp.mean(jnp.stack(v))) for k, v in collect.items()}
+
+
+def perplexity(params, cfg: ModelConfig, batches: Iterable[Dict[str, jax.Array]],
+               ctx: Optional[ExecContext] = None, unroll: bool = True) -> float:
+    """Token perplexity of (optionally quantized) model on an eval stream.
+
+    Used for the paper's Table-2 PPL column and as the FPX controller's
+    quality signal."""
+    ctx = ctx or ExecContext()
+    total_nll, total_tok = 0.0, 0
+    for batch in batches:
+        logits = transformer.forward(params, cfg, batch, ctx, unroll=unroll)
+        tokens = batch["tokens"]
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        total_nll += float(nll.sum())
+        total_tok += int(tgt.size)
+    return float(jnp.exp(total_nll / max(total_tok, 1)))

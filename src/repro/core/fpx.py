@@ -1,0 +1,120 @@
+"""FPX: the adaptive mixed-precision controller (paper Sec. 4).
+
+Joins the pieces: calibration (eps_l) -> precision assignment (S_gamma) ->
+latency model -> candidate grid over (model size x gamma).  Two selection
+modes, matching the paper's usage:
+
+* ``select_for_budget`` — "meet any specified latency target": pick the
+  candidate with the best predicted quality whose predicted action latency
+  fits the budget.
+* ``OnlineSelector`` — the adaptive loop for dynamic environments: an
+  epsilon-greedy bandit over the candidate grid driven by realized task
+  rewards (the paper reports the best-performing setting per task after a
+  gamma sweep; the bandit automates that sweep online).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import assign as assign_mod
+from repro.core import latency as lat_mod
+from repro.core.latency import Hardware, V5E
+
+GAMMA_GRID = tuple(round(0.1 * i, 1) for i in range(11))   # paper Sec. 5.1
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One point on the FPX grid: a model at a compression ratio gamma."""
+    model_name: str
+    cfg: ModelConfig                   # latency-model config (full scale)
+    gamma: float
+    assignment: Dict[str, int]        # per-layer delta(l) from Eq. 7
+    avg_bits: float
+    latency_s: float                  # predicted action latency
+    quality: Optional[float] = None   # e.g. -PPL or eval score (higher=better)
+
+    @property
+    def policy(self) -> Dict[str, int]:
+        return dict(self.assignment)
+
+
+def make_grid(models: Sequence[Tuple[str, ModelConfig, Dict[str, float]]],
+              *, gammas: Sequence[float] = GAMMA_GRID,
+              prompt_len: int = 512, gen_tokens: int = 16,
+              hw: Hardware = V5E) -> List[Candidate]:
+    """Build the (model x gamma) candidate grid.
+
+    ``models``: (name, latency_cfg, eps_l calibration dict) triples."""
+    grid = []
+    for name, cfg, eps in models:
+        for g in gammas:
+            a = assign_mod.assign_precision(eps, g)
+            bits = assign_mod.avg_bits(a)
+            t = lat_mod.decision_latency(cfg, prompt_len=prompt_len,
+                                         gen_tokens=gen_tokens,
+                                         w_bits=bits, hw=hw)
+            grid.append(Candidate(model_name=name, cfg=cfg, gamma=g,
+                                  assignment=a, avg_bits=bits, latency_s=t))
+    return grid
+
+
+def select_for_budget(grid: Sequence[Candidate], budget_s: float,
+                      quality: Callable[[Candidate], float]) -> Candidate:
+    """Best predicted quality under a hard latency budget.
+
+    Falls back to the fastest candidate when nothing fits (the paper's
+    "win fast" regime: a timely mediocre action beats a late good one)."""
+    feasible = [c for c in grid if c.latency_s <= budget_s]
+    if not feasible:
+        return min(grid, key=lambda c: c.latency_s)
+    return max(feasible, key=quality)
+
+
+def pareto_frontier(grid: Sequence[Candidate],
+                    quality: Callable[[Candidate], float]) -> List[Candidate]:
+    """Latency/quality Pareto set (Figure 1a)."""
+    pts = sorted(grid, key=lambda c: c.latency_s)
+    out, best_q = [], -math.inf
+    for c in pts:
+        q = quality(c)
+        if q > best_q:
+            out.append(c)
+            best_q = q
+    return out
+
+
+class OnlineSelector:
+    """Epsilon-greedy bandit over the candidate grid, driven by task reward.
+
+    The paper sweeps gamma offline and deploys the best setting per task;
+    this selector performs the same search online so an agent adapts its
+    (model size, gamma) to "real-time demands" (paper abstract)."""
+
+    def __init__(self, grid: Sequence[Candidate], *, epsilon: float = 0.15,
+                 seed: int = 0, prior_quality: Optional[Callable] = None):
+        self.grid = list(grid)
+        self.eps = epsilon
+        self.rng = random.Random(seed)
+        self.counts = [0] * len(self.grid)
+        self.means = [0.0] * len(self.grid)
+        if prior_quality is not None:
+            # warm-start with the latency-model + PPL prior
+            self.means = [prior_quality(c) for c in self.grid]
+
+    def choose(self) -> int:
+        if self.rng.random() < self.eps:
+            return self.rng.randrange(len(self.grid))
+        return max(range(len(self.grid)), key=lambda i: self.means[i])
+
+    def update(self, idx: int, reward: float) -> None:
+        self.counts[idx] += 1
+        n = self.counts[idx]
+        self.means[idx] += (reward - self.means[idx]) / n
+
+    def best(self) -> Candidate:
+        return self.grid[max(range(len(self.grid)), key=lambda i: self.means[i])]

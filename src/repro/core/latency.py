@@ -1,0 +1,197 @@
+"""Analytic TPU latency model (the reproduction's stand-in for wall-clock).
+
+The paper measures end-to-end action latency on RTX 5090s (Table 4).  This
+container is CPU-only with TPU v5e as the deployment target, so latency is
+*derived* from a per-layer roofline:
+
+    t_layer = max(flops / peak(bits),  bytes(bits) / hbm_bw) + overhead
+
+Weights at b bits move b/16 of the FP16 bytes — the first-order effect that
+makes FP8 ~2x and FP4 ~4x faster in the paper's memory-bound decode regime.
+8-bit (and in-kernel-dequantized 4-bit) matmuls run at the int8 MXU rate
+(2x bf16).  W4A16-int adds a VPU dequant term, reproducing the paper's
+observation that it loses to FP8 except at 14B (Table 4).
+
+The same model drives HFTBench/StreetFighter agents and the FPX controller.
+Per the paper (Sec. 4.1), the FP8->FP4 latency gain is uniform across linear
+layers, so mixed-precision latency interpolates linearly in gamma.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+# TPU v5e hardware constants (per chip)
+PEAK_BF16 = 197e12        # FLOP/s
+PEAK_INT8 = 394e12        # FLOP/s (MXU int8 = 2x bf16)
+HBM_BW = 819e9            # B/s
+ICI_BW = 50e9             # B/s per link
+VPU_DEQ = 5e11            # elem/s: VPU int4->bf16 dequant (W4A16 penalty)
+DEQ_CALL_OVERHEAD = 20e-6  # s per linear: separate dequant kernel dispatch
+LAYER_OVERHEAD = 4e-6     # s: per-block dispatch/fusion overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_bf16: float = PEAK_BF16
+    peak_int8: float = PEAK_INT8
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+    vpu_deq: float = VPU_DEQ
+    layer_overhead: float = LAYER_OVERHEAD
+    n_chips: int = 1
+
+
+V5E = Hardware()
+
+
+def _bytes_per_weight(w_bits: int) -> float:
+    return w_bits / 8.0
+
+
+def _peak(w_bits: int, a_bits: int, hw: Hardware) -> float:
+    if max(w_bits, a_bits) <= 8:
+        return hw.peak_int8
+    return hw.peak_bf16
+
+
+def linear_time(d_in: int, d_out: int, n_tokens: int, *, w_bits: int,
+                a_bits: Optional[int] = None, hw: Hardware = V5E,
+                dequant_to_16: bool = False) -> float:
+    """Roofline time for one (n_tokens, d_in) @ (d_in, d_out) matmul."""
+    a_bits = a_bits if a_bits is not None else w_bits
+    flops = 2.0 * n_tokens * d_in * d_out
+    w_bytes = d_in * d_out * _bytes_per_weight(w_bits)
+    a_bytes = n_tokens * (d_in + d_out) * (a_bits / 8.0)
+    peak = hw.peak_bf16 if dequant_to_16 else _peak(w_bits, a_bits, hw)
+    t_compute = flops / (peak * hw.n_chips)
+    t_mem = (w_bytes + a_bytes) / (hw.hbm_bw * hw.n_chips)
+    t = max(t_compute, t_mem)
+    if dequant_to_16:
+        # W4A16-int: a separate dequant pass per linear (paper Table 4's
+        # "dequantization overhead").  Dominated by the fixed dispatch cost,
+        # which is why the penalty hurts small models relatively more.
+        t += DEQ_CALL_OVERHEAD + (d_in * d_out) / (hw.vpu_deq * hw.n_chips) * 0.01
+    return t
+
+
+def _per_layer_linears(cfg: ModelConfig):
+    """(d_in, d_out, mult) triples for one block of each segment kind.
+
+    mult scales token count (MoE expert FFNs process top_k x tokens)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    q = cfg.n_heads * hd
+    kv = cfg.n_kv_heads * hd
+    attn = [(d, q, 1.0), (d, kv, 1.0), (d, kv, 1.0), (q, d, 1.0)]
+    if cfg.arch_type == "ssm":
+        di = int(d * cfg.mlstm_proj_factor)
+        return attn_free_xlstm(cfg, d, di)
+    if cfg.n_experts:
+        ff = [(d, cfg.n_experts, 1.0)]           # router
+        n_ff = 3 if cfg.ffn_kind != "gelu" else 2
+        ff += [(d, cfg.d_ff, float(cfg.top_k))] * (n_ff - 1)
+        ff += [(cfg.d_ff, d, float(cfg.top_k))]
+    else:
+        n_ff = 3 if cfg.ffn_kind != "gelu" else 2
+        ff = [(d, cfg.d_ff, 1.0)] * (n_ff - 1) + [(cfg.d_ff, d, 1.0)]
+    out = attn + ff
+    if cfg.arch_type == "hybrid":
+        di = cfg.d_inner
+        dt_rank = max(8, d // 16)
+        out += [(d, 2 * di, 1.0), (di, dt_rank + 2 * cfg.ssm_state, 1.0),
+                (dt_rank, di, 1.0), (di, d, 1.0)]
+    return out
+
+
+def attn_free_xlstm(cfg: ModelConfig, d: int, di: int):
+    return [(d, 2 * di, 1.0), (di, di, 1.0), (di, di, 1.0), (di, di, 1.0),
+            (di, 2 * cfg.n_heads, 1.0), (di, d, 1.0)]
+
+
+def step_latency(cfg: ModelConfig, *, n_tokens: int, context: int = 0,
+                 w_bits: float = 16, a_bits: Optional[int] = None,
+                 hw: Hardware = V5E, dequant_to_16: bool = False) -> float:
+    """One forward step: ``n_tokens`` new tokens against ``context`` cache.
+
+    ``w_bits`` may be fractional (mixed precision): time interpolates
+    linearly between the bracketing integer widths — per the paper, the
+    FP8/FP4 latency delta is uniform across layers, so gamma-mixing is
+    exactly linear interpolation."""
+    if w_bits not in (4, 8, 16):
+        lo, hi = (4, 8) if w_bits < 8 else (8, 16)
+        frac = (w_bits - lo) / (hi - lo)
+        t_lo = step_latency(cfg, n_tokens=n_tokens, context=context,
+                            w_bits=lo, a_bits=a_bits, hw=hw)
+        t_hi = step_latency(cfg, n_tokens=n_tokens, context=context,
+                            w_bits=hi, a_bits=a_bits, hw=hw)
+        return frac * t_hi + (1 - frac) * t_lo
+
+    w_bits = int(w_bits)
+    total = 0.0
+    linears = _per_layer_linears(cfg)
+    for (d_in, d_out, mult) in linears:
+        total += cfg.n_layers * linear_time(
+            d_in, d_out, max(1, int(n_tokens * mult)), w_bits=w_bits,
+            a_bits=a_bits, hw=hw, dequant_to_16=dequant_to_16)
+    # attention over the KV cache (always 16-bit mechanics, per the paper)
+    if cfg.arch_type != "ssm" and context:
+        kv_bytes = 2.0 * context * cfg.n_kv_heads * cfg.head_dim * 2.0
+        attn_flops = 4.0 * n_tokens * context * cfg.n_heads * cfg.head_dim
+        window = cfg.sliding_window
+        n_local = 0
+        if window and cfg.local_global_ratio:
+            sb = cfg.local_global_ratio + 1
+            n_local = cfg.n_layers - cfg.n_layers // sb
+        elif window:
+            n_local = cfg.n_layers
+        n_global = cfg.n_layers - n_local
+        for n_l, c_eff in ((n_local, min(context, window or context)),
+                           (n_global, context)):
+            if not n_l:
+                continue
+            kb = kv_bytes * (c_eff / context)
+            fl = attn_flops * (c_eff / context)
+            total += n_l * max(fl / (hw.peak_bf16 * hw.n_chips),
+                               kb * n_tokens / (hw.hbm_bw * hw.n_chips))
+    # embedding + head
+    total += linear_time(cfg.d_model, cfg.vocab, n_tokens,
+                         w_bits=max(8, w_bits), hw=hw)
+    total += cfg.n_layers * hw.layer_overhead
+    return total
+
+
+def decision_latency(cfg: ModelConfig, *, prompt_len: int = 512,
+                     gen_tokens: int = 16, w_bits: float = 16,
+                     hw: Hardware = V5E, dequant_to_16: bool = False) -> float:
+    """End-to-end action latency: prefill the observation prompt, then
+    autoregressively emit the action tokens.  This is what the paper's
+    Table 4 per-action milliseconds measure."""
+    t = step_latency(cfg, n_tokens=prompt_len, w_bits=w_bits, hw=hw,
+                     dequant_to_16=dequant_to_16)
+    for i in range(gen_tokens):
+        t += step_latency(cfg, n_tokens=1, context=prompt_len + i,
+                          w_bits=w_bits, hw=hw, dequant_to_16=dequant_to_16)
+    return t
+
+
+def gamma_to_avg_bits(gamma: float, base_bits: int = 8) -> float:
+    """Paper's "Bitwidth Avg": gamma of the layers at 4 bits, rest at 8."""
+    return 4.0 * gamma + base_bits * (1.0 - gamma)
+
+
+def quant_ladder(cfg: ModelConfig, *, prompt_len: int = 512,
+                 gen_tokens: int = 16, hw: Hardware = V5E) -> Dict[str, float]:
+    """The paper's Table-4 scheme ladder, in seconds."""
+    return {
+        "FP16": decision_latency(cfg, prompt_len=prompt_len,
+                                 gen_tokens=gen_tokens, w_bits=16, hw=hw),
+        "FP8": decision_latency(cfg, prompt_len=prompt_len,
+                                gen_tokens=gen_tokens, w_bits=8, hw=hw),
+        "W4A16(int)": decision_latency(cfg, prompt_len=prompt_len,
+                                       gen_tokens=gen_tokens, w_bits=4,
+                                       hw=hw, dequant_to_16=True),
+        "FP4": decision_latency(cfg, prompt_len=prompt_len,
+                                gen_tokens=gen_tokens, w_bits=4, hw=hw),
+    }

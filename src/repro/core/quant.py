@@ -1,0 +1,203 @@
+"""Floating-point quantization primitives (paper Eq. 1-2).
+
+Implements the paper's FP quantization exactly:
+
+    Q(X) = round(X / scale_X),   scale_X = max|X| / range_b   if max|X| > range_b
+                                           1                   otherwise
+
+with range_b = 240 for FP8 (E4M3, clipped per the paper) and 6 for FP4
+(E2M1). ``round`` here means round-to-nearest representable value of the
+target FP format, which is what the hardware cast performs.
+
+Two execution styles are provided:
+
+* ``fake_quant`` — quantize-dequantize in one step.  Used for calibration
+  (Algorithm 1), for CPU-side evaluation of quantized models, and inside
+  scanned layer stacks where the bitwidth is a traced per-layer value.
+* ``quantize``/``dequantize`` + ``QTensor`` — materialized low-bit storage
+  (fp8 as ``float8_e4m3fn``; fp4 as packed uint8 codes, two per byte) used by
+  the serving engine and the Pallas kernels, where the HBM byte footprint is
+  the point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Format definitions
+# ---------------------------------------------------------------------------
+
+#: Paper Sec. 2.1: dynamic range used for rescaling.
+FP8_RANGE = 240.0
+FP4_RANGE = 6.0
+
+#: E2M1 representable magnitudes (sign handled separately).
+FP4_POS_GRID = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32)
+#: Full signed grid, index = 4-bit code (sign bit + 3 magnitude bits).
+#: code layout: code & 0x7 indexes magnitude, code & 0x8 is the sign bit.
+FP4_GRID = np.concatenate([FP4_POS_GRID, -FP4_POS_GRID]).astype(np.float32)
+#: Midpoints between successive magnitudes, for round-to-nearest(-even-ish).
+_FP4_MIDPOINTS = (FP4_POS_GRID[1:] + FP4_POS_GRID[:-1]) / 2.0
+
+RANGES = {4: FP4_RANGE, 8: FP8_RANGE, 16: None}
+
+
+def _compute_scale(x: jax.Array, range_b: float, axis=None) -> jax.Array:
+    """Absmax scale: max|X| / range_b (guarding all-zero tensors).
+
+    NOTE (DESIGN.md §2): paper Eq. 1 as written only rescales when
+    max|X| > range_b, which would leave real LLM weights (std ~1e-2) on the
+    coarse end of the E2M1 grid and destroy the model at any gamma —
+    contradicting the paper's own working results.  Hardware FP4/FP8 kernels
+    (and SVDQuant, which the paper builds on) use bidirectional absmax
+    scaling; we follow the hardware semantics."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = amax.astype(jnp.float32)
+    scale = jnp.where(amax > 0.0, amax / range_b, 1.0)
+    return scale
+
+
+def round_to_fp4_grid(x: jax.Array) -> jax.Array:
+    """Round values (already scaled into [-6, 6]) to the E2M1 grid."""
+    sign = jnp.sign(x)
+    mag = jnp.clip(jnp.abs(x), 0.0, FP4_RANGE)
+    # bucketize against midpoints -> index into FP4_POS_GRID
+    idx = jnp.searchsorted(jnp.asarray(_FP4_MIDPOINTS), mag, side="right")
+    return sign * jnp.asarray(FP4_POS_GRID)[idx]
+
+
+def round_to_fp8_grid(x: jax.Array) -> jax.Array:
+    """Round values to E4M3 via hardware cast semantics, clipped to ±240."""
+    x = jnp.clip(x, -FP8_RANGE, FP8_RANGE)
+    return x.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def fake_quant(x: jax.Array, bits: int, axis=None) -> jax.Array:
+    """Quantize-dequantize ``x`` at ``bits`` (static python int) precision."""
+    if bits >= 16:
+        return x
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    scale = _compute_scale(xf, RANGES[bits], axis=axis)
+    xs = xf / scale
+    q = round_to_fp4_grid(xs) if bits == 4 else round_to_fp8_grid(xs)
+    return (q * scale).astype(orig_dtype)
+
+
+def fake_quant_dynamic(x: jax.Array, bits: jax.Array, axis=None) -> jax.Array:
+    """``fake_quant`` where ``bits`` is a traced scalar in {4, 8, 16}.
+
+    Used inside ``lax.scan`` over layer stacks, where the FPX assignment
+    differs per layer but the code path must be trace-static.  Both grids are
+    evaluated (elementwise, cheap vs. the matmul they feed) and selected.
+    """
+    q4 = fake_quant(x, 4, axis=axis)
+    q8 = fake_quant(x, 8, axis=axis)
+    bits = jnp.asarray(bits)
+    return jnp.where(bits <= 4, q4, jnp.where(bits <= 8, q8, x))
+
+
+# ---------------------------------------------------------------------------
+# Materialized low-bit storage
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: low-bit payload + fp32 scale + static metadata."""
+
+    data: jax.Array          # fp8: float8_e4m3fn, same shape; fp4: packed uint8
+    scale: jax.Array         # fp32 scalar or per-axis
+    bits: int                # 4 or 8 (static)
+    shape: tuple             # logical (unpacked) shape
+    axis: Optional[int]      # per-channel axis, or None for per-tensor
+
+    def tree_flatten(self):
+        return (self.data, self.scale), (self.bits, self.shape, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, scale = children
+        bits, shape, axis = aux
+        return cls(data, scale, bits, shape, axis)
+
+    @property
+    def nbytes_payload(self) -> int:
+        n = int(np.prod(self.shape))
+        return n if self.bits == 8 else (n + 1) // 2
+
+
+def fp4_encode(x_scaled: jax.Array) -> jax.Array:
+    """Map scaled values to 4-bit codes (sign bit | magnitude index)."""
+    sign = (x_scaled < 0).astype(jnp.uint8)
+    mag = jnp.clip(jnp.abs(x_scaled), 0.0, FP4_RANGE)
+    idx = jnp.searchsorted(jnp.asarray(_FP4_MIDPOINTS), mag, side="right")
+    return (sign << 3) | idx.astype(jnp.uint8)
+
+
+def fp4_decode(codes: jax.Array) -> jax.Array:
+    """Map 4-bit codes back to E2M1 grid values (fp32)."""
+    return jnp.asarray(FP4_GRID)[codes.astype(jnp.int32)]
+
+
+def fp4_pack(codes: jax.Array) -> jax.Array:
+    """Pack pairs of 4-bit codes along the last axis into uint8."""
+    assert codes.shape[-1] % 2 == 0, "last dim must be even to pack"
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def fp4_unpack(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`fp4_pack`."""
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def quantize(x: jax.Array, bits: int, axis: Optional[int] = None) -> QTensor:
+    """Materialize ``x`` at ``bits`` precision (paper Eq. 1)."""
+    assert bits in (4, 8), bits
+    xf = x.astype(jnp.float32)
+    reduce_axes = None if axis is None else tuple(
+        a for a in range(x.ndim) if a != (axis % x.ndim)
+    )
+    scale = _compute_scale(xf, RANGES[bits], axis=reduce_axes)
+    if axis is None:
+        scale = scale.reshape(())
+    xs = xf / scale
+    if bits == 8:
+        data = jnp.clip(xs, -FP8_RANGE, FP8_RANGE).astype(jnp.float8_e4m3fn)
+    else:
+        data = fp4_pack(fp4_encode(xs))
+    return QTensor(data=data, scale=scale, bits=bits, shape=tuple(x.shape), axis=axis)
+
+
+def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    if q.bits == 8:
+        vals = q.data.astype(jnp.float32)
+    else:
+        vals = fp4_decode(fp4_unpack(q.data)).reshape(q.shape)
+    return (vals * q.scale).astype(dtype)
+
+
+def quant_matmul_ref(x: jax.Array, w: jax.Array, x_bits: int, w_bits: int) -> jax.Array:
+    """Paper Eq. 2: XW ~= scale_X * scale_W * Q(X) Q(W)   (pure-jnp oracle)."""
+    if x_bits >= 16 and w_bits >= 16:
+        return x @ w
+    xq = fake_quant(x, x_bits) if x_bits < 16 else x
+    wq = fake_quant(w, w_bits) if w_bits < 16 else w
+    return (xq.astype(jnp.float32) @ wq.astype(jnp.float32)).astype(x.dtype)
+
+
+def relative_error(a_ref: jax.Array, a_q: jax.Array) -> jax.Array:
+    """Paper Eq. 6: ||A_fp16 - A_fp4||_2 / ||A_fp16||_2."""
+    num = jnp.linalg.norm((a_ref - a_q).astype(jnp.float32).reshape(-1))
+    den = jnp.linalg.norm(a_ref.astype(jnp.float32).reshape(-1))
+    return num / jnp.maximum(den, 1e-12)

@@ -1,0 +1,94 @@
+"""Synthetic LM data pipeline.
+
+Wikitext-2 (the paper's calibration set) and real pretraining corpora are
+license/network-gated in this container; this module generates a *learnable*
+synthetic language with matched roles:
+
+* a random order-2 Markov process over the vocabulary with sparse transition
+  structure and power-law (Zipf) unigram marginals — enough structure that
+  a bigger/longer-trained model genuinely reaches lower perplexity (the
+  property the paper's model ladder depends on);
+* deterministic given a seed, so calibration/eval splits are reproducible.
+
+Batches are dicts matching the model zoo's input contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SynthLM:
+    vocab: int
+    branch: int = 8            # out-degree of each (a, b) context
+    seed: int = 0
+    zipf_a: float = 1.2
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v, b = self.vocab, self.branch
+        # per-context successor sets + logits (contexts hashed to save memory)
+        self.n_ctx = min(v * 8, 1 << 16)
+        self.succ = rng.integers(0, v, size=(self.n_ctx, b), dtype=np.int32)
+        probs = rng.dirichlet(np.full(b, 0.5), size=self.n_ctx)
+        self.cum = np.cumsum(probs, axis=1).astype(np.float32)
+        # Zipf restarts
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        pz = ranks ** -self.zipf_a
+        self.p_restart = (pz / pz.sum()).astype(np.float64)
+
+    def _ctx_id(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        return ((a.astype(np.int64) * 1000003 + b) % self.n_ctx).astype(np.int64)
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int,
+               p_noise: float = 0.05) -> np.ndarray:
+        out = np.empty((batch, seq), dtype=np.int32)
+        out[:, 0] = rng.choice(self.vocab, size=batch, p=self.p_restart)
+        out[:, 1] = rng.choice(self.vocab, size=batch, p=self.p_restart)
+        u = rng.random(size=(batch, seq))
+        noise = rng.random(size=(batch, seq)) < p_noise
+        rand_tok = rng.choice(self.vocab, size=(batch, seq), p=self.p_restart)
+        for t in range(2, seq):
+            cid = self._ctx_id(out[:, t - 2], out[:, t - 1])
+            k = (self.cum[cid] < u[:, t, None]).sum(axis=1).clip(0, self.branch - 1)
+            nxt = self.succ[cid, k]
+            out[:, t] = np.where(noise[:, t], rand_tok[:, t], nxt)
+        return out
+
+
+def lm_stream(cfg: ModelConfig, *, batch: int, seq: int, seed: int = 0,
+              extra_inputs: bool = True) -> Iterator[Dict[str, np.ndarray]]:
+    """Infinite iterator of training batches for any assigned architecture."""
+    lang = SynthLM(vocab=cfg.vocab, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    while True:
+        b: Dict[str, np.ndarray] = {"tokens": lang.sample(rng, batch, seq)}
+        if extra_inputs and cfg.arch_type == "vlm":
+            b["vision"] = rng.standard_normal(
+                (batch, cfg.vision_tokens, cfg.vision_dim or cfg.d_model),
+                dtype=np.float32) * 0.1
+        if extra_inputs and cfg.arch_type == "audio":
+            b["audio"] = rng.standard_normal(
+                (batch, cfg.audio_frames, cfg.d_model),
+                dtype=np.float32) * 0.1
+        yield b
+
+
+def take(stream: Iterator, n: int):
+    return [next(stream) for _ in range(n)]
+
+
+def calibration_batches(cfg: ModelConfig, *, n: int = 4, batch: int = 2,
+                        seq: int = 128, seed: int = 1234):
+    """Held-out calibration stream (paper Sec. 4.2's Wikitext-2 role)."""
+    return take(lm_stream(cfg, batch=batch, seq=seq, seed=seed), n)
+
+
+def eval_batches(cfg: ModelConfig, *, n: int = 4, batch: int = 2,
+                 seq: int = 128, seed: int = 987):
+    return take(lm_stream(cfg, batch=batch, seq=seq, seed=seed), n)

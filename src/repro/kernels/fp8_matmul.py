@@ -1,0 +1,71 @@
+"""FP8 (E4M3) matmul Pallas kernel — the paper's FP8 inference path on TPU.
+
+TPU adaptation (DESIGN.md §2): the RTX-5090 FP8 tensor-core GEMM maps to an
+MXU GEMM over e4m3-quantized operands with fp32 accumulation and a scalar
+(per-tensor) scale product applied at the epilogue.  BlockSpecs tile M/N/K
+into 128-aligned VMEM blocks; the K grid axis is innermost and accumulates
+into a VMEM scratch buffer so each output tile is written exactly once.
+
+Validated CPU-side with ``interpret=True`` against ``ref.fp8_matmul_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 128
+
+
+def _fp8_matmul_kernel(sx_ref, sw_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                       n_k: int):
+    """Grid (M/BM, N/BN, K/BK); K is the innermost (sequential) axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU matmul on the quantized payloads, fp32 accumulation
+    xb = x_ref[...].astype(jnp.float32)
+    wb = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(xb, wb, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        scale = sx_ref[0] * sw_ref[0]
+        o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fp8_matmul(x_q: jax.Array, w_q: jax.Array, sx: jax.Array, sw: jax.Array,
+               *, interpret: bool = True) -> jax.Array:
+    """x_q: (M, K) float8_e4m3fn; w_q: (K, N) float8_e4m3fn; scalar scales.
+
+    Returns (M, N) fp32.  M, N, K must be multiples of the block sizes
+    (ops.quant_matmul pads arbitrary shapes)."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    assert M % BM == 0 and N % BN == 0 and K % BK == 0, (M, N, K)
+    n_k = K // BK
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M // BM, N // BN, n_k),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k, *_: (i, k)),
+            pl.BlockSpec((BK, BN), lambda i, j, k, *_: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fp8_matmul_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(sx.reshape(1), sw.reshape(1), x_q, w_q)

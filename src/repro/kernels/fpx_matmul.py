@@ -1,0 +1,99 @@
+"""FPX FP4 matmul Pallas kernel — the paper's FP4 path, TPU-native.
+
+The Blackwell FP4 tensor-core GEMM has no direct MXU analogue; the TPU
+translation (DESIGN.md §2) keeps the *insight* — weights live in HBM at
+4 bits, halving the dominant byte traffic of memory-bound decode vs FP8 —
+and performs the E2M1 dequantization inside VMEM:
+
+  HBM:  W packed as uint8, two E2M1 codes per byte along N  (K, N/2)
+  VMEM: per (BK, BN/2) tile -> unpack nibbles -> 16-entry E2M1 LUT ->
+        fp32 tile -> MXU matmul against the activation tile
+  epilogue: multiply by scale_X * scale_W (paper Eq. 2)
+
+Activations arrive FP8-quantized (e4m3 payload + scalar scale), matching the
+paper's W4A4/W4A8 kernel family; pass a bf16/f32 ``x_q`` with ``sx = 1`` for
+a W4A16 variant.
+
+The LUT is realized as a vectorized select over the magnitude bits
+(values m * 2^e), which lowers to VPU ops on TPU — no gather needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BM, BN, BK = 128, 128, 128
+
+
+def _decode_e2m1(codes: jax.Array) -> jax.Array:
+    """4-bit code (sign|m2|m1|m0) -> E2M1 value, via arithmetic select.
+
+    grid: [0, .5, 1, 1.5, 2, 3, 4, 6] for magnitude index 0..7."""
+    #   idx:  0    1    2    3    4    5    6    7
+    #   val:  0.0  0.5  1.0  1.5  2.0  3.0  4.0  6.0
+    # for m >= 2:  val = 2^(m//2 - 1) * (1.5 if m odd else 1.0)
+    mag = (codes & 0x7).astype(jnp.int32)
+    sign = jnp.where((codes & 0x8) != 0, -1.0, 1.0)
+    val = jnp.where(mag == 0, 0.0,
+                    jnp.where(mag == 1, 0.5,
+                              jnp.exp2((mag // 2 - 1).astype(jnp.float32)) *
+                              jnp.where(mag % 2 == 1, 1.5, 1.0)))
+    return sign * val
+
+
+def _fpx_matmul_kernel(sx_ref, sw_ref, x_ref, wp_ref, o_ref, acc_ref, *,
+                       n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # unpack the (BK, BN/2) byte tile into a (BK, BN) fp32 weight tile
+    packed = wp_ref[...]
+    lo = packed & 0x0F
+    hi = (packed >> 4) & 0x0F
+    w_tile = jnp.stack([_decode_e2m1(lo), _decode_e2m1(hi)], axis=-1)
+    w_tile = w_tile.reshape(packed.shape[0], packed.shape[1] * 2)
+
+    xb = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(xb, w_tile, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * (sx_ref[0] * sw_ref[0])).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fpx_matmul(x_q: jax.Array, w_packed: jax.Array, sx: jax.Array,
+               sw: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """x_q: (M, K) e4m3/bf16/f32; w_packed: (K, N/2) uint8; scalar scales.
+
+    Returns (M, N) fp32."""
+    M, K = x_q.shape
+    K2, N_half = w_packed.shape
+    N = N_half * 2
+    assert K == K2
+    assert M % BM == 0 and N % BN == 0 and K % BK == 0, (M, N, K)
+    n_k = K // BK
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M // BM, N // BN, n_k),
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, k, *_: (i, k)),
+            pl.BlockSpec((BK, BN // 2), lambda i, j, k, *_: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, k, *_: (i, j)),
+        scratch_shapes=[pltpu.VMEM((BM, BN), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_fpx_matmul_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(sx.reshape(1), sw.reshape(1), x_q, w_packed)

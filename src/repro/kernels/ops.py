@@ -1,0 +1,71 @@
+"""Jit'd wrappers dispatching quantized matmuls to the Pallas kernels.
+
+``quant_matmul(x, w, x_bits, w_bits)`` is what ``modules.quant_linear`` calls
+when ``ExecContext.use_pallas`` is set: it quantizes per paper Eq. 1, pads to
+the kernels' 128-aligned tiles, runs the (interpret-mode on CPU) kernel, and
+unpads.  Numerics match ``ref.quant_matmul_ref`` / ``core.quant`` exactly —
+the property tests sweep shapes and dtypes over this equivalence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import fp8_matmul as _fp8
+from repro.kernels import fpx_matmul as _fpx
+
+
+def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def quant_matmul(x: jax.Array, w: jax.Array, *, x_bits: int = 8,
+                 w_bits: int = 8, interpret: bool = True) -> jax.Array:
+    """(…, K) @ (K, N) with FPX quantization of both operands.
+
+    x may have leading batch dims; they are flattened into M."""
+    orig_dtype = x.dtype
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+
+    if w_bits >= 16 and x_bits >= 16:
+        return (x2 @ w).reshape(*lead, N).astype(orig_dtype)
+
+    # quantize activations.  FP4 activations are rounded on the E2M1 grid
+    # but carried as an e4m3 payload (E2M1 values are exactly representable
+    # in e4m3, and the MXU consumes 8-bit operands) — numerically identical
+    # to the paper's A4, TPU-native in layout.
+    if x_bits == 4:
+        sx = quant._compute_scale(x2.astype(jnp.float32), quant.FP4_RANGE)
+        x_pay = quant.round_to_fp4_grid(
+            x2.astype(jnp.float32) / sx).astype(jnp.float8_e4m3fn)
+    elif x_bits < 16:
+        xq = quant.quantize(x2, 8)
+        x_pay, sx = xq.data, xq.scale
+    else:
+        x_pay, sx = x2.astype(jnp.float32), jnp.float32(1.0)
+
+    BM, BN, BK = _fp8.BM, _fp8.BN, _fp8.BK
+    x_pad = _pad_to(x_pay, BM, BK)
+
+    if w_bits == 4:
+        wq = quant.quantize(w, 4)            # packed (K, N/2) uint8
+        w_pad = _pad_to(wq.data, BK, BN // 2)
+        out = _fpx.fpx_matmul(x_pad, w_pad, jnp.float32(sx),
+                              jnp.float32(wq.scale), interpret=interpret)
+    else:
+        wq = quant.quantize(w, 8)
+        w_pad = _pad_to(wq.data, BK, BN)
+        out = _fp8.fp8_matmul(x_pad, w_pad, jnp.float32(sx),
+                              jnp.float32(wq.scale), interpret=interpret)
+
+    out = out[:M, :N]
+    return out.reshape(*lead, N).astype(orig_dtype)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def fp8_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Paper Eq. 2 at (8, 8): scale_X scale_W Q(X) Q(W), fp32 accumulation."""
+    xq = quant.quantize(x, 8)
+    wq = quant.quantize(w, 8)
+    return (xq.data.astype(jnp.float32) @ wq.data.astype(jnp.float32)) \
+        * xq.scale * wq.scale
+
+
+def fp4_matmul_ref(x: jax.Array, w: jax.Array, x_bits: int = 8) -> jax.Array:
+    """FP4 weights (E2M1 grid), FP8 (or fp32) activations."""
+    wq = quant.quantize(w, 4)
+    w_deq = quant.dequantize(wq)
+    if x_bits >= 16:
+        xv, sx = x.astype(jnp.float32), 1.0
+    else:
+        xq = quant.quantize(x, 8)
+        xv, sx = xq.data.astype(jnp.float32), xq.scale
+    return (xv @ w_deq) * sx
+
+
+def quant_matmul_ref(x: jax.Array, w: jax.Array, x_bits: int, w_bits: int) -> jax.Array:
+    return quant.quant_matmul_ref(x, w, x_bits, w_bits)

@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is pure data parallelism across pods (gradient all-reduce crosses the
+pod axis; all other collectives stay intra-pod).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (smoke tests run on 1 CPU device; only dryrun.py
+forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh: jax.sharding.Mesh):
+    """Mesh axes over which the batch dimension shards."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

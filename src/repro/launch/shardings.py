@@ -1,0 +1,212 @@
+"""Sharding policy: FSDP x TP rules for params, activations, and caches.
+
+Baseline (paper-faithful "model parallelism" analogue, adapted to TPU):
+
+* weights: last dim on "model" (tensor parallel), second-to-last on "data"
+  (FSDP/ZeRO-3 style) — dims that don't divide the axis stay unsharded;
+* MoE expert stacks: leading expert dim on "model" (expert parallel), d_in
+  on "data";
+* batch: ("pod","data") for train / large-batch decode;
+* long_500k (batch=1): KV-cache *sequence* axis shards on "data"
+  (sequence-parallel decode attention) and the token is replicated.
+
+``param_shardings`` walks any pytree-of-arrays (or ShapeDtypeStructs) and
+returns a matching tree of NamedShardings — used by dryrun, train, serve.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0 and dim >= n
+
+
+#: Row-parallel linears (output projections): contraction dim carries the
+#: "model" shard so the preceding col-parallel activation is consumed
+#: locally (partial sums + one all-reduce), Megatron-style.
+_ROW_PARALLEL = ("['o']", "['down']", "['out_proj']", "['ffn_down']",
+                 "['dt_proj']")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               policy: str = "baseline") -> P:
+    """Spec for one parameter under a named sharding policy.
+
+    baseline  — naive FSDP x TP: every matrix (…, d_in, d_out) ->
+                P(…, "data", "model").  The paper-faithful starting point;
+                §Perf measures its collective pathology.
+    megatron  — role-aware TP: col-parallel in-projections, row-parallel
+                out-projections, vocab-sharded embedding/head; "data" axis
+                used for ZeRO-style storage sharding of the non-TP dim.
+    fsdp      — no tensor parallelism: weights sharded over both axes for
+                storage only; batch is sharded over ("data","model").
+    """
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    spec = [None] * nd
+    is_moe = ".moe." in path or "['moe']" in path
+    is_embed = "['embed']" in path or "['emb']" in path
+
+    if policy == "fsdp":
+        # storage-only sharding: biggest dims over both axes
+        if _fits(shape[nd - 1], mesh, "model"):
+            spec[nd - 1] = "model"
+        if _fits(shape[nd - 2], mesh, "data"):
+            spec[nd - 2] = "data"
+        return P(*spec)
+
+    if is_moe and nd >= 3 and "router" not in path:
+        # expert-parallel: experts on "model"
+        e_dim = nd - 3
+        if _fits(shape[e_dim], mesh, "model"):
+            spec[e_dim] = "model"
+        if policy == "megatron":
+            if _fits(shape[nd - 1], mesh, "data"):
+                spec[nd - 1] = "data"
+        elif _fits(shape[nd - 2], mesh, "data"):
+            spec[nd - 2] = "data"
+        return P(*spec)
+
+    if policy == "megatron":
+        if is_embed:
+            # vocab-sharded embedding, d_model UNSHARDED: sharding d on a
+            # batch axis makes GSPMD replicate the batch instead (measured
+            # in §Perf iteration 1) — the d axis must stay free.
+            if _fits(shape[nd - 2], mesh, "model"):
+                spec[nd - 2] = "model"
+            return P(*spec)
+        if "lm_head" in path:
+            if _fits(shape[nd - 1], mesh, "model"):
+                spec[nd - 1] = "model"
+            return P(*spec)
+        row = any(tag in path for tag in _ROW_PARALLEL)
+        tp_dim = nd - 2 if row else nd - 1
+        st_dim = nd - 1 if row else nd - 2
+        if _fits(shape[tp_dim], mesh, "model"):
+            spec[tp_dim] = "model"
+        if _fits(shape[st_dim], mesh, "data"):
+            spec[st_dim] = "data"
+        return P(*spec)
+
+    # baseline: TP last, FSDP -2
+    if _fits(shape[nd - 1], mesh, "model"):
+        spec[nd - 1] = "model"
+    if _fits(shape[nd - 2], mesh, "data"):
+        spec[nd - 2] = "data"
+    return P(*spec)
+
+
+def _tree_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def param_shardings(tree: Any, mesh: Mesh, policy: str = "baseline") -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape) if hasattr(leaf, "shape") else ()
+        out.append(NamedSharding(mesh, param_spec(name, shape, mesh, policy)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, global_batch: int, policy: str = "baseline") -> P:
+    names = ("pod", "data", "model") if policy == "fsdp" else ("pod", "data")
+    axes = [a for a in names if a in mesh.axis_names]
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if global_batch % n == 0 and global_batch >= n:
+        return P(tuple(axes))
+    if global_batch % _axis_size(mesh, "data") == 0 and \
+            global_batch >= _axis_size(mesh, "data"):
+        return P("data")
+    return P()          # batch too small to shard (long_500k): replicate
+
+
+def token_sharding(mesh: Mesh, global_batch: int,
+                   policy: str = "baseline") -> NamedSharding:
+    return NamedSharding(mesh, P(*batch_spec(mesh, global_batch, policy), None))
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh, *, global_batch: int,
+                    seq_shard: bool) -> Any:
+    """KV caches: (..., B, S, kv, hd) — B on batch axes when divisible;
+    for batch=1 long-context decode, shard S on "data" instead (sequence
+    parallelism) and kv-heads on "model" when divisible."""
+    bspec = batch_spec(mesh, global_batch)
+    b_axes = []
+    for el in bspec:
+        if isinstance(el, (tuple, list)):
+            b_axes.extend(el)
+        elif el is not None:
+            b_axes.append(el)
+    b_axes = tuple(b_axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        spec = [None] * nd
+        if "'k'" in name or "'v'" in name:
+            # (..., B, S, kv, hd)
+            b_i, s_i, kv_i = nd - 4, nd - 3, nd - 2
+            if b_axes and shape[b_i] % _mesh_prod(mesh, b_axes) == 0:
+                spec[b_i] = b_axes if len(b_axes) > 1 else b_axes[0]
+            elif seq_shard and _fits(shape[s_i], mesh, "data"):
+                spec[s_i] = "data"
+            if _fits(shape[kv_i], mesh, "model"):
+                spec[kv_i] = "model"
+            elif _fits(shape[s_i], mesh, "model") and spec[s_i] is None:
+                # kv heads don't divide the model axis: shard the sequence
+                # instead (flash-decode style partial attention — keeps the
+                # cache fully local, §Perf decode iteration)
+                spec[s_i] = "model"
+        elif "'pos'" in name:
+            pass
+        else:
+            # SSM / mLSTM states (stack..., B, feat...): batch + widest feature
+            if b_axes:
+                for i in range(nd):
+                    if shape[i] == global_batch and \
+                            global_batch % _mesh_prod(mesh, b_axes) == 0:
+                        spec[i] = b_axes if len(b_axes) > 1 else b_axes[0]
+                        break
+            feat = [(s, i) for i, s in enumerate(shape) if spec[i] is None]
+            if feat:
+                s_max, i_max = max(feat)
+                if _fits(s_max, mesh, "model"):
+                    spec[i_max] = "model"
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _mesh_prod(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def logits_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
+    return NamedSharding(mesh, P(*batch_spec(mesh, global_batch), None, "model"))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

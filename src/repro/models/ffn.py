@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen), GeGLU (gemma), GELU (classic)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules
+from repro.models.modules import ExecContext, join
+
+
+def ffn_init(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "gate": modules.linear_init(ks[0], d_model, d_ff, dtype=dtype),
+            "up": modules.linear_init(ks[1], d_model, d_ff, dtype=dtype),
+            "down": modules.linear_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    return {  # plain gelu MLP (starcoder2, seamless)
+        "up": modules.linear_init(ks[0], d_model, d_ff, dtype=dtype),
+        "down": modules.linear_init(ks[1], d_ff, d_model, dtype=dtype),
+    }
+
+
+def ffn_apply(params, x: jax.Array, *, kind: str, ctx: ExecContext,
+              name: str) -> jax.Array:
+    if kind in ("swiglu", "geglu"):
+        g = modules.quant_linear(params["gate"], x, name=join(name, "gate"), ctx=ctx)
+        u = modules.quant_linear(params["up"], x, name=join(name, "up"), ctx=ctx)
+        act = jax.nn.silu(g.astype(jnp.float32)) if kind == "swiglu" else \
+            jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+        h = (act * u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        u = modules.quant_linear(params["up"], x, name=join(name, "up"), ctx=ctx)
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(x.dtype)
+    return modules.quant_linear(params["down"], h, name=join(name, "down"), ctx=ctx)

@@ -1,0 +1,216 @@
+"""Composable pure-JAX module primitives.
+
+No flax in this container: modules are (init, apply) function pairs over
+nested-dict pytree params.  Every matrix multiply in every architecture goes
+through :func:`quant_linear`, which is where the paper's FPX precision
+assignment plugs in — the ``ExecContext`` carries a per-linear-layer bitwidth
+policy, an optional activation collector (for Algorithm-1 calibration), and
+kernel-dispatch flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+# ---------------------------------------------------------------------------
+# Execution context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecContext:
+    """Carries cross-cutting execution state through a model forward pass.
+
+    Attributes:
+      policy: maps linear-layer name -> bits.  Values may be python ints
+        (static dispatch; required for materialized/kernel paths) or traced
+        scalars (dynamic dispatch inside scanned stacks).  Missing names fall
+        back to ``default_bits``.
+      default_bits: precision for linears not named in ``policy``.
+      act_bits: activation precision (paper quantizes activations to the same
+        width as the weights of the consuming linear; ``None`` follows the
+        weight bits, 16 disables activation quantization).
+      collect: if not None, a dict that receives {name: (input, output_ref)}
+        for Algorithm-1 calibration.  Only usable outside jit.
+      use_pallas: dispatch quantized matmuls to the Pallas kernels
+        (interpret-mode on CPU) instead of the jnp reference path.
+      deterministic: disables dropout-like stochasticity (always True here).
+    """
+
+    policy: Optional[Dict[str, Any]] = None
+    default_bits: int = 16
+    act_bits: Optional[int] = None
+    collect: Optional[Dict[str, Any]] = None
+    use_pallas: bool = False
+    compute_dtype: Any = jnp.float32
+    name_prefix: str = ""   # set per-layer in unrolled mode ("L{i}")
+    #: PartitionSpec pinned onto the residual stream at every block boundary.
+    #: Without it GSPMD may trade batch sharding for contraction parallelism
+    #: and all-reduce full activations (measured in EXPERIMENTS.md §Perf).
+    act_spec: Any = None
+    #: When set (a Mesh), MoE layers run the explicit expert-parallel
+    #: shard_map path instead of the gather formulation (§Perf MoE iter).
+    moe_mesh: Any = None
+    moe_data_axes: Any = ("data",)
+
+    def full_name(self, name: str) -> str:
+        return join(self.name_prefix, name)
+
+    def bits_for(self, name: str):
+        if self.policy is not None:
+            full = self.full_name(name)
+            if full in self.policy:
+                return self.policy[full]
+            if name in self.policy:
+                return self.policy[name]
+        return self.default_bits
+
+
+DEFAULT_CTX = ExecContext()
+
+
+def constrain(x: jax.Array, ctx: "ExecContext") -> jax.Array:
+    """Apply the context's activation sharding constraint (no-op if unset)."""
+    if ctx.act_spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.act_spec)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _normal_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32) -> Dict[str, jax.Array]:
+    p = {"w": _normal_init(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"emb": _normal_init(key, (vocab, d), scale=d ** -0.5, dtype=dtype)}
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype=dtype)}
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype=dtype), "b": jnp.zeros((d,), dtype=dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Apply functions
+# ---------------------------------------------------------------------------
+
+def _is_static_bits(bits) -> bool:
+    return isinstance(bits, int)
+
+
+def quant_linear(params: Dict[str, jax.Array], x: jax.Array, *,
+                 name: str, ctx: ExecContext = DEFAULT_CTX) -> jax.Array:
+    """The universal linear layer: ``y = Q(x) Q(W) * scales (+ b)``.
+
+    This is the surface FPX operates on (paper Sec. 4.1: only matmul
+    operators are precision-controlled; everything else stays untouched).
+    """
+    w = params["w"]
+    bits = ctx.bits_for(name)
+    act_bits = ctx.act_bits if ctx.act_bits is not None else bits
+
+    if ctx.collect is not None:
+        # Algorithm-1 calibration: the net runs FP16; this layer's FP4
+        # execution is simulated on the same inputs and the relative error
+        # eps_l = ||A_fp16 - A_fp4|| / ||A_fp16|| is recorded (paper Eq. 6).
+        xf = x.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        a16 = xf @ wf
+        a4 = quant.fake_quant(xf, 4) @ quant.fake_quant(wf, 4)
+        ctx.collect.setdefault(ctx.full_name(name), []).append(
+            quant.relative_error(a16, a4))
+
+    orig_dtype = x.dtype
+    if _is_static_bits(bits):
+        if bits >= 16:
+            y = x @ w.astype(x.dtype)
+        elif ctx.use_pallas:
+            from repro.kernels import ops  # local import: keep kernels optional
+            y = ops.quant_matmul(x, w, x_bits=act_bits if act_bits < 16 else 16,
+                                 w_bits=bits)
+        else:
+            xq = quant.fake_quant(x, act_bits) if act_bits < 16 else x
+            wq = quant.fake_quant(w, bits)
+            y = (xq.astype(jnp.float32) @ wq.astype(jnp.float32)).astype(orig_dtype)
+    else:
+        # Traced per-layer bits (scanned stacks): dynamic fake-quant select.
+        wq = quant.fake_quant_dynamic(w, bits)
+        xq = quant.fake_quant_dynamic(x, bits) if ctx.act_bits is None else x
+        y = (xq.astype(jnp.float32) @ wq.astype(jnp.float32)).astype(orig_dtype)
+
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def embedding_lookup(params, ids: jax.Array) -> jax.Array:
+    return params["emb"][ids]
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-6,
+            plus_one: bool = False) -> jax.Array:
+    """RMSNorm; ``plus_one`` uses the gemma-style (1+g) parameterization."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    g = params["g"].astype(jnp.float32)
+    g = 1.0 + g if plus_one else g
+    return (xn * g).astype(dt)
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xn = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xn * params["g"].astype(jnp.float32)
+            + params["b"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Name utilities (FPX policies key on these)
+# ---------------------------------------------------------------------------
+
+def join(*parts: str) -> str:
+    return ".".join(p for p in parts if p)
+
+
+def collect_linear_names(params: Any, prefix: str = "") -> List[str]:
+    """Walk a param pytree and return the names of all linear layers
+    (subtrees containing a 2D+ ``w``)."""
+    names = []
+    if isinstance(params, dict):
+        if "w" in params and hasattr(params["w"], "ndim") and params["w"].ndim >= 2:
+            names.append(prefix)
+        for k, v in params.items():
+            if k in ("w", "b"):
+                continue
+            names.extend(collect_linear_names(v, join(prefix, str(k))))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            names.extend(collect_linear_names(v, join(prefix, str(i))))
+    return names

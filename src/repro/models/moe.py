@@ -1,0 +1,238 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Gather/scatter dispatch (no (B,S,E,C) one-hot einsum — that tensor is
+O(tokens x experts x capacity) and does not survive 4k x 256 batches).
+Tokens are routed to (expert, slot) coordinates; expert FFNs run as stacked
+batched matmuls ("grouped GEMM") over (E, C, d) blocks; results scatter-add
+back with gate weights.  Under pjit, experts shard on the "model" mesh axis
+and tokens on "data", so dispatch/combine lower to all-to-all-style
+collectives.
+
+Capacity semantics are GShard-style (tokens beyond capacity drop, gates
+renormalized).  DBRX/granite are dropless in their reference impls; with
+capacity_factor >= 2 drops are negligible — recorded in DESIGN.md.
+
+FPX note: the stacked per-expert projections count as one *named* linear each
+("gate"/"up"/"down") — the grouped-GEMM kernel runs all experts of one
+projection at one precision, matching how a hardware kernel would batch them.
+The router linear is pinned to >= 8 bits by the assignment policy (tiny
+matmul, outsized quality impact).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models import modules
+from repro.models.modules import ExecContext, join
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+
+    def estack(k, d_in, d_out):
+        kk = jax.random.split(k, n_experts)
+        return {"w": jnp.stack([
+            modules._normal_init(kk[i], (d_in, d_out), dtype=dtype)
+            for i in range(n_experts)])}
+
+    p = {
+        "router": modules.linear_init(ks[0], d_model, n_experts, dtype=dtype),
+        "gate": estack(ks[1], d_model, d_ff),
+        "up": estack(ks[2], d_model, d_ff),
+        "down": estack(ks[3], d_ff, d_model),
+    }
+    if kind not in ("swiglu", "geglu"):
+        del p["gate"]
+    return p
+
+
+def _expert_matmul(params, x: jax.Array, *, name: str, ctx: ExecContext) -> jax.Array:
+    """x: (E, C, d_in) @ stacked w: (E, d_in, d_out) -> (E, C, d_out)."""
+    w = params["w"]
+    bits = ctx.bits_for(name)
+    if ctx.collect is not None:
+        xf = x.astype(jnp.float32)
+        wf = w.astype(jnp.float32)
+        a16 = jnp.einsum("ecd,edf->ecf", xf, wf)
+        a4 = jnp.einsum("ecd,edf->ecf", quant.fake_quant(xf, 4),
+                        quant.fake_quant(wf, 4))
+        ctx.collect.setdefault(ctx.full_name(name), []).append(
+            quant.relative_error(a16, a4))
+    if isinstance(bits, int):
+        if bits >= 16:
+            return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+        act_bits = ctx.act_bits if ctx.act_bits is not None else bits
+        xq = quant.fake_quant(x, act_bits) if act_bits < 16 else x
+        wq = quant.fake_quant(w, bits)
+        return jnp.einsum("ecd,edf->ecf", xq.astype(jnp.float32),
+                          wq.astype(jnp.float32)).astype(x.dtype)
+    wq = quant.fake_quant_dynamic(w, bits)
+    xq = quant.fake_quant_dynamic(x, bits)
+    return jnp.einsum("ecd,edf->ecf", xq.astype(jnp.float32),
+                      wq.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_apply(params, x: jax.Array, *, n_experts: int, top_k: int,
+              kind: str, ctx: ExecContext, name: str,
+              capacity_factor: float = 2.0,
+              return_aux: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, aux load-balance loss]."""
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = modules.quant_linear(params["router"], xf,
+                                  name=join(name, "router"), ctx=ctx)
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    gate_w, expert_ids = jax.lax.top_k(gates, top_k)              # (T, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(round(top_k * S * capacity_factor / n_experts)) * B)
+
+    # --- dispatch coordinates -------------------------------------------
+    flat_expert = expert_ids.reshape(-1)                  # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, n_experts, dtype=jnp.int32)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)      # (T*k, E)
+    slot = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = slot < capacity                                # capacity drop
+    token_idx = jnp.repeat(jnp.arange(T), top_k)
+
+    # scatter token ids into (E, C); dropped -> sentinel row T (zero pad)
+    safe_e = jnp.where(keep, flat_expert, 0)
+    safe_s = jnp.where(keep, slot, capacity)  # out-of-range slot is ignored via mode="drop"
+    dispatch = jnp.full((n_experts, capacity), T, dtype=jnp.int32)
+    dispatch = dispatch.at[safe_e, safe_s].set(
+        jnp.where(keep, token_idx, T), mode="drop")
+
+    xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    expert_in = xpad[dispatch]                            # (E, C, d)
+
+    # --- expert FFN (grouped GEMM) --------------------------------------
+    if kind in ("swiglu", "geglu"):
+        g = _expert_matmul(params["gate"], expert_in, name=join(name, "gate"), ctx=ctx)
+        u = _expert_matmul(params["up"], expert_in, name=join(name, "up"), ctx=ctx)
+        act = jax.nn.silu(g.astype(jnp.float32)) if kind == "swiglu" else \
+            jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+        h = (act * u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        u = _expert_matmul(params["up"], expert_in, name=join(name, "up"), ctx=ctx)
+        h = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(x.dtype)
+    expert_out = _expert_matmul(params["down"], h, name=join(name, "down"), ctx=ctx)
+
+    # --- combine ----------------------------------------------------------
+    flat_gate = gate_w.reshape(-1)                        # (T*k,)
+    contrib = expert_out[safe_e, jnp.clip(safe_s, 0, capacity - 1)]  # (T*k, d)
+    contrib = contrib * (flat_gate * keep)[:, None].astype(expert_out.dtype)
+    out = jnp.zeros((T, d), dtype=expert_out.dtype).at[token_idx].add(contrib)
+    out = out.reshape(B, S, d).astype(x.dtype)
+
+    if return_aux:
+        # Switch-style load-balance loss: E * sum_e f_e * P_e
+        me = gates.mean(axis=0)                           # (E,)
+        ce = jax.nn.one_hot(expert_ids[:, 0], n_experts).mean(axis=0)
+        aux = n_experts * jnp.sum(me * ce)
+        return out, aux
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel shard_map variant (§Perf MoE iteration)
+#
+# The gather formulation above lets GSPMD pick the collectives; with tokens
+# on "data" and experts on "model" it all-gathers the FULL token set per
+# layer (~token_bytes per chip per layer — measured 4+ TB/step for dbrx
+# train_4k).  This variant makes the parallelism explicit: tokens are
+# already replicated across the model axis (batch shards live on "data"),
+# so each model shard routes the tokens it sees into its LOCAL experts with
+# zero dispatch communication and the per-token contributions are summed
+# with one psum over "model" — (T_loc, d) bytes instead of (T, d) x E/chip.
+# ---------------------------------------------------------------------------
+
+def moe_apply_expert_parallel(params, x: jax.Array, *, n_experts: int,
+                              top_k: int, kind: str, ctx: ExecContext,
+                              name: str, capacity_factor: float,
+                              mesh, data_axes=("data",),
+                              model_axis: str = "model"):
+    """x: (B, S, d) with batch sharded over ``data_axes`` and experts over
+    ``model_axis``.  Returns (B, S, d) with the same sharding."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n_model = mesh.shape[model_axis]
+    assert n_experts % n_model == 0, (n_experts, n_model)
+    e_loc = n_experts // n_model
+
+    x_spec = P(data_axes, None, None)
+    router_spec = jax.tree.map(lambda _: P(None, None), params["router"])
+    estack_spec = jax.tree.map(lambda _: P(model_axis, None, None),
+                               {k: v for k, v in params.items()
+                                if k != "router"})
+
+    def body(router_p, experts_p, x_loc):
+        B, S, d = x_loc.shape
+        T = B * S
+        xf = x_loc.reshape(T, d)
+        j = jax.lax.axis_index(model_axis)
+
+        logits = modules.quant_linear(router_p, xf,
+                                      name=join(name, "router"), ctx=ctx)
+        gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        gate_w, expert_ids = jax.lax.top_k(gates, top_k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+        capacity = max(1, int(round(top_k * T * capacity_factor / n_experts)))
+
+        # local routing: global expert id e is ours iff e // e_loc == j
+        flat_e = expert_ids.reshape(-1)
+        local_e = flat_e - j * e_loc
+        is_local = (flat_e >= j * e_loc) & (flat_e < (j + 1) * e_loc)
+        onehot = jnp.where(is_local[:, None],
+                           jax.nn.one_hot(local_e, e_loc, dtype=jnp.int32), 0)
+        slot = (jnp.cumsum(onehot, axis=0) - 1)
+        slot = jnp.take_along_axis(slot, jnp.clip(local_e, 0, e_loc - 1)[:, None],
+                                   axis=1)[:, 0]
+        keep = is_local & (slot < capacity)
+        token_idx = jnp.repeat(jnp.arange(T), top_k)
+
+        safe_e = jnp.where(keep, local_e, 0)
+        safe_s = jnp.where(keep, slot, capacity)
+        dispatch = jnp.full((e_loc, capacity), T, dtype=jnp.int32)
+        dispatch = dispatch.at[safe_e, safe_s].set(
+            jnp.where(keep, token_idx, T), mode="drop")
+
+        xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+        expert_in = xpad[dispatch]                        # (E_loc, C, d)
+
+        if kind in ("swiglu", "geglu"):
+            g = _expert_matmul(experts_p["gate"], expert_in,
+                               name=join(name, "gate"), ctx=ctx)
+            u = _expert_matmul(experts_p["up"], expert_in,
+                               name=join(name, "up"), ctx=ctx)
+            act = jax.nn.silu(g.astype(jnp.float32)) if kind == "swiglu" \
+                else jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+            h = (act * u.astype(jnp.float32)).astype(x_loc.dtype)
+        else:
+            u = _expert_matmul(experts_p["up"], expert_in,
+                               name=join(name, "up"), ctx=ctx)
+            h = jax.nn.gelu(u.astype(jnp.float32),
+                            approximate=True).astype(x_loc.dtype)
+        expert_out = _expert_matmul(experts_p["down"], h,
+                                    name=join(name, "down"), ctx=ctx)
+
+        flat_gate = gate_w.reshape(-1)
+        contrib = expert_out[safe_e, jnp.clip(safe_s, 0, capacity - 1)]
+        contrib = contrib * (flat_gate * keep)[:, None].astype(expert_out.dtype)
+        out = jnp.zeros((T, d), expert_out.dtype).at[token_idx].add(contrib)
+        out = jax.lax.psum(out, model_axis)               # combine shards
+        return out.reshape(B, S, d).astype(x_loc.dtype)
+
+    experts_p = {k: v for k, v in params.items() if k != "router"}
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(router_spec, estack_spec, x_spec),
+                   out_specs=x_spec, check_rep=False)
+    return fn(params["router"], experts_p, x)

@@ -1,0 +1,131 @@
+"""Selective state-space (Mamba-style) mixer — the SSM branch of hymba.
+
+Recurrence (per channel c, state dim N):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Prefill/train uses a chunked associative scan (TPU-friendly: the full
+(B,S,d,N) state history never materializes — only (B,chunk,d,N) per chunk).
+Decode is a single fused state update, O(1) in sequence length, which is why
+the hybrid/SSM architectures are the ones that run ``long_500k``.
+
+Projections (in/x/dt/out) are FPX-quantizable linears; the scan itself stays
+fp32 (paper Sec 4.1 carve-out for non-matmul ops).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules
+from repro.models.modules import ExecContext, join
+
+CHUNK = 128
+
+
+def ssm_init(key, d_model: int, d_inner: int, state_dim: int, dt_rank: int,
+             conv_dim: int = 4, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 7)
+    p = {
+        "in_proj": modules.linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, d_inner)) * 0.1).astype(dtype),
+        "x_proj": modules.linear_init(ks[2], d_inner, dt_rank + 2 * state_dim, dtype=dtype),
+        "dt_proj": modules.linear_init(ks[3], dt_rank, d_inner, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, state_dim + 1, dtype=jnp.float32),
+                                  (d_inner, 1))),          # (d_inner, N)
+        "D": jnp.ones((d_inner,), dtype=jnp.float32),
+        "out_proj": modules.linear_init(ks[4], d_inner, d_model, dtype=dtype),
+    }
+    return p
+
+
+def _scan_chunk(carry_h, chunk):
+    """Associative scan within a chunk; carry_h: (B, d, N)."""
+    a, bx = chunk  # a: (B, L, d, N) decay; bx: (B, L, d, N) input drive
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_c * carry_h[:, None] + b_c                     # (B, L, d, N)
+    return h[:, -1], h
+
+
+def ssm_apply(params, x: jax.Array, *, d_inner: int, state_dim: int,
+              dt_rank: int, conv_dim: int, ctx: ExecContext, name: str,
+              state: Optional[Dict[str, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d_model).  With ``state`` ({"h": (B,d,N), "conv": (B,K-1,d)}):
+    single-token decode; returns (y, new_state)."""
+    B, S, _ = x.shape
+    xz = modules.quant_linear(params["in_proj"], x, name=join(name, "in_proj"), ctx=ctx)
+    xi, z = jnp.split(xz, 2, axis=-1)                    # (B, S, d_inner)
+
+    # depthwise causal conv1d
+    K = conv_dim
+    if state is None:
+        pad = jnp.zeros((B, K - 1, d_inner), xi.dtype)
+        xc = jnp.concatenate([pad, xi], axis=1)
+        new_conv = xc[:, -(K - 1):] if K > 1 else None
+    else:
+        xc = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+        new_conv = xc[:, -(K - 1):] if K > 1 else None
+    conv_w = params["conv_w"].astype(jnp.float32)        # (K, d_inner)
+    xconv = sum(xc[:, i:i + S].astype(jnp.float32) * conv_w[i]
+                for i in range(K))                       # (B, S, d_inner)
+    u = jax.nn.silu(xconv)
+
+    # input-dependent dt, B, C
+    dbc = modules.quant_linear(params["x_proj"], u.astype(x.dtype),
+                               name=join(name, "x_proj"), ctx=ctx)
+    dt, Bm, Cm = jnp.split(dbc.astype(jnp.float32),
+                           [dt_rank, dt_rank + state_dim], axis=-1)
+    dt = modules.quant_linear(params["dt_proj"], dt.astype(x.dtype),
+                              name=join(name, "dt_proj"), ctx=ctx)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # (B, S, d_inner)
+
+    A = -jnp.exp(params["A_log"])                         # (d_inner, N)
+    decay = jnp.exp(dt[..., None] * A)                    # (B, S, d, N)
+    drive = (dt * u)[..., None] * Bm[:, :, None, :]       # (B, S, d, N)
+
+    if state is None:
+        h0 = jnp.zeros((B, d_inner, state_dim), jnp.float32)
+        n_chunks = max(1, S // CHUNK)
+        if S % CHUNK == 0 and S > CHUNK:
+            dec_c = decay.reshape(B, n_chunks, CHUNK, d_inner, state_dim)
+            drv_c = drive.reshape(B, n_chunks, CHUNK, d_inner, state_dim)
+
+            def step(h, ins):
+                a, bx = ins
+                return _scan_chunk(h, (a, bx))
+
+            hT, hist = jax.lax.scan(
+                step, h0, (dec_c.transpose(1, 0, 2, 3, 4),
+                           drv_c.transpose(1, 0, 2, 3, 4)))
+            h_all = hist.transpose(1, 0, 2, 3, 4).reshape(B, S, d_inner, state_dim)
+        else:
+            hT, h_all = _scan_chunk(h0, (decay, drive))
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cm)
+        new_state = {"h": hT, "conv": new_conv}
+    else:
+        h = state["h"] * decay[:, 0] + drive[:, 0]        # (B, d, N)
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+        new_state = {"h": h, "conv": new_conv}
+
+    y = y + params["D"] * u
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = modules.quant_linear(params["out_proj"], y.astype(x.dtype),
+                               name=join(name, "out_proj"), ctx=ctx)
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_inner: int, state_dim: int, conv_dim: int,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, d_inner, state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, conv_dim - 1, d_inner), dtype),
+    }

@@ -1,0 +1,748 @@
+"""Model assembly for all assigned architectures.
+
+Layer stacks are organized into *segments* so that every architecture scans
+over homogeneous stacked blocks (flat HLO regardless of depth — critical for
+the 512-device dry-run):
+
+  dense uniform      [("layers", L)]                              scan L
+  gemma3 5:1         [("super", G x (R local + 1 global)), ("tail", T local)]
+  vlm cross-every-k  [("groups", G x (R self + 1 cross))]
+  xlstm 7:1          [("super", G x (R mlstm + 1 slstm))]
+  hybrid (hymba)     [("g0",1), ("runA", n), ("g1",1), ("runB", m), ("g2",1)]
+  enc-dec            [("enc", E)] + [("dec", L)]
+
+``segment_layout(cfg)`` exposes the segment -> global-layer-index map; the
+FPX assignment uses it to turn per-layer bit decisions into per-segment
+policy arrays that ride through ``lax.scan`` as xs.
+
+Three modes: ``forward`` (full causal logits: training + scoring),
+``prefill`` (logits for last position + decode cache), ``decode_step``
+(one token + cache -> next logits + cache).
+
+``unroll=True`` replaces scans with python loops and prefixes layer names
+("L{i}.") — required by Algorithm-1 calibration to tell layers apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks, modules
+from repro.models.modules import ExecContext, join
+
+
+# ---------------------------------------------------------------------------
+# Segment layout
+# ---------------------------------------------------------------------------
+
+def segment_layout(cfg: ModelConfig) -> List[Tuple[str, List[int]]]:
+    """Ordered (segment_key, [global layer indices]) pairs."""
+    L = cfg.n_layers
+    if cfg.arch_type == "ssm":
+        sb = cfg.slstm_every
+        G = L // sb
+        segs = [("mlstm", []), ("slstm", [])]
+        for g in range(G):
+            segs[0][1].extend(range(g * sb, g * sb + sb - 1))
+            segs[1][1].append(g * sb + sb - 1)
+        return segs
+    if cfg.arch_type == "vlm":
+        ce = cfg.cross_attn_every
+        G = L // ce
+        segs = [("self", []), ("cross", [])]
+        for g in range(G):
+            segs[0][1].extend(range(g * ce, g * ce + ce - 1))
+            segs[1][1].append(g * ce + ce - 1)
+        tail = list(range(G * ce, L))
+        if tail:
+            segs.append(("tail", tail))
+        return segs
+    if cfg.arch_type == "hybrid":
+        mid = L // 2
+        glob = sorted({0, mid, L - 1})
+        runs: List[List[int]] = []
+        cur: List[int] = []
+        for i in range(L):
+            if i in glob:
+                if cur:
+                    runs.append(cur)
+                    cur = []
+            else:
+                cur.append(i)
+        if cur:
+            runs.append(cur)
+        segs = [("global", glob)]
+        for j, r in enumerate(runs):
+            segs.append((f"run{j}", r))
+        return segs
+    if cfg.arch_type == "audio":
+        return [("enc", list(range(cfg.n_enc_layers))),
+                ("dec", list(range(L)))]
+    if cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        G = L // sb
+        segs = [("local", []), ("global", [])]
+        for g in range(G):
+            segs[0][1].extend(range(g * sb, g * sb + sb - 1))
+            segs[1][1].append(g * sb + sb - 1)
+        tail = list(range(G * sb, L))
+        if tail:
+            segs.append(("tail", tail))
+        return segs
+    return [("layers", list(range(L)))]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    ps = [init_fn(keys[i]) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": modules.embedding_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "final_norm": modules.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = modules.linear_init(k_head, cfg.d_model, cfg.vocab,
+                                                dtype=dtype)
+
+    t = cfg.arch_type
+    if t == "ssm":
+        sb = cfg.slstm_every
+        G = cfg.n_layers // sb
+        km, ks = jax.random.split(k_blocks)
+        params["blocks"] = {
+            "mlstm": _stack(km, G * (sb - 1),
+                            lambda k: blocks.mlstm_block_init(k, cfg, dtype)),
+            "slstm": _stack(ks, G,
+                            lambda k: blocks.slstm_block_init(k, cfg, dtype)),
+        }
+        params["blocks"]["mlstm"] = jax.tree.map(
+            lambda x: x.reshape(G, sb - 1, *x.shape[1:]), params["blocks"]["mlstm"])
+    elif t == "vlm":
+        ce = cfg.cross_attn_every
+        G = cfg.n_layers // ce
+        k1, k2 = jax.random.split(k_blocks)
+        self_stack = _stack(k1, G * (ce - 1),
+                            lambda k: blocks.dense_block_init(k, cfg, dtype))
+        params["blocks"] = {
+            "self": jax.tree.map(lambda x: x.reshape(G, ce - 1, *x.shape[1:]),
+                                 self_stack),
+            "cross": _stack(k2, G,
+                            lambda k: blocks.dense_block_init(k, cfg, dtype,
+                                                              cross=True)),
+        }
+    elif t == "hybrid":
+        layout = dict(segment_layout(cfg))
+        keys = jax.random.split(k_blocks, len(layout))
+        params["blocks"] = {}
+        for kk, (seg, idxs) in zip(keys, layout.items()):
+            if not idxs:
+                continue
+            params["blocks"][seg] = _stack(
+                kk, len(idxs), lambda k: blocks.hybrid_block_init(k, cfg, dtype))
+    elif t == "audio":
+        k1, k2 = jax.random.split(k_blocks)
+        params["blocks"] = {
+            "enc": _stack(k1, cfg.n_enc_layers,
+                          lambda k: blocks.enc_block_init(k, cfg, dtype)),
+            "dec": _stack(k2, cfg.n_layers,
+                          lambda k: blocks.dec_block_init(k, cfg, dtype)),
+        }
+        params["enc_norm"] = modules.rmsnorm_init(cfg.d_model, dtype)
+    elif cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        G = cfg.n_layers // sb
+        tail = cfg.n_layers - G * sb
+        k1, k2, k3 = jax.random.split(k_blocks, 3)
+        local_stack = _stack(k1, G * (sb - 1),
+                             lambda k: blocks.dense_block_init(k, cfg, dtype))
+        params["blocks"] = {
+            "local": jax.tree.map(lambda x: x.reshape(G, sb - 1, *x.shape[1:]),
+                                  local_stack),
+            "global": _stack(k2, G, lambda k: blocks.dense_block_init(k, cfg, dtype)),
+        }
+        if tail:
+            params["blocks"]["tail"] = _stack(
+                k3, tail, lambda k: blocks.dense_block_init(k, cfg, dtype))
+    else:
+        params["blocks"] = {
+            "layers": _stack(k_blocks, cfg.n_layers,
+                             lambda k: blocks.dense_block_init(k, cfg, dtype)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Policy plumbing
+# ---------------------------------------------------------------------------
+
+def _seg_policy(ctx: ExecContext, seg: str):
+    """Split ctx.policy into (static ints, per-layer arrays) for a segment.
+
+    Policy keys are either relative ("block.attn.q.w" -> applies everywhere)
+    or segment-scoped ("<seg>/<rel>" with an array over that segment)."""
+    static, arrays = {}, {}
+    if ctx.policy:
+        for k, v in ctx.policy.items():
+            if "/" in k:
+                s, rel = k.split("/", 1)
+                if s == seg:
+                    arrays[rel] = jnp.asarray(v)
+            else:
+                static[k] = v
+    return static, arrays
+
+
+def _step_ctx(ctx: ExecContext, static, arr_slice, prefix="") -> ExecContext:
+    pol = dict(static)
+    pol.update(arr_slice)
+    # nest prefixes so unrolled nested stacks get unique names (L{g}.L{s}.*)
+    full_prefix = join(ctx.name_prefix, prefix) if prefix else ctx.name_prefix
+    return dataclasses.replace(ctx, policy=pol, name_prefix=full_prefix)
+
+
+# ---------------------------------------------------------------------------
+# Scan / unroll driver
+# ---------------------------------------------------------------------------
+
+def _run_stack(body, h, stacked, n: int, *, ctx: ExecContext, seg: str,
+               unroll: bool, xs_extra=None, layer_ids: Optional[List[int]] = None):
+    """Run ``body(h, params_i, ctx_i, extra_i) -> (h, y_i)`` over a stack.
+
+    Returns (h, ys) with ys stacked (or a list when unrolled)."""
+    static, arrays = _seg_policy(ctx, seg)
+    if unroll:
+        ys = []
+        for i in range(n):
+            p_i = jax.tree.map(lambda x: x[i], stacked)
+            e_i = None if xs_extra is None else jax.tree.map(lambda x: x[i], xs_extra)
+            sl = {k: v[i] for k, v in arrays.items()}
+            gid = layer_ids[i] if layer_ids else i
+            ctx_i = _step_ctx(ctx, static, sl, prefix=f"L{gid}")
+            h, y = body(h, p_i, ctx_i, e_i)
+            ys.append(y)
+        if ys and ys[0] is not None:
+            ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+        else:
+            ys = None
+        return h, ys
+
+    def scan_body(carry, xs):
+        p_i, sl, e_i = xs
+        ctx_i = _step_ctx(ctx, static, sl)
+        return body(carry, p_i, ctx_i, e_i)
+
+    xs = (stacked, arrays if arrays else {k: jnp.zeros((n,)) for k in ()}, xs_extra)
+    # jax.lax.scan needs consistent pytrees; use empty dict when no arrays
+    h, ys = jax.lax.scan(scan_body, h, xs, length=n)
+    return h, ys
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache construction
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=jnp.bfloat16, start_pos: Optional[int] = None,
+                      ) -> Any:
+    """Zero-initialized decode cache matching what ``decode_step`` expects.
+
+    ``cache_len`` is the max context; sliding-window segments allocate
+    ``min(window, cache_len)`` ring buffers — the reason sub-quadratic archs
+    can serve long_500k.  ``start_pos`` sets the write position (e.g. the
+    prefill length for dry-run decode specs)."""
+    pos0 = jnp.asarray(0 if start_pos is None else start_pos, jnp.int32)
+
+    def kvc(stack_dims, s_len):
+        shape = (*stack_dims, batch, s_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": jnp.broadcast_to(pos0, stack_dims)}
+
+    W = cfg.sliding_window
+    local_len = min(W, cache_len) if W else cache_len
+    t = cfg.arch_type
+    if t == "ssm":
+        from repro.models import xlstm as _x
+        sb = cfg.slstm_every
+        G = cfg.n_layers // sb
+        R = sb - 1
+        d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = d_inner // cfg.n_heads
+
+        def bc(x, dims):
+            return jnp.broadcast_to(x, (*dims, *x.shape))
+        mst = _x.init_mlstm_state(batch, cfg.n_heads, hd)
+        sst = _x.init_slstm_state(batch, cfg.d_model)
+        return {
+            "mlstm": jax.tree.map(lambda x: bc(x, (G, R)), mst),
+            "slstm": jax.tree.map(lambda x: bc(x, (G,)), sst),
+        }
+    if t == "vlm":
+        ce = cfg.cross_attn_every
+        G = cfg.n_layers // ce
+        R = ce - 1
+        return {
+            "self": kvc((G, R), cache_len),
+            "cross_kv": {
+                "k": jnp.zeros((G, batch, cfg.vision_tokens, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((G, batch, cfg.vision_tokens, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+            },
+        }
+    if t == "hybrid":
+        from repro.models import ssm as _s
+        cache = {}
+        for seg, idxs in segment_layout(cfg):
+            if not idxs:
+                continue
+            s_len = cache_len if seg == "global" else local_len
+            st = _s.init_ssm_state(batch, cfg.d_inner, cfg.ssm_state,
+                                   cfg.ssm_conv, dtype)
+            n = len(idxs)
+            cache[seg] = {
+                "attn": kvc((n,), s_len),
+                "ssm": jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (n, *x.shape)), st),
+            }
+        return cache
+    if t == "audio":
+        return {
+            "self": kvc((cfg.n_layers,), cache_len),
+            "cross_kv": {
+                "k": jnp.zeros((cfg.n_layers, batch, cfg.audio_frames,
+                                cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((cfg.n_layers, batch, cfg.audio_frames,
+                                cfg.n_kv_heads, cfg.head_dim), dtype),
+            },
+        }
+    if cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        G = cfg.n_layers // sb
+        R = sb - 1
+        tail = cfg.n_layers - G * sb
+        cache = {"local": kvc((G, R), local_len), "global": kvc((G,), cache_len)}
+        cache["tail"] = kvc((tail,), local_len) if tail else None
+        return cache
+    return {"layers": kvc((cfg.n_layers,), local_len)}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed(params, cfg: ModelConfig, tokens: jax.Array,
+          ctx: ExecContext = modules.DEFAULT_CTX) -> jax.Array:
+    h = modules.embedding_lookup(params["embed"], tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return modules.constrain(h, ctx)
+
+
+def unembed(params, cfg: ModelConfig, h: jax.Array, ctx: ExecContext) -> jax.Array:
+    h = modules.rmsnorm(params["final_norm"], h, plus_one=cfg.norm_plus_one)
+    if cfg.tie_embeddings:
+        w = params["embed"]["emb"]
+        bits = ctx.bits_for("lm_head")
+        if isinstance(bits, int) and bits < 16:
+            from repro.core import quant
+            w = quant.fake_quant(w, bits)
+        return jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                          w.astype(jnp.float32))
+    return modules.quant_linear(params["lm_head"], h, name="lm_head",
+                                ctx=ctx).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward dispatch
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: ExecContext = modules.DEFAULT_CTX, *,
+            unroll: bool = False) -> jax.Array:
+    """Full causal forward -> logits (B, S, vocab). Train / scoring path."""
+    h, _ = _backbone(params, cfg, batch, ctx, mode="full", unroll=unroll)
+    return unembed(params, cfg, h, ctx)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            ctx: ExecContext = modules.DEFAULT_CTX, *,
+            unroll: bool = False,
+            cache_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
+    """Causal forward that also returns the decode cache.
+
+    ``cache_len``: total decode-context budget; full (non-windowed) caches
+    are padded to it so subsequent ``decode_step`` calls have free slots.
+    Returns (last-position logits (B, 1, V), cache)."""
+    h, cache = _backbone(params, cfg, batch, ctx, mode="prefill",
+                         unroll=unroll, cache_len=cache_len)
+    logits = unembed(params, cfg, h[:, -1:], ctx)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                cache: Any, ctx: ExecContext = modules.DEFAULT_CTX, *,
+                unroll: bool = False) -> Tuple[jax.Array, Any]:
+    """One-token decode: batch["token"] (B, 1) + cache -> (logits (B,1,V), cache)."""
+    h, new_cache = _backbone(params, cfg, batch, ctx, mode="decode",
+                             unroll=unroll, cache=cache)
+    return unembed(params, cfg, h, ctx), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Backbones
+# ---------------------------------------------------------------------------
+
+def _backbone(params, cfg, batch, ctx, *, mode: str, unroll: bool, cache=None,
+              cache_len: Optional[int] = None):
+    t = cfg.arch_type
+    kw = dict(mode=mode, unroll=unroll, cache=cache, cache_len=cache_len)
+    if t == "ssm":
+        return _xlstm_backbone(params, cfg, batch, ctx, **kw)
+    if t == "vlm":
+        return _vlm_backbone(params, cfg, batch, ctx, **kw)
+    if t == "hybrid":
+        return _hybrid_backbone(params, cfg, batch, ctx, **kw)
+    if t == "audio":
+        return _encdec_backbone(params, cfg, batch, ctx, **kw)
+    return _dense_backbone(params, cfg, batch, ctx, **kw)
+
+
+def _attn_seg_body(cfg, window, mode, hybrid=False):
+    """Build a scan body for a dense/moe/hybrid attention segment."""
+    apply = blocks.hybrid_block_apply if hybrid else blocks.dense_block_apply
+
+    def body(h, p_i, ctx_i, extra_i):
+        if mode == "decode":
+            h, new_c = apply(p_i, h, cfg=cfg, ctx=ctx_i, window=window,
+                             cache=extra_i)
+            return h, new_c
+        h, aux = apply(p_i, h, cfg=cfg, ctx=ctx_i, window=window,
+                       return_kv=(mode == "prefill"))
+        return h, aux
+
+    return body
+
+
+def _localize_kv(kv, window: int, seq: int):
+    """Convert full prefill K/V (B,S,kv,hd) to a ring-buffer window cache."""
+    W = min(window, seq)
+    out = jax.tree.map(lambda x: x[:, -W:], kv)
+    shift = seq % W
+    return jax.tree.map(lambda x: jnp.roll(x, shift, axis=1), out)
+
+
+def _finish_prefill_cache(kv, *, window: Optional[int], seq: int,
+                          cache_len: Optional[int] = None):
+    """kv: stacked {"k","v"} per layer (leading layer dims) -> decode cache.
+
+    Pads up to the decode budget: full caches to ``cache_len``; windowed
+    caches to min(window, cache_len) ring buffers (slot = pos % size)."""
+    if kv is None:
+        return None
+    target = cache_len if cache_len is not None else seq
+    if window is not None and seq > window:
+        # keep only the last `window` positions, rotated so that slot layout
+        # matches the decode ring-buffer convention (slot = pos % window)
+        def loc(x):  # x: (..., B, S, kv, hd); S is axis -3
+            xw = jax.lax.slice_in_dim(x, x.shape[-3] - window, x.shape[-3],
+                                      axis=x.ndim - 3)
+            return jnp.roll(xw, seq % window, axis=x.ndim - 3)
+        kv = jax.tree.map(loc, kv)
+    else:
+        size = min(window, target) if window is not None else target
+        if size > seq:
+            def pad(x):  # pad S axis (axis -3) with zeros at the end
+                widths = [(0, 0)] * x.ndim
+                widths[x.ndim - 3] = (0, size - seq)
+                return jnp.pad(x, widths)
+            kv = jax.tree.map(pad, kv)
+    pos = jnp.array(seq, jnp.int32)
+    # broadcast a per-layer pos over the stack dims
+    def mkpos(k):
+        stack_dims = k.shape[:-4]  # (..., B, S, kv, hd)
+        return jnp.broadcast_to(pos, stack_dims).astype(jnp.int32)
+    sample = kv["k"]
+    return {"k": kv["k"], "v": kv["v"], "pos": mkpos(sample)}
+
+
+def _dense_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
+        cache_len=None):
+    if mode == "decode":
+        h = embed(params, cfg, batch["token"], ctx)
+    else:
+        h = embed(params, cfg, batch["tokens"], ctx)
+    S = h.shape[1] if mode != "decode" else None
+    blocks_p = params["blocks"]
+    layout = dict(segment_layout(cfg))
+
+    if "layers" in blocks_p:
+        window = cfg.sliding_window
+        body = _attn_seg_body(cfg, window, mode)
+        n = cfg.n_layers
+        extra = cache["layers"] if mode == "decode" else None
+        h, ys = _run_stack(body, h, blocks_p["layers"], n, ctx=ctx,
+                           seg="layers", unroll=unroll, xs_extra=extra,
+                           layer_ids=layout["layers"])
+        if mode == "decode":
+            return h, {"layers": ys}
+        if mode == "prefill":
+            return h, {"layers": _finish_prefill_cache(ys, window=window, seq=S, cache_len=cache_len)}
+        return h, None
+
+    # gemma3-style local/global superblocks
+    sb = cfg.local_global_ratio + 1
+    G = cfg.n_layers // sb
+    R = sb - 1
+    W = cfg.sliding_window
+    local_p, global_p = blocks_p["local"], blocks_p["global"]
+    tail_p = blocks_p.get("tail")
+
+    local_body = _attn_seg_body(cfg, W, mode)
+    global_body = _attn_seg_body(cfg, None, mode)
+
+    def super_body(h, p_i, ctx_i, extra_i):
+        lp, gp = p_i
+        le = ge = None
+        if extra_i is not None:
+            le, ge = extra_i
+        h, lys = _run_stack(local_body, h, lp, R, ctx=ctx_i, seg="local_inner",
+                            unroll=unroll, xs_extra=le)
+        h, gy = global_body(h, gp, ctx_i, ge)
+        return h, (lys, gy)
+
+    extra = None
+    if mode == "decode":
+        extra = (cache["local"], cache["global"])
+    h, ys = _run_stack(super_body, h, (local_p, global_p), G, ctx=ctx,
+                       seg="super", unroll=unroll, xs_extra=extra)
+
+    tail_ys = None
+    if tail_p is not None:
+        n_tail = len(layout["tail"])
+        te = cache["tail"] if mode == "decode" else None
+        h, tail_ys = _run_stack(local_body, h, tail_p, n_tail, ctx=ctx,
+                                seg="tail", unroll=unroll, xs_extra=te,
+                                layer_ids=layout["tail"])
+
+    if mode == "decode":
+        lys, gys = ys
+        out = {"local": lys, "global": gys, "tail": tail_ys}
+        return h, out
+    if mode == "prefill":
+        lys, gys = ys
+        out = {
+            "local": _finish_prefill_cache(lys, window=W, seq=S, cache_len=cache_len),
+            "global": _finish_prefill_cache(gys, window=None, seq=S, cache_len=cache_len),
+            "tail": _finish_prefill_cache(tail_ys, window=W, seq=S, cache_len=cache_len),
+        }
+        return h, out
+    return h, None
+
+
+def _vlm_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
+        cache_len=None):
+    if mode == "decode":
+        h = embed(params, cfg, batch["token"], ctx)
+    else:
+        h = embed(params, cfg, batch["tokens"], ctx)
+    S = h.shape[1] if mode != "decode" else None
+    ce = cfg.cross_attn_every
+    G = cfg.n_layers // ce
+    R = ce - 1
+    self_p, cross_p = params["blocks"]["self"], params["blocks"]["cross"]
+
+    self_body = _attn_seg_body(cfg, None, mode)
+
+    # Cross-attn K/V from vision memory: computed at prefill/train, reused at
+    # decode (stored in the cache — the standard enc-dec/VLM optimization).
+    if mode == "decode":
+        xkv = cache["cross_kv"]            # stacked (G, B, T, kv, hd)
+    else:
+        vision = batch["vision"]           # (B, T, d_vision)
+
+        def xkv_one(cp, ctx_i):
+            return attention.cross_attn_kv(cp["attn"], vision,
+                                           n_kv_heads=cfg.n_kv_heads,
+                                           head_dim=cfg.head_dim, ctx=ctx_i,
+                                           name="xblock.attn")
+        static, arrays = _seg_policy(ctx, "cross")
+        if unroll:
+            kvs = [xkv_one(jax.tree.map(lambda x: x[i], cross_p),
+                           _step_ctx(ctx, static, {k: v[i] for k, v in arrays.items()},
+                                     prefix=f"Lx{i}"))
+                   for i in range(G)]
+            xkv = jax.tree.map(lambda *t: jnp.stack(t), *kvs)
+        else:
+            def kv_scan(_, xs):
+                cp, sl = xs
+                return None, xkv_one(cp, _step_ctx(ctx, static, sl))
+            _, xkv = jax.lax.scan(kv_scan, None, (cross_p, arrays or {}), length=G)
+        xkv = {"k": xkv[0], "v": xkv[1]}
+
+    def super_body(h, p_i, ctx_i, extra_i):
+        sp, cp, kv_i = p_i
+        se = extra_i
+        h, sys_ = _run_stack(self_body, h, sp, R, ctx=ctx_i, seg="self_inner",
+                             unroll=unroll, xs_extra=se)
+        h = blocks.cross_block_apply(cp, h, (kv_i["k"], kv_i["v"]),
+                                     cfg=cfg, ctx=ctx_i)
+        return h, sys_
+
+    extra = cache["self"] if mode == "decode" else None
+    h, ys = _run_stack(super_body, h, (self_p, cross_p, xkv), G, ctx=ctx,
+                       seg="groups", unroll=unroll, xs_extra=extra)
+
+    if mode == "decode":
+        return h, {"self": ys, "cross_kv": cache["cross_kv"]}
+    if mode == "prefill":
+        return h, {"self": _finish_prefill_cache(ys, window=None, seq=S, cache_len=cache_len),
+                   "cross_kv": xkv}
+    return h, None
+
+
+def _hybrid_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
+        cache_len=None):
+    if mode == "decode":
+        h = embed(params, cfg, batch["token"], ctx)
+    else:
+        h = embed(params, cfg, batch["tokens"], ctx)
+    S = h.shape[1] if mode != "decode" else None
+    layout = segment_layout(cfg)
+    W = cfg.sliding_window
+    new_cache: Dict[str, Any] = {}
+
+    for seg, idxs in layout:
+        if not idxs or seg not in params["blocks"]:
+            continue
+        window = None if seg == "global" else W
+        body = _attn_seg_body(cfg, window, mode, hybrid=True)
+        extra = cache[seg] if mode == "decode" else None
+        h, ys = _run_stack(body, h, params["blocks"][seg], len(idxs), ctx=ctx,
+                           seg=seg, unroll=unroll, xs_extra=extra,
+                           layer_ids=idxs)
+        if mode == "decode":
+            new_cache[seg] = ys
+        elif mode == "prefill":
+            new_cache[seg] = {
+                "attn": _finish_prefill_cache(ys["attn"], window=window, seq=S,
+                                              cache_len=cache_len),
+                "ssm": ys["ssm"],
+            } if ys is not None else None
+
+    if mode in ("decode", "prefill"):
+        return h, new_cache
+    return h, None
+
+
+def _xlstm_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
+        cache_len=None):
+    if mode == "decode":
+        h = embed(params, cfg, batch["token"], ctx)
+    else:
+        h = embed(params, cfg, batch["tokens"], ctx)
+    sb = cfg.slstm_every
+    G = cfg.n_layers // sb
+    R = sb - 1
+    m_p, s_p = params["blocks"]["mlstm"], params["blocks"]["slstm"]
+    stateful = mode in ("prefill", "decode")
+
+    def m_body(h, p_i, ctx_i, extra_i):
+        h, st = blocks.mlstm_block_apply(p_i, h, cfg=cfg, ctx=ctx_i,
+                                         state=extra_i)
+        return h, (st if stateful else None)
+
+    def super_body(h, p_i, ctx_i, extra_i):
+        mp, sp = p_i
+        me = se = None
+        if extra_i is not None:
+            me, se = extra_i
+        h, mys = _run_stack(m_body, h, mp, R, ctx=ctx_i, seg="mlstm_inner",
+                            unroll=unroll, xs_extra=me)
+        h, sst = blocks.slstm_block_apply(sp, h, cfg=cfg, ctx=ctx_i, state=se)
+        return h, (mys, sst if stateful else None)
+
+    extra = (cache["mlstm"], cache["slstm"]) if mode == "decode" else None
+    h, ys = _run_stack(super_body, h, (m_p, s_p), G, ctx=ctx, seg="super",
+                       unroll=unroll, xs_extra=extra)
+
+    if stateful:
+        mys, sys_ = ys
+        return h, {"mlstm": mys, "slstm": sys_}
+    return h, None
+
+
+def _encdec_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
+        cache_len=None):
+    # encoder runs at train/prefill; its output memory K/V live in the cache
+    if mode == "decode":
+        h = embed(params, cfg, batch["token"], ctx)
+        xkv = cache["cross_kv"]
+    else:
+        enc_h = batch["audio"]             # (B, F, d) — frontend stub output
+
+        def enc_body(h, p_i, ctx_i, _):
+            return blocks.enc_block_apply(p_i, h, cfg=cfg, ctx=ctx_i), None
+
+        enc_h, _ = _run_stack(enc_body, enc_h, params["blocks"]["enc"],
+                              cfg.n_enc_layers, ctx=ctx, seg="enc",
+                              unroll=unroll)
+        memory = modules.rmsnorm(params["enc_norm"], enc_h)
+        h = embed(params, cfg, batch["tokens"], ctx)
+
+        # per-decoder-layer cross K/V from encoder memory
+        static, arrays = _seg_policy(ctx, "dec")
+
+        def kv_one(dp, ctx_i):
+            return attention.cross_attn_kv(dp["xattn"], memory,
+                                           n_kv_heads=cfg.n_kv_heads,
+                                           head_dim=cfg.head_dim, ctx=ctx_i,
+                                           name="dec.xattn")
+        if unroll:
+            kvs = [kv_one(jax.tree.map(lambda x: x[i], params["blocks"]["dec"]),
+                          _step_ctx(ctx, static,
+                                    {k: v[i] for k, v in arrays.items()},
+                                    prefix=f"L{i}"))
+                   for i in range(cfg.n_layers)]
+            xkv = jax.tree.map(lambda *t: jnp.stack(t), *kvs)
+        else:
+            def kv_scan(_, xs):
+                dp, sl = xs
+                return None, kv_one(dp, _step_ctx(ctx, static, sl))
+            _, xkv = jax.lax.scan(kv_scan, None,
+                                  (params["blocks"]["dec"], arrays or {}),
+                                  length=cfg.n_layers)
+        xkv = {"k": xkv[0], "v": xkv[1]}
+
+    S = h.shape[1] if mode != "decode" else None
+
+    def dec_body(h, p_i, ctx_i, extra_i):
+        dp, kv_i = p_i
+        if mode == "decode":
+            return blocks.dec_block_apply(dp, h, (kv_i["k"], kv_i["v"]),
+                                          cfg=cfg, ctx=ctx_i, cache=extra_i)
+        return blocks.dec_block_apply(dp, h, (kv_i["k"], kv_i["v"]), cfg=cfg,
+                                      ctx=ctx_i, return_kv=(mode == "prefill"))
+
+    extra = cache["self"] if mode == "decode" else None
+    h, ys = _run_stack(dec_body, h, (params["blocks"]["dec"], xkv),
+                       cfg.n_layers, ctx=ctx, seg="dec", unroll=unroll,
+                       xs_extra=extra)
+
+    if mode == "decode":
+        return h, {"self": ys, "cross_kv": cache["cross_kv"]}
+    if mode == "prefill":
+        return h, {"self": _finish_prefill_cache(ys, window=None, seq=S, cache_len=cache_len),
+                   "cross_kv": xkv}
+    return h, None

@@ -1,0 +1,249 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM (scalar).
+
+mLSTM: per-head matrix memory C in R^{dk x dv} with exponential gating,
+  C_t = f_t C_{t-1} + i_t k_t v_t^T,   n_t = f_t n_{t-1} + i_t k_t
+  y_t = (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))
+Prefill/train runs the chunkwise-parallel form (within-chunk attention-like
+quadratic term + cross-chunk recurrent state), decode is a single state
+update — O(1) per token, which is what makes xlstm run ``long_500k``.
+
+sLSTM: scalar memory with a true recurrent weight R on the hidden state —
+inherently sequential, executed with ``lax.scan``.
+
+Stabilization follows the paper: gates live in log space with a running max
+tracker m_t; the stored state is the stabilized one (true state = exp(m) x
+stored), so exp() never overflows.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules
+from repro.models.modules import ExecContext, join
+
+MLSTM_CHUNK = 64
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, n_heads: int, proj_factor: float = 2.0,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    d_inner = int(d_model * proj_factor)
+    assert d_inner % n_heads == 0
+    ks = jax.random.split(key, 7)
+    return {
+        "up": modules.linear_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "q": modules.linear_init(ks[1], d_inner, d_inner, dtype=dtype),
+        "k": modules.linear_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "v": modules.linear_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "if_gate": modules.linear_init(ks[4], d_inner, 2 * n_heads, bias=True, dtype=dtype),
+        "o_norm": modules.rmsnorm_init(d_inner, dtype),
+        "down": modules.linear_init(ks[5], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(carry, ins, head_dim: int):
+    """Chunkwise-parallel mLSTM step.
+
+    carry: (C, n, m) — C: (B,H,D,D), n: (B,H,D), m: (B,H); stabilized state.
+    ins: q,k,v: (B,L,H,D); log_i, log_f: (B,L,H).
+    Returns updated carry and y: (B,L,H,D).
+    """
+    C, n, m = carry
+    q, k, v, log_i, log_f = ins
+    B, L, H, D = q.shape
+    # NOTE: k arrives pre-scaled by head_dim**-0.5 from mlstm_apply; do not
+    # rescale q here or the chunk path diverges from the decode recurrence.
+
+    cf = jnp.cumsum(log_f, axis=1).transpose(0, 2, 1)      # (B,H,L)
+    li = log_i.transpose(0, 2, 1)                          # (B,H,L)
+
+    # intra-chunk log weights: w[t,s] = cf_t - cf_s + li_s  (s <= t)
+    log_D = cf[:, :, :, None] - cf[:, :, None, :] + li[:, :, None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    log_D = jnp.where(tri, log_D, NEG_INF)
+
+    # carry contribution at step t: exp(cf_t + m)
+    log_carry = cf + m[:, :, None]                         # (B,H,L)
+
+    m_t = jnp.maximum(jnp.max(log_D, axis=-1), log_carry)  # (B,H,L)
+    m_t = jnp.maximum(m_t, NEG_INF)
+
+    Dmat = jnp.exp(log_D - m_t[..., None])                 # (B,H,L,L)
+    cw = jnp.exp(log_carry - m_t)                          # (B,H,L)
+
+    qh = q.transpose(0, 2, 1, 3)                           # (B,H,L,D)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+
+    scores = (qh @ kh.transpose(0, 1, 3, 2)) * Dmat        # (B,H,L,L)
+    num = scores @ vh + jnp.einsum("bhld,bhdv->bhlv", qh, C) * cw[..., None]
+    den = jnp.einsum("bhls,bhsd,bhld->bhl", Dmat, kh, qh) + \
+        jnp.einsum("bhld,bhd->bhl", qh, n) * cw
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    y = num / den[..., None]                               # (B,H,L,D)
+
+    # end-of-chunk carry update
+    log_wend = cf[:, :, -1:] - cf + li                     # (B,H,L)
+    m_end = jnp.maximum(cf[:, :, -1] + m, jnp.max(log_wend, axis=-1))
+    w_end = jnp.exp(log_wend - m_end[:, :, None])          # (B,H,L)
+    cdec = jnp.exp(cf[:, :, -1] + m - m_end)               # (B,H)
+    C_new = cdec[..., None, None] * C + jnp.einsum("bhs,bhsd,bhsv->bhdv",
+                                                   w_end, kh, vh)
+    n_new = cdec[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w_end, kh)
+    return (C_new, n_new, m_end), y.transpose(0, 2, 1, 3)  # (B,L,H,D)
+
+
+def mlstm_apply(params, x: jax.Array, *, n_heads: int, proj_factor: float,
+                ctx: ExecContext, name: str,
+                state: Optional[Dict[str, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    B, S, d_model = x.shape
+    d_inner = int(d_model * proj_factor)
+    head_dim = d_inner // n_heads
+
+    uz = modules.quant_linear(params["up"], x, name=join(name, "up"), ctx=ctx)
+    u, z = jnp.split(uz, 2, axis=-1)                       # (B,S,d_inner)
+
+    q = modules.quant_linear(params["q"], u, name=join(name, "q"), ctx=ctx)
+    k = modules.quant_linear(params["k"], u, name=join(name, "k"), ctx=ctx)
+    v = modules.quant_linear(params["v"], u, name=join(name, "v"), ctx=ctx)
+    q = q.reshape(B, S, n_heads, head_dim).astype(jnp.float32)
+    k = k.reshape(B, S, n_heads, head_dim).astype(jnp.float32) * head_dim ** -0.5
+    v = v.reshape(B, S, n_heads, head_dim).astype(jnp.float32)
+
+    gif = modules.quant_linear(params["if_gate"], u, name=join(name, "if_gate"),
+                               ctx=ctx).astype(jnp.float32)
+    log_i, f_pre = jnp.split(gif, 2, axis=-1)              # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_pre + 3.0)                # bias toward remember
+
+    if state is None:
+        C0 = jnp.zeros((B, n_heads, head_dim, head_dim), jnp.float32)
+        n0 = jnp.zeros((B, n_heads, head_dim), jnp.float32)
+        m0 = jnp.full((B, n_heads), NEG_INF, jnp.float32)
+        L = MLSTM_CHUNK
+        if S % L == 0 and S > L:
+            nc = S // L
+
+            def resh(t):
+                return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+            def step(c, ins):
+                return _mlstm_chunk(c, ins, head_dim)
+
+            (C, n, m), ys = jax.lax.scan(
+                step, (C0, n0, m0),
+                (resh(q), resh(k), resh(v), resh(log_i), resh(log_f)))
+            y = jnp.moveaxis(ys, 0, 1).reshape(B, S, n_heads, head_dim)
+        else:
+            (C, n, m), y = _mlstm_chunk((C0, n0, m0),
+                                        (q, k, v, log_i, log_f), head_dim)
+        new_state = {"C": C, "n": n, "m": m}
+    else:
+        C, n, m = state["C"], state["n"], state["m"]
+        li, lf = log_i[:, 0], log_f[:, 0]                  # (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        fw = jnp.exp(lf + m - m_new)
+        iw = jnp.exp(li - m_new)
+        qh, kh, vh = q[:, 0], k[:, 0], v[:, 0]             # (B,H,D)
+        C = fw[..., None, None] * C + iw[..., None, None] * (
+            kh[..., :, None] * vh[..., None, :])
+        n = fw[..., None] * n + iw[..., None] * kh
+        num = jnp.einsum("bhd,bhdv->bhv", qh, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qh, n)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]                # (B,1,H,D)
+        new_state = {"C": C, "n": n, "m": m_new}
+
+    y = y.reshape(B, S, d_inner)
+    y = modules.rmsnorm(params["o_norm"], y)
+    y = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = modules.quant_linear(params["down"], y, name=join(name, "down"), ctx=ctx)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    d_ff = int(d_model * 8 / 3) // 128 * 128 or d_model
+    return {
+        "wx": modules.linear_init(ks[0], d_model, 4 * d_model, bias=True, dtype=dtype),
+        "r": modules.linear_init(ks[1], d_model, 4 * d_model, dtype=dtype),
+        "o_norm": modules.rmsnorm_init(d_model, dtype),
+        "ffn_up": modules.linear_init(ks[2], d_model, d_ff, dtype=dtype),
+        "ffn_down": modules.linear_init(ks[3], d_ff, d_model, dtype=dtype),
+    }
+
+
+def slstm_apply(params, x: jax.Array, *, ctx: ExecContext, name: str,
+                state: Optional[Dict[str, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Scalar-memory LSTM with exponential gating and recurrent weights.
+
+    state: {"c","n","h","m": (B, d)}.  Sequential over time — the recurrent
+    matrix R couples h_{t-1} into the gates, so no parallel form exists; this
+    is the paper's own trade-off for sLSTM blocks.
+    """
+    B, S, d = x.shape
+    wx_all = modules.quant_linear(params["wx"], x, name=join(name, "wx"),
+                                  ctx=ctx).astype(jnp.float32)  # (B,S,4d)
+    rw = params["r"]["w"].astype(jnp.float32)                   # (d, 4d)
+
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), NEG_INF, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    def cell(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t + h @ rw                                # (B, 4d)
+        zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        log_i = it
+        log_f = jax.nn.log_sigmoid(ft + 3.0)
+        m_new = jnp.maximum(log_f + m, log_i)
+        iw = jnp.exp(log_i - m_new)
+        fw = jnp.exp(log_f + m - m_new)
+        c = fw * c + iw * zt
+        n = jnp.maximum(fw * n + iw, jnp.exp(-m_new))
+        h = jax.nn.sigmoid(ot) * (c / n)
+        return (c, n, h, m_new), h
+
+    (c, n, h, m), hs = jax.lax.scan(cell, (c0, n0, h0, m0),
+                                    wx_all.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)              # (B,S,d)
+    y = modules.rmsnorm(params["o_norm"], y)
+    u = modules.quant_linear(params["ffn_up"], y, name=join(name, "ffn_up"), ctx=ctx)
+    u = jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(y.dtype)
+    out = modules.quant_linear(params["ffn_down"], u, name=join(name, "ffn_down"), ctx=ctx)
+    new_state = {"c": c, "n": n, "h": h, "m": m}
+    return out, new_state
+
+
+def init_mlstm_state(batch: int, n_heads: int, head_dim: int) -> Dict[str, jax.Array]:
+    return {
+        "C": jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, n_heads), NEG_INF, jnp.float32),
+    }
+
+
+def init_slstm_state(batch: int, d_model: int) -> Dict[str, jax.Array]:
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.full((batch, d_model), NEG_INF, jnp.float32),
+    }

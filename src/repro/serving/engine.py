@@ -1,0 +1,105 @@
+"""Batched serving engine with FPX-aware execution.
+
+Wraps the model zoo's prefill/decode under jit, carries the decode cache,
+and exposes ``generate`` for batched requests.  The engine holds an
+``ExecContext`` whose precision policy can be swapped per request wave —
+this is how the FPX controller's (model, gamma) decision becomes live
+weights-at-bits execution.
+
+The latency attributed to each generation comes from the analytic TPU model
+(core.latency); on-CPU wall time is meaningless for the paper's question.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import latency as lat_mod
+from repro.models import transformer
+from repro.models.modules import ExecContext
+from repro.serving import sampler as sampler_mod
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array            # (B, prompt + new)
+    new_tokens: jax.Array        # (B, max_new)
+    latency_s: float             # modeled TPU action latency (decision level)
+    logits_last: Optional[jax.Array] = None
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *,
+                 ctx: Optional[ExecContext] = None,
+                 max_ctx: int = 4096,
+                 latency_cfg: Optional[ModelConfig] = None,
+                 avg_bits: float = 16.0,
+                 unroll: bool = True):
+        """``latency_cfg``: config used for the latency model (the full-scale
+        model that this sim-scale model represents); defaults to ``cfg``.
+        ``unroll=True`` executes layer loops in python — right for the small
+        models served on CPU, and it makes per-name precision policies apply
+        directly."""
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx or ExecContext()
+        self.max_ctx = max_ctx
+        self.latency_cfg = latency_cfg or cfg
+        self.avg_bits = avg_bits
+        self.unroll = unroll
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
+                                             unroll=unroll,
+                                             cache_len=max_ctx))
+        self._decode = jax.jit(
+            lambda p, b, c: transformer.decode_step(p, cfg, b, c, self.ctx,
+                                                    unroll=unroll))
+
+    def set_policy(self, policy: Dict[str, int], default_bits: int = 8,
+                   avg_bits: Optional[float] = None) -> None:
+        """Swap the live FPX assignment (re-jits on next call)."""
+        self.ctx = dataclasses.replace(self.ctx, policy=policy,
+                                       default_bits=default_bits)
+        if avg_bits is not None:
+            self.avg_bits = avg_bits
+        cfg, max_ctx, unroll = self.cfg, self.max_ctx, self.unroll
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
+                                             unroll=unroll, cache_len=max_ctx))
+        self._decode = jax.jit(
+            lambda p, b, c: transformer.decode_step(p, cfg, b, c, self.ctx,
+                                                    unroll=unroll))
+
+    def generate(self, batch: Dict[str, jax.Array], *, max_new: int = 16,
+                 key=None, temp: float = 0.0) -> GenerationResult:
+        """batch: {"tokens": (B, S)} (+ vision/audio for those archs)."""
+        tokens = jnp.asarray(batch["tokens"])
+        B, S = tokens.shape
+        assert S + max_new <= self.max_ctx, (S, max_new, self.max_ctx)
+        logits, cache = self._prefill(self.params, batch)
+        outs = []
+        for i in range(max_new):
+            if temp <= 0.0:
+                nxt = sampler_mod.greedy(logits)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = sampler_mod.temperature(logits, sub, temp)
+            outs.append(nxt)
+            if i + 1 < max_new:
+                logits, cache = self._decode(self.params, {"token": nxt}, cache)
+        new = jnp.concatenate(outs, axis=1)
+        t = lat_mod.decision_latency(self.latency_cfg, prompt_len=S,
+                                     gen_tokens=max_new, w_bits=self.avg_bits)
+        return GenerationResult(tokens=jnp.concatenate([tokens, new], axis=1),
+                                new_tokens=new, latency_s=t,
+                                logits_last=logits)
+
+    def score(self, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Full-sequence logits (B, S, V) under the current policy."""
+        return transformer.forward(self.params, self.cfg, batch, self.ctx,
+                                   unroll=self.unroll)

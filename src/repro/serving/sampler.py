@@ -1,0 +1,22 @@
+"""Token samplers for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, key=None) -> jax.Array:
+    """logits: (B, 1, V) -> (B, 1) int32."""
+    return logits.argmax(axis=-1).astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key, temp: float = 1.0,
+                top_k: int = 0) -> jax.Array:
+    lg = logits.astype(jnp.float32) / max(temp, 1e-4)
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    B = lg.shape[0]
+    flat = lg.reshape(B, -1)
+    toks = jax.random.categorical(key, flat, axis=-1)
+    return toks.reshape(B, 1).astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Request scheduler: slot-based continuous batching over the engine.
+
+Requests arrive with deadlines (latency-sensitive serving); the scheduler
+packs them into fixed batch slots, pads prompts to a common length, and
+tracks modeled completion latency per request.  Simple by design — the
+paper's contribution is the precision controller, not the batcher — but it
+exercises the real multi-request path the benchmarks and the serve example
+drive.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    deadline_s: Optional[float] = None
+    extra: Optional[Dict] = None  # vision/audio inputs
+
+    result_tokens: Optional[np.ndarray] = None
+    latency_s: Optional[float] = None
+    met_deadline: Optional[bool] = None
+
+
+class Scheduler:
+    def __init__(self, engine: ServingEngine, *, batch_slots: int = 8,
+                 pad_id: int = 0):
+        self.engine = engine
+        self.slots = batch_slots
+        self.pad_id = pad_id
+        self.queue: Deque[Request] = deque()
+        self.done: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _make_batch(self, reqs: List[Request]) -> Dict[str, jnp.ndarray]:
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.full((len(reqs), S), self.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt   # left-pad: ragged prompts
+        batch = {"tokens": jnp.asarray(toks)}
+        if reqs[0].extra:
+            for k, v in reqs[0].extra.items():
+                batch[k] = jnp.stack([jnp.asarray(r.extra[k]) for r in reqs])
+        return batch
+
+    def step(self) -> List[Request]:
+        """Serve one wave of up to ``batch_slots`` queued requests."""
+        if not self.queue:
+            return []
+        wave = [self.queue.popleft()
+                for _ in range(min(self.slots, len(self.queue)))]
+        max_new = max(r.max_new for r in wave)
+        res = self.engine.generate(self._make_batch(wave), max_new=max_new)
+        new = np.asarray(res.new_tokens)
+        for i, r in enumerate(wave):
+            r.result_tokens = new[i, :r.max_new]
+            r.latency_s = res.latency_s
+            if r.deadline_s is not None:
+                r.met_deadline = res.latency_s <= r.deadline_s
+        self.done.extend(wave)
+        return wave
+
+    def run(self) -> List[Request]:
+        while self.queue:
+            self.step()
+        return self.done

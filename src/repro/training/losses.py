@@ -1,0 +1,31 @@
+"""Losses: causal-LM cross entropy (+ z-loss) with padding masks."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_lm_loss(logits: jax.Array, tokens: jax.Array,
+                   mask: Optional[jax.Array] = None,
+                   z_loss: float = 1e-4) -> Tuple[jax.Array, jax.Array]:
+    """logits: (B, S, V); tokens: (B, S).  Predict token[t+1] from logits[t].
+
+    Returns (mean loss, mean accuracy)."""
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    else:
+        mask = mask[:, 1:].astype(jnp.float32)
+
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    # z-loss keeps the softmax normalizer bounded (stability at bf16)
+    loss = loss + z_loss * ((lse ** 2) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    acc = ((logits.argmax(-1) == targets) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, acc

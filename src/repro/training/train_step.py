@@ -1,0 +1,53 @@
+"""Training step: forward, loss, backward, AdamW update.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings (launch/train.py) or direct CPU execution (examples).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.modules import ExecContext
+from repro.training import losses
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_loss_fn(cfg: ModelConfig, ctx: Optional[ExecContext] = None):
+    ctx = ctx or ExecContext()
+
+    def loss_fn(params, batch):
+        logits = transformer.forward(params, cfg, batch, ctx)
+        loss, acc = losses.causal_lm_loss(logits, batch["tokens"],
+                                          batch.get("mask"))
+        return loss, acc
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    ctx: Optional[ExecContext] = None,
+                    remat: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, ctx)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+
+    def train_step(params, opt_state, batch) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        new_params, new_state = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "accuracy": acc,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree.leaves(grads)))}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, dtype=jnp.float32):
+    params = transformer.init_params(key, cfg, dtype)
+    return params, adamw_init(params)

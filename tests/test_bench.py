@@ -1,0 +1,126 @@
+"""Benchmark environment tests: the latency-reward mechanics themselves.
+
+These verify the paper's qualitative structure *independent of any model*:
+oracles with lower latency earn more; wrong decisions lose; the SF frame
+cap creates a latency floor."""
+import numpy as np
+import pytest
+
+from repro.bench import elo
+from repro.bench.env import Teacher
+from repro.bench.hft import HFTBench, HFTConfig, run_session, HOLD
+from repro.bench.streetfighter import SFGame, play_match
+
+
+class Oracle:
+    """Perfect decisions at a fixed latency."""
+
+    def __init__(self, teacher, latency_s, flip=0.0, seed=0, n_actions=3):
+        self.t = teacher
+        self.latency_s = latency_s
+        self.flip = flip
+        self.rng = np.random.default_rng(seed)
+        self.n_actions = n_actions
+
+    def decide(self, obs):
+        feats = self._decode(obs["tokens"])
+        a = int(self.t.label(feats))
+        if self.flip and self.rng.random() < self.flip:
+            a = int(self.rng.integers(0, self.n_actions))
+        return a, self.latency_s
+
+    def _decode(self, toks):
+        k = self.t.n_features
+        f = np.asarray(toks[1:1 + k])
+        return (f - 16) - np.arange(k) * self.t.n_values
+
+
+def _teacher(env):
+    return env.teacher
+
+
+def test_hft_fast_oracle_profits():
+    env = HFTBench()
+    res = run_session(env, Oracle(_teacher(env), 0.05), seed=0)
+    assert res["daily_yield"] > 5.0
+
+
+def test_hft_latency_monotone():
+    env = HFTBench()
+    ys = [run_session(env, Oracle(_teacher(env), lat), seed=0)["daily_yield"]
+          for lat in (0.05, 0.7, 1.5, 5.0)]
+    assert all(a >= b for a, b in zip(ys, ys[1:]))
+    assert ys[-1] <= 0.5     # slower than every window's decay: nothing left
+
+
+def test_hft_bad_decisions_lose_even_if_fast():
+    env = HFTBench()
+    res = run_session(env, Oracle(_teacher(env), 0.05, flip=0.9, seed=1),
+                      seed=0)
+    good = run_session(env, Oracle(_teacher(env), 0.05), seed=0)
+    assert res["daily_yield"] < good["daily_yield"]
+    assert res["daily_yield"] < 0
+
+
+def test_hft_cooling_window_limits_trades():
+    cfg = HFTConfig(cooling_s=600.0)
+    env = HFTBench(cfg)
+    res = run_session(env, Oracle(_teacher(env), 0.05), seed=0)
+    env2 = HFTBench(HFTConfig(cooling_s=10.0))
+    res2 = run_session(env2, Oracle(_teacher(env2), 0.05), seed=0)
+    assert res["trades"] < res2["trades"]
+
+
+def test_sf_fast_oracle_beats_slow_oracle():
+    game = SFGame()
+    fast = Oracle(game.teacher, 0.15, n_actions=5)
+    slow = Oracle(game.teacher, 1.2, n_actions=5)
+    wins = sum(play_match(fast, slow, rounds=1, seed=s) == 0
+               for s in range(9))
+    assert wins >= 7
+
+
+def test_sf_quality_matters_at_equal_speed():
+    game = SFGame()
+    good = Oracle(game.teacher, 0.2, n_actions=5)
+    bad = Oracle(game.teacher, 0.2, flip=0.9, seed=3, n_actions=5)
+    wins = sum(play_match(good, bad, rounds=1, seed=s) == 0
+               for s in range(9))
+    assert wins >= 7
+
+
+def test_sf_latency_floor():
+    """Below the ~200ms action slot, extra speed gives no edge (paper 5.3)."""
+    game = SFGame()
+    a = Oracle(game.teacher, 0.02, n_actions=5)
+    b = Oracle(game.teacher, 0.15, n_actions=5)
+    wins = sum(play_match(a, b, rounds=1, seed=s) == 0 for s in range(20))
+    assert 6 <= wins <= 14          # statistically indistinguishable
+
+
+def test_elo_updates_and_ordering():
+    names = ["strong", "weak"]
+    ratings = elo.tournament(
+        names, lambda i, j, s: 1.0 if i == 0 else 0.0, rounds_per_pair=10)
+    assert ratings["strong"] > 0 > ratings["weak"]
+
+
+def test_env_reward_depends_on_evolved_state():
+    """Same action, later landing -> different reward (paper Eq. 5)."""
+    env = HFTBench()
+    env.reset(0)
+    obs = env.next_window()
+    cls = int(env._cur["cls"])
+    if cls == HOLD:
+        while cls == HOLD:
+            env.ev_i += 1
+            obs = env.next_window()
+            cls = int(env._cur["cls"])
+    ev = env._cur
+    r_fast, _, _ = env.step(cls, 0.05)
+    env._cur = ev
+    env.ev_i -= 1
+    env.cash = env.cfg.initial_cash
+    env.ev_i += 1
+    r_slow, _, _ = env.step(cls, ev["decay"] * 0.9)
+    assert r_fast > r_slow

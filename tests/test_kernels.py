@@ -1,0 +1,84 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels import ops, ref
+from repro.kernels.fp8_matmul import fp8_matmul
+from repro.kernels.fpx_matmul import fpx_matmul
+
+
+def _rand(shape, seed, scale=0.3):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (128, 256, 128),
+                                   (256, 128, 256)])
+def test_fp8_kernel_matches_ref(M, K, N):
+    x, w = _rand((M, K), 0), _rand((K, N), 1, 0.05)
+    xq, wq = quant.quantize(x, 8), quant.quantize(w, 8)
+    got = fp8_matmul(xq.data, wq.data, xq.scale, wq.scale)
+    want = ref.fp8_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (128, 256, 256)])
+def test_fpx_kernel_matches_ref(M, K, N):
+    x, w = _rand((M, K), 2), _rand((K, N), 3, 0.05)
+    xq = quant.quantize(x, 8)
+    wq = quant.quantize(w, 4)
+    got = fpx_matmul(xq.data, wq.data, xq.scale, wq.scale)
+    want = ref.fp4_matmul_ref(x, w, x_bits=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape,xb,wb", list(itertools.product(
+    [(8, 96, 200), (130, 260, 120), (1, 48, 48)], [4, 8, 16], [4, 8])))
+def test_ops_quant_matmul_sweep(shape, xb, wb):
+    """The jit wrapper (pad/unpad + dispatch) matches Eq. 2 exactly."""
+    M, K, N = shape
+    x, w = _rand((M, K), M + K), _rand((K, N), N, 0.05)
+    got = ops.quant_matmul(x, w, x_bits=xb, w_bits=wb)
+    want = quant.quant_matmul_ref(x, w, xb, wb)
+    scale = max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_dtype_preserved(dtype):
+    x = _rand((16, 64), 5).astype(dtype)
+    w = _rand((64, 32), 6, 0.05)
+    out = ops.quant_matmul(x, w, x_bits=8, w_bits=4)
+    assert out.dtype == dtype
+    assert out.shape == (16, 32)
+
+
+def test_ops_batched_leading_dims():
+    x = _rand((2, 3, 64), 7)
+    w = _rand((64, 32), 8, 0.05)
+    out = ops.quant_matmul(x, w, x_bits=8, w_bits=8)
+    assert out.shape == (2, 3, 32)
+    flat = ops.quant_matmul(x.reshape(6, 64), w, x_bits=8, w_bits=8)
+    np.testing.assert_allclose(np.asarray(out).reshape(6, 32),
+                               np.asarray(flat), rtol=1e-5)
+
+
+def test_quant_linear_pallas_path_matches_jnp_path():
+    """modules.quant_linear(use_pallas=True) == the jnp fallback."""
+    from repro.models import modules
+    key = jax.random.PRNGKey(0)
+    p = modules.linear_init(key, 64, 48)
+    x = _rand((4, 10, 64), 9)
+    ctx_j = modules.ExecContext(default_bits=4)
+    ctx_p = modules.ExecContext(default_bits=4, use_pallas=True)
+    yj = modules.quant_linear(p, x, name="l", ctx=ctx_j)
+    yp = modules.quant_linear(p, x, name="l", ctx=ctx_p)
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(yp),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,58 @@
+"""Analytic TPU latency model invariants (paper Table 4 structure)."""
+import pytest
+
+from repro.configs import QWEN_FULL, get_config
+from repro.core import latency as L
+
+
+@pytest.mark.parametrize("name", sorted(QWEN_FULL))
+def test_ladder_ordering(name):
+    cfg = QWEN_FULL[name]
+    lad = L.quant_ladder(cfg)
+    assert lad["FP4"] < lad["FP8"] < lad["FP16"]
+    assert lad["W4A16(int)"] > lad["FP8"]       # dequant overhead (Table 4)
+
+
+def test_bigger_model_slower():
+    t = [L.decision_latency(QWEN_FULL[n], w_bits=8)
+         for n in ("qwen2.5-1.5b", "qwen2.5-3b", "qwen2.5-7b", "qwen2.5-14b")]
+    assert t == sorted(t)
+
+
+def test_fractional_bits_interpolate():
+    cfg = QWEN_FULL["qwen2.5-7b"]
+    t4 = L.decision_latency(cfg, w_bits=4)
+    t8 = L.decision_latency(cfg, w_bits=8)
+    t6 = L.decision_latency(cfg, w_bits=6)
+    assert t4 < t6 < t8
+    assert abs(t6 - 0.5 * (t4 + t8)) < 1e-3 * t8
+
+
+def test_gamma_monotone_latency():
+    cfg = QWEN_FULL["qwen2.5-14b"]
+    ts = [L.decision_latency(cfg, w_bits=L.gamma_to_avg_bits(g))
+          for g in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))
+
+
+def test_ratios_match_paper_regime():
+    """FP8 ~ 0.45-0.65x FP16; FP4 ~ 0.2-0.45x FP16 (paper Table 4 ratios)."""
+    for cfg in QWEN_FULL.values():
+        lad = L.quant_ladder(cfg)
+        assert 0.40 < lad["FP8"] / lad["FP16"] < 0.65
+        assert 0.15 < lad["FP4"] / lad["FP16"] < 0.45
+
+
+def test_sliding_window_bounds_decode_context():
+    sc = get_config("starcoder2-15b")
+    t_short = L.step_latency(sc, n_tokens=1, context=4096, w_bits=16)
+    t_long = L.step_latency(sc, n_tokens=1, context=500_000, w_bits=16)
+    # all layers windowed at 4096: long context costs the same
+    assert abs(t_long - t_short) / t_short < 0.01
+
+
+def test_multichip_scales():
+    cfg = QWEN_FULL["qwen2.5-14b"]
+    t1 = L.decision_latency(cfg, w_bits=8, hw=L.Hardware(n_chips=1))
+    t8 = L.decision_latency(cfg, w_bits=8, hw=L.Hardware(n_chips=8))
+    assert t8 < t1

@@ -1,0 +1,116 @@
+"""Property tests for the FP quantization core (paper Eq. 1-2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+SHAPES = st.sampled_from([(4, 8), (16, 16), (3, 130), (128, 128), (1, 7)])
+
+
+@st.composite
+def arrays(draw, max_scale=1e3):
+    shape = draw(SHAPES)
+    seed = draw(st.integers(0, 2**16))
+    scale = draw(st.floats(1e-4, max_scale))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(), st.sampled_from([4, 8]))
+def test_fake_quant_idempotent(x, bits):
+    q1 = quant.fake_quant(jnp.asarray(x), bits)
+    q2 = quant.fake_quant(q1, bits)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(), st.sampled_from([4, 8]))
+def test_fake_quant_bounded_error(x, bits):
+    """Relative (to absmax) error bounded by half the coarsest grid step."""
+    xj = jnp.asarray(x)
+    q = np.asarray(quant.fake_quant(xj, bits))
+    amax = np.abs(x).max()
+    if amax == 0:
+        return
+    # E2M1 worst step = 2 (between 4 and 6) over range 6 -> half-step 1/6.
+    # e4m3 clipped at 240: top binade [128, 240] has step 16 -> half-step
+    # 8/240 = 1/30 of absmax.
+    worst = (1.0 / 6.0) if bits == 4 else (1.0 / 30.0)
+    assert np.abs(q - x).max() <= amax * worst + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrays())
+def test_fp4_grid_membership(x):
+    """Quantized values / scale all land exactly on the E2M1 grid."""
+    xj = jnp.asarray(x)
+    amax = np.abs(x).max()
+    if amax == 0:
+        return
+    scale = amax / quant.FP4_RANGE
+    q = np.asarray(quant.fake_quant(xj, 4)) / scale
+    grid = np.asarray(quant.FP4_GRID)
+    dist = np.min(np.abs(q[..., None] - grid[None, None]), axis=-1)
+    assert dist.max() < 1e-4 * max(1.0, np.abs(q).max())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**16), st.sampled_from([(2, 8), (5, 16), (1, 64)]))
+def test_pack_unpack_roundtrip(seed, shape):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=shape).astype(np.uint8)
+    packed = quant.fp4_pack(jnp.asarray(codes))
+    un = np.asarray(quant.fp4_unpack(packed))
+    np.testing.assert_array_equal(un, codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrays(), st.sampled_from([4, 8]))
+def test_qtensor_matches_fake_quant(x, bits):
+    """Materialized quantize->dequantize == fake_quant (same numerics)."""
+    if x.shape[-1] % 2 != 0 and bits == 4:
+        x = x[..., : x.shape[-1] // 2 * 2]
+        if x.shape[-1] == 0:
+            return
+    xj = jnp.asarray(x)
+    qt = quant.quantize(xj, bits)
+    deq = np.asarray(quant.dequantize(qt))
+    fq = np.asarray(quant.fake_quant(xj, bits))
+    np.testing.assert_allclose(deq, fq, rtol=1e-5, atol=1e-6)
+
+
+def test_fp4_payload_bytes():
+    x = jnp.ones((8, 64))
+    qt = quant.quantize(x, 4)
+    assert qt.data.dtype == jnp.uint8
+    assert qt.data.shape == (8, 32)          # two codes per byte
+    assert qt.nbytes_payload == 8 * 64 // 2
+
+
+def test_fp8_range_clip():
+    x = jnp.asarray([[1e6, -1e6, 1.0, 0.0]])
+    qt = quant.quantize(x, 8)
+    deq = np.asarray(quant.dequantize(qt))
+    np.testing.assert_allclose(deq[0, 0], 1e6, rtol=0.05)
+
+
+def test_relative_error_zero_on_identity():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((16, 16)))
+    assert float(quant.relative_error(x, x)) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(arrays())
+def test_eq2_matmul_error_small_vs_fp16(x):
+    """Quantized matmul approximates the fp32 product (Eq. 2)."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((x.shape[-1], 24)).astype(np.float32) * 0.1
+    ref = x @ w
+    got8 = np.asarray(quant.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), 8, 8))
+    scale = max(np.abs(ref).max(), 1e-6)
+    assert np.abs(got8 - ref).max() / scale < 0.15

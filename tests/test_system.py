@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full FPX causal chain on a real (sim-scale) model: train -> calibrate
+(Algorithm 1) -> assign (Eq. 7) -> quantized serving -> latency/quality
+trade-off present; plus the latency-sensitive reward coupling on HFTBench.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.bench import agents as ag
+from repro.bench.env import Teacher
+from repro.bench.hft import HFTBench, run_session
+from repro.configs import get_config
+from repro.core import assign as A, calibrate as C, latency as L
+from repro.models import transformer as T
+from repro.models.modules import ExecContext
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """A small decision model trained enough to be clearly above chance."""
+    teacher = Teacher(n_features=8, n_values=6, n_classes=3, seed=3,
+                      hidden=48, temperature=0.5)
+    cfg = get_config("qwen-sim-3b")
+    params, acc = ag.train_decision_model(cfg, teacher, steps=200, batch=32,
+                                          prompt_len=16, seed=0)
+    return cfg, params, teacher
+
+
+def test_training_beats_chance(trained):
+    cfg, params, teacher = trained
+    acc = ag.eval_decision_accuracy(params, cfg, teacher, prompt_len=16,
+                                    n=256)
+    assert acc > 0.45            # 3-way chance = 0.33
+
+
+def test_fpx_end_to_end(trained):
+    """Calibrate -> assign -> the full gamma sweep is well-behaved:
+    fp8 ~ fp16; latency strictly improves with gamma; FP4 never helps."""
+    cfg, params, teacher = trained
+    rng = np.random.default_rng(0)
+    batches = [ag.decision_batch(teacher, rng, batch=4, prompt_len=16)
+               for _ in range(2)]
+    eps = C.calibrate(params, cfg, batches)
+    assert len(eps) == cfg.n_layers * 7
+
+    acc16 = ag.eval_decision_accuracy(params, cfg, teacher, prompt_len=16,
+                                      n=256)
+    accs, lats = [], []
+    full = get_config("qwen2.5-3b")
+    for g in (0.0, 0.5, 1.0):
+        asn = A.assign_precision(eps, g)
+        ctx = ExecContext(policy=asn, default_bits=8)
+        accs.append(ag.eval_decision_accuracy(params, cfg, teacher, ctx=ctx,
+                                              prompt_len=16, n=256))
+        lats.append(L.decision_latency(full, w_bits=A.avg_bits(asn)))
+    assert abs(accs[0] - acc16) < 0.08          # FP8 near-lossless
+    assert lats[0] > lats[1] > lats[2]          # gamma buys latency
+    assert accs[2] <= accs[0] + 0.04            # FP4 never *helps*
+
+
+def test_latency_reward_coupling(trained):
+    """Same decisions, different speed: reward must respond to latency
+    (paper Eq. 5)."""
+    cfg, params, teacher = trained
+    env = HFTBench()
+
+    def make_agent(latency_s):
+        spec = ag.AgentSpec(name="x", sim_cfg=cfg, params=params,
+                            full_cfg=get_config("qwen2.5-3b"))
+        return ag.LLMAgent(spec, n_actions=3, latency_override_s=latency_s)
+
+    y_fast = run_session(env, make_agent(0.1), seed=0)["daily_yield"]
+    y_slow = run_session(env, make_agent(2.5), seed=0)["daily_yield"]
+    assert y_fast > y_slow       # same decisions, faster fills
+
+
+def test_sharded_forward_matches_unsharded():
+    """The production sharding rules don't change numerics (1-device mesh)."""
+    from repro.launch import shardings as sh
+    from repro.launch.mesh import make_host_mesh
+    cfg = get_config("qwen-sim-1.5b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    want = T.forward(params, cfg, {"tokens": toks})
+    mesh = make_host_mesh()
+    with mesh:
+        p_sh = sh.param_shardings(params, mesh)
+        fn = jax.jit(lambda p, t: T.forward(p, cfg, {"tokens": t}),
+                     in_shardings=(p_sh, sh.token_sharding(mesh, 2)))
+        got = fn(params, toks)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=1e-4, atol=1e-4)
