@@ -32,6 +32,17 @@ def main() -> None:
     rows.append(("table4_latency", float(fp4_14b[2]) * 1e3,
                  f"fp4_14b_rel={fp4_14b[3]}"))
 
+    # --- Serving fleet: FPX routing vs static engines under traffic ------
+    import table_serving
+    ts = table_serving.main(verbose=False)
+    mixed = [r for r in ts if r[0] == "mixed"]
+    fleet = next(r for r in mixed if r[1] == "fleet-fpx")
+    best_static = max((r for r in mixed if r[1].startswith("static")),
+                      key=lambda r: float(r[8]))
+    rows.append(("table_serving", float(fleet[7]) * 1e3,
+                 f"goodput={fleet[8]}_vs_static{best_static[8]}"
+                 f":hit={fleet[5]}"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

@@ -75,6 +75,22 @@ def select_for_budget(grid: Sequence[Candidate], budget_s: float,
     return max(feasible, key=quality)
 
 
+def select_for_slack(grid: Sequence[Candidate], deadline_s: float,
+                     waits_s: Sequence[float],
+                     quality: Callable[[Candidate], float]) -> int:
+    """``select_for_budget`` for a loaded fleet: each candidate carries a
+    queue wait, so the effective latency held against the deadline is
+    ``service + wait`` (the request's *remaining slack* after queueing).
+    Quality ties break toward the least-loaded candidate, which makes a
+    pool of identical engines degrade gracefully into least-loaded
+    round-robin.  Returns the index into ``grid``."""
+    adj = [dataclasses.replace(c, latency_s=c.latency_s + w)
+           for c, w in zip(grid, waits_s)]
+    pick = select_for_budget(adj, deadline_s,
+                             lambda c: (quality(c), -c.latency_s))
+    return adj.index(pick)
+
+
 def pareto_frontier(grid: Sequence[Candidate],
                     quality: Callable[[Candidate], float]) -> List[Candidate]:
     """Latency/quality Pareto set (Figure 1a)."""

@@ -1,0 +1,52 @@
+"""Serving subsystem: from single-engine waves to a deadline-aware fleet.
+
+Two serving paths share this package:
+
+* **Real-compute path** — :mod:`engine` wraps prefill/decode of an actual
+  sim-scale model under jit with a swappable FPX precision policy;
+  :mod:`scheduler` batches queued requests into padded waves on top of it.
+  Latency is *attributed* from the analytic TPU model, tokens are real.
+
+* **Traffic-scale path** — the fleet simulator.  Its contract, end to end:
+
+  - **Clock.**  One global notion of simulated time, denominated in the
+    analytic roofline model's seconds (``core.latency``).  Traffic
+    timestamps and engine-side prefill/decode costs are drawn from the
+    same model, so arrival pressure and service capacity are directly
+    comparable numbers.
+  - **Traffic** (:mod:`traffic`) draws seeded, replayable request streams:
+    per-class arrival processes (Poisson / bursty MMPP), deadline
+    distributions, prompt/decode shapes, reward weights.
+  - **Continuous batching** (:mod:`continuous`) gives each engine
+    operating point ``slots`` decode lanes with earliest-deadline-first
+    admission between decode steps, per-request modeled latency, and a
+    drop/degrade admission policy for requests that cannot meet their
+    deadline.
+  - **Fleet** (:mod:`fleet`) routes each request across a pool of
+    (model, gamma) operating points via ``fpx.select_for_slack`` —
+    best quality whose service time fits the request's remaining
+    deadline slack — and feeds realized on-time reward back into a
+    per-traffic-class ``fpx.OnlineSelector``.
+  - **Metrics** (:mod:`metrics`) reduces retired requests to SLO numbers:
+    deadline hit-rate, p50/p99 modeled latency, and goodput (reward from
+    on-time actions only).
+
+The two paths meet at the operating point: the same ``fpx.Candidate``
+that parameterizes a simulated engine can be applied to a live
+``ServingEngine`` via ``set_policy``.  Fusing them fully (admitting real
+prompts mid-flight) needs KV-cache paging — tracked in ROADMAP.
+"""
+from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.engine import GenerationResult, ServingEngine
+from repro.serving.fleet import FleetRouter, pool_candidates
+from repro.serving.metrics import SLOReport, summarize
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.traffic import (SCENARIOS, SimRequest, TrafficClass,
+                                   generate, scenario)
+
+__all__ = [
+    "ContinuousBatcher", "LatencyProfile", "GenerationResult",
+    "ServingEngine", "FleetRouter", "pool_candidates", "SLOReport",
+    "summarize", "Request", "Scheduler", "SCENARIOS", "SimRequest",
+    "TrafficClass", "generate", "scenario",
+]

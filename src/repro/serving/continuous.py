@@ -1,0 +1,220 @@
+"""Continuous batching on the analytic-latency clock.
+
+The wave :class:`~repro.serving.scheduler.Scheduler` serves requests in
+padded batches with a barrier between waves: every request inherits the
+wave's makespan and a free decode slot stays idle until the whole wave
+drains.  This module removes the barrier.  A :class:`ContinuousBatcher`
+owns ``slots`` decode slots on one engine operating point; requests are
+admitted into free slots *between decode steps* (earliest-deadline-first
+among arrived requests), run for exactly their own ``max_new`` tokens, and
+release the slot the step they finish — the slot is reusable immediately,
+mid-flight of everyone else.
+
+Time is simulated: the batcher advances an engine-local clock by the
+roofline cost (core.latency) of each prefill and each batched decode step,
+so queueing delay, batch-size effects, and per-request service time all
+come out of the same analytic model the FPX controller plans with.  Real
+token generation stays in engine.py; the published follow-on for marrying
+the two is KV-cache paging (see ROADMAP).
+
+Admission control: before a request enters a slot the batcher projects its
+finish time.  If the projection already overshoots the deadline the
+``policy`` decides — ``"drop"`` rejects it (reward 0, no slot wasted, the
+paper's "a late action is worth nothing" regime) and ``"degrade"`` trims
+``max_new`` to the largest token budget that still fits, modeling partial
+/ truncated actions (and drops only when not even one token fits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core import latency as lat_mod
+from repro.core.latency import Hardware, V5E
+
+from repro.serving.traffic import SimRequest
+
+#: bucket decode contexts to this many tokens when memoizing step costs —
+#: the roofline varies slowly in context, and it keeps the cache small.
+_CTX_BUCKET = 64
+
+
+class LatencyProfile:
+    """Memoized analytic costs of one (model config, avg_bits) point."""
+
+    def __init__(self, cfg: ModelConfig, avg_bits: float, *,
+                 hw: Hardware = V5E):
+        self.cfg = cfg
+        self.avg_bits = avg_bits
+        self.hw = hw
+        self._prefill: Dict[int, float] = {}
+        self._step: Dict[Tuple[int, int], float] = {}
+        self._service: Dict[Tuple[int, int], float] = {}
+
+    def prefill_s(self, prompt_len: int) -> float:
+        t = self._prefill.get(prompt_len)
+        if t is None:
+            t = lat_mod.step_latency(self.cfg, n_tokens=prompt_len,
+                                     w_bits=self.avg_bits, hw=self.hw)
+            self._prefill[prompt_len] = t
+        return t
+
+    def step_s(self, n_active: int, context: int) -> float:
+        """One batched decode step: ``n_active`` slots each emit a token."""
+        key = (n_active, max(1, context // _CTX_BUCKET))
+        t = self._step.get(key)
+        if t is None:
+            t = lat_mod.step_latency(self.cfg, n_tokens=n_active,
+                                     context=max(1, context),
+                                     w_bits=self.avg_bits, hw=self.hw)
+            self._step[key] = t
+        return t
+
+    def service_s(self, prompt_len: int, gen_tokens: int) -> float:
+        """Uncontended end-to-end action latency (the planning estimate the
+        router holds against a request's deadline slack)."""
+        key = (prompt_len, gen_tokens)
+        t = self._service.get(key)
+        if t is None:
+            t = lat_mod.decision_latency(self.cfg, prompt_len=prompt_len,
+                                         gen_tokens=gen_tokens,
+                                         w_bits=self.avg_bits, hw=self.hw)
+            self._service[key] = t
+        return t
+
+
+@dataclasses.dataclass
+class _Running:
+    req: SimRequest
+    remaining: int
+    context: int
+
+
+class ContinuousBatcher:
+    def __init__(self, profile: LatencyProfile, *, slots: int = 4,
+                 policy: str = "degrade",
+                 on_retire: Optional[Callable[[SimRequest], None]] = None):
+        """``on_retire`` fires once per request leaving the system — on
+        completion *and* on drop — so a learner sees the reward (or lack
+        of one) for every routing decision."""
+        assert policy in ("drop", "degrade", "serve"), policy
+        self.profile = profile
+        self.slots = slots
+        self.policy = policy
+        self.on_retire = on_retire
+        self.t = 0.0                      # engine-local simulated clock
+        self.pending: List[SimRequest] = []
+        self.active: List[_Running] = []
+        self.completed: List[SimRequest] = []
+        self.dropped: List[SimRequest] = []
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: SimRequest) -> None:
+        self.pending.append(req)
+
+    # -- admission ----------------------------------------------------------
+
+    def _projected_finish(self, req: SimRequest, n_tokens: int) -> float:
+        """Finish-time projection if admitted now: prefill stalls the engine,
+        then ``n_tokens`` steps at the post-admission occupancy."""
+        step = self.profile.step_s(len(self.active) + 1,
+                                   req.prompt_len + n_tokens // 2)
+        return self.t + self.profile.prefill_s(req.prompt_len) \
+            + n_tokens * step
+
+    def _admit_one(self) -> bool:
+        """Admit the earliest-deadline *arrived* pending request, applying
+        the drop/degrade policy.  Returns True if a slot was filled."""
+        while True:
+            arrived = [r for r in self.pending if r.t_arrive <= self.t]
+            if not arrived or len(self.active) >= self.slots:
+                return False
+            req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
+            self.pending.remove(req)
+            n_tok = req.max_new
+            if self.policy != "serve" \
+                    and self._projected_finish(req, n_tok) > req.deadline_abs:
+                if self.policy == "degrade":
+                    step = self.profile.step_s(
+                        len(self.active) + 1, req.prompt_len + n_tok // 2)
+                    slack = req.deadline_abs - self.t \
+                        - self.profile.prefill_s(req.prompt_len)
+                    n_tok = min(n_tok, int(slack / step)) if step > 0 else 0
+                else:
+                    n_tok = 0
+                if n_tok < 1:
+                    req.dropped = True
+                    req.t_finish = self.t
+                    req.met_deadline = False
+                    self.dropped.append(req)
+                    if self.on_retire is not None:
+                        self.on_retire(req)
+                    continue                     # slot still free; try next
+            req.t_admit = self.t
+            self.t += self.profile.prefill_s(req.prompt_len)
+            self.active.append(_Running(req, remaining=n_tok,
+                                        context=req.prompt_len))
+            return True
+
+    def _admit(self) -> None:
+        while self._admit_one():
+            pass
+
+    # -- the decode loop ----------------------------------------------------
+
+    def _decode_step(self) -> None:
+        n = len(self.active)
+        ctx = max(r.context for r in self.active)
+        self.t += self.profile.step_s(n, ctx)
+        still: List[_Running] = []
+        for run in self.active:
+            run.remaining -= 1
+            run.context += 1
+            run.req.tokens_done += 1
+            if run.remaining > 0:
+                still.append(run)
+                continue
+            req = run.req
+            req.t_finish = self.t
+            req.latency_s = self.t - req.t_arrive
+            req.met_deadline = req.latency_s <= req.deadline_s
+            self.completed.append(req)
+            if self.on_retire is not None:
+                self.on_retire(req)
+        self.active = still
+
+    def drain(self, until: Optional[float] = None) -> None:
+        """Advance the engine clock to ``until`` (or to empty), admitting
+        arrivals into free slots between decode steps."""
+        while True:
+            if not self.active and self.pending:
+                nxt = min(r.t_arrive for r in self.pending)
+                if until is not None and nxt >= until and nxt > self.t:
+                    return                       # idle until past the horizon
+                self.t = max(self.t, nxt)
+            if until is not None and self.t >= until:
+                return
+            self._admit()
+            if self.active:
+                self._decode_step()
+            elif not self.pending:
+                return
+
+    def run(self) -> List[SimRequest]:
+        self.drain(until=None)
+        return self.completed
+
+    # -- router-facing estimates -------------------------------------------
+
+    def backlog_s(self, now: float) -> float:
+        """Estimated extra wait a request dispatched at ``now`` would see:
+        how far this engine's clock runs ahead plus queued work divided
+        over its slots.  A deliberate first-order heuristic — the router
+        only needs enough signal to spread load and respect slack."""
+        step1 = self.profile.step_s(max(1, len(self.active)), _CTX_BUCKET * 4)
+        work = sum(r.remaining for r in self.active) * step1
+        for r in self.pending:
+            work += self.profile.prefill_s(r.prompt_len) + r.max_new * step1
+        return max(0.0, self.t - now) + work / self.slots

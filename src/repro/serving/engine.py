@@ -75,6 +75,15 @@ class ServingEngine:
             lambda p, b, c: transformer.decode_step(p, cfg, b, c, self.ctx,
                                                     unroll=unroll))
 
+    def modeled_latency(self, prompt_len: int, gen_tokens: int) -> float:
+        """Modeled action latency for one request's own shape under the
+        current precision policy — what a request would cost served alone,
+        independent of the padded batch it happens to ride in."""
+        return lat_mod.decision_latency(self.latency_cfg,
+                                        prompt_len=prompt_len,
+                                        gen_tokens=gen_tokens,
+                                        w_bits=self.avg_bits)
+
     def generate(self, batch: Dict[str, jax.Array], *, max_new: int = 16,
                  key=None, temp: float = 0.0) -> GenerationResult:
         """batch: {"tokens": (B, S)} (+ vision/audio for those archs)."""

@@ -1,0 +1,176 @@
+"""Deadline-aware routing across a pool of engine operating points.
+
+A fleet is a set of engines pinned at distinct FPX operating points —
+(model size, gamma) candidates from the grid ``core.fpx`` builds — each
+running its own :class:`~repro.serving.continuous.ContinuousBatcher`.
+The router turns the paper's per-decision controller into a traffic-scale
+policy: every arriving request is dispatched via
+:func:`repro.core.fpx.select_for_slack`, i.e. ``select_for_budget``
+evaluated against the request's *remaining deadline slack* after the
+queue wait it would inherit on each engine.  Tight budgets therefore fall
+through to small/high-gamma engines ("win fast") while loose budgets keep
+the full-quality model ("lose slow" is only acceptable when the SLO
+allows it).
+
+Realized outcomes feed back: every retired request (completed or dropped)
+carries a reward — its traffic class weight times the operating point's
+quality, earned only when the deadline was met — and updates a per-class
+:class:`~repro.core.fpx.OnlineSelector`.  ``mode="bandit"`` routes purely
+from that learned state, automating the paper's per-task gamma sweep at
+fleet scale; ``mode="fpx"`` (default) routes from the model-based slack
+rule.  A *static* baseline is just a fleet whose pool is one operating
+point replicated — the identical router then degrades into least-loaded
+balancing, which keeps capacity comparisons fair.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.core import assign as assign_mod
+from repro.core import fpx
+from repro.core.fpx import Candidate, OnlineSelector
+from repro.core.latency import Hardware, V5E
+from repro.core import latency as lat_mod
+
+from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.traffic import SimRequest
+
+
+def pool_candidates(points: Sequence[Tuple[str, ModelConfig, Dict[str, float],
+                                           float]],
+                    *, prompt_len: int = 256, gen_tokens: int = 16,
+                    hw: Hardware = V5E) -> List[Candidate]:
+    """Build the fleet's operating points.
+
+    ``points``: (model_name, latency_cfg, eps calibration, gamma) — one
+    chosen cell of the (model x gamma) grid per engine, rather than the
+    full cross product ``fpx.make_grid`` enumerates."""
+    out = []
+    for name, cfg, eps, gamma in points:
+        a = assign_mod.assign_precision(eps, gamma)
+        bits = assign_mod.avg_bits(a)
+        t = lat_mod.decision_latency(cfg, prompt_len=prompt_len,
+                                     gen_tokens=gen_tokens, w_bits=bits,
+                                     hw=hw)
+        out.append(Candidate(model_name=name, cfg=cfg, gamma=gamma,
+                             assignment=a, avg_bits=bits, latency_s=t))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The reference fleet: the pool the serving benchmark, example, and
+# acceptance test all share.  Operating points span ~8ms to ~230ms per
+# action (see traffic.py's deadline calibration note); the quality proxy
+# is the family's quality ordering with the paper's mild gamma
+# degradation (Table 2: modest accuracy cost for large latency wins).
+# ---------------------------------------------------------------------------
+
+DEMO_POINTS: Tuple[Tuple[str, float], ...] = (
+    ("qwen2.5-1.5b", 1.0),
+    ("qwen2.5-3b", 0.6),
+    ("qwen2.5-7b", 0.4),
+    ("qwen2.5-14b", 0.0),
+)
+
+DEMO_BASE_QUALITY = {"qwen2.5-1.5b": 0.60, "qwen2.5-3b": 0.72,
+                     "qwen2.5-7b": 0.84, "qwen2.5-14b": 0.94}
+DEMO_GAMMA_PENALTY = 0.25
+
+
+def demo_quality(c: Candidate) -> float:
+    return DEMO_BASE_QUALITY[c.model_name] * (1.0 - DEMO_GAMMA_PENALTY
+                                              * c.gamma)
+
+
+def _synthetic_eps(cfg: ModelConfig, seed: int = 0) -> Dict[str, float]:
+    """Stand-in Algorithm-1 sensitivities for latency-only fleet work
+    (per-layer spread matters for the assignment, absolute values don't)."""
+    rng = np.random.default_rng(seed)
+    return {f"L{i}.lin{j}": float(rng.uniform(0.05, 0.9))
+            for i in range(cfg.n_layers) for j in range(4)}
+
+
+def demo_pool(*, hw: Hardware = V5E) -> List[Candidate]:
+    """The canonical four-engine demo pool over the qwen2.5 family."""
+    return pool_candidates(
+        [(name, get_config(name), _synthetic_eps(get_config(name)), g)
+         for name, g in DEMO_POINTS], hw=hw)
+
+
+class FleetRouter:
+    """Dispatch + feedback loop over a pool of continuous batchers."""
+
+    def __init__(self, candidates: Sequence[Candidate], *,
+                 quality: Callable[[Candidate], float],
+                 slots: int = 4, policy: str = "degrade",
+                 mode: str = "fpx", epsilon: float = 0.1, seed: int = 0,
+                 hw: Hardware = V5E):
+        assert mode in ("fpx", "bandit"), mode
+        self.cands = list(candidates)
+        self.quality = quality
+        self.mode = mode
+        self.epsilon = epsilon
+        self.seed = seed
+        self.engines = [
+            ContinuousBatcher(LatencyProfile(c.cfg, c.avg_bits, hw=hw),
+                              slots=slots, policy=policy,
+                              on_retire=self._retire)
+            for c in self.cands]
+        self.selectors: Dict[str, OnlineSelector] = {}
+        self.retired: List[SimRequest] = []
+
+    # -- feedback -----------------------------------------------------------
+
+    def _selector(self, cls_name: str) -> OnlineSelector:
+        sel = self.selectors.get(cls_name)
+        if sel is None:
+            sel = OnlineSelector(self.cands, epsilon=self.epsilon,
+                                 seed=self.seed + len(self.selectors))
+            self.selectors[cls_name] = sel
+        return sel
+
+    def _retire(self, req: SimRequest) -> None:
+        """Realized reward: quality earned only by on-time tokens (goodput
+        semantics — a late or dropped action is worth nothing)."""
+        cand = self.cands[req.engine_idx]
+        if req.met_deadline and not req.dropped and req.max_new:
+            frac = req.tokens_done / req.max_new
+            req.reward = req.reward_weight * self.quality(cand) * frac
+        else:
+            req.reward = 0.0
+        self._selector(req.cls_name).update(req.engine_idx, req.reward)
+        self.retired.append(req)
+
+    # -- dispatch -----------------------------------------------------------
+
+    def dispatch(self, req: SimRequest) -> int:
+        if self.mode == "bandit":
+            idx = self._selector(req.cls_name).choose()
+        else:
+            waits = [e.backlog_s(req.t_arrive) for e in self.engines]
+            cands = [dataclasses.replace(
+                c, latency_s=e.profile.service_s(req.prompt_len, req.max_new))
+                for c, e in zip(self.cands, self.engines)]
+            idx = fpx.select_for_slack(cands, req.deadline_s, waits,
+                                       self.quality)
+        req.engine_idx = idx
+        self.engines[idx].submit(req)
+        return idx
+
+    # -- simulation ---------------------------------------------------------
+
+    def run(self, arrivals: Sequence[SimRequest]) -> List[SimRequest]:
+        """Replay a time-ordered arrival stream through the fleet and drain
+        it; returns every retired request (completed and dropped)."""
+        for req in arrivals:
+            for eng in self.engines:
+                eng.drain(until=req.t_arrive)
+            self.dispatch(req)
+        for eng in self.engines:
+            eng.drain()
+        return self.retired

@@ -1,0 +1,63 @@
+"""SLO aggregation for serving runs: latency percentiles, hit-rate, goodput.
+
+*Goodput* is the paper's reward notion lifted to traffic scale: the sum of
+realized rewards, which by construction (fleet._retire) only on-time
+actions earn.  Throughput counts everything served; goodput is what the
+deployment was actually worth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.traffic import SimRequest
+
+
+@dataclasses.dataclass
+class SLOReport:
+    n: int                     # requests offered
+    served: int                # completed (possibly degraded)
+    dropped: int
+    degraded: int              # completed with fewer tokens than asked
+    hit_rate: float            # met deadline / offered
+    p50_s: float               # modeled latency percentiles over completions
+    p99_s: float
+    goodput: float             # sum of realized on-time reward
+    goodput_rate: float        # goodput / horizon (reward per simulated s)
+    per_class: Optional[Dict[str, "SLOReport"]] = None
+
+    def row(self) -> List:
+        return [self.n, self.served, self.dropped,
+                f"{self.hit_rate:.3f}", f"{self.p50_s * 1e3:.1f}",
+                f"{self.p99_s * 1e3:.1f}", f"{self.goodput:.1f}"]
+
+
+def _percentile(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
+              split_classes: bool = True) -> SLOReport:
+    done = [r for r in reqs if not r.dropped and r.t_finish is not None]
+    lats = [r.latency_s for r in done]
+    rep = SLOReport(
+        n=len(reqs),
+        served=len(done),
+        dropped=sum(r.dropped for r in reqs),
+        degraded=sum(r.tokens_done < r.max_new for r in done),
+        hit_rate=(sum(bool(r.met_deadline) for r in reqs) / len(reqs)
+                  if reqs else 0.0),
+        p50_s=_percentile(lats, 50), p99_s=_percentile(lats, 99),
+        goodput=sum(r.reward for r in reqs),
+        goodput_rate=sum(r.reward for r in reqs) / horizon_s,
+    )
+    if split_classes:
+        names = sorted({r.cls_name for r in reqs})
+        if len(names) > 1:
+            rep.per_class = {
+                nm: summarize([r for r in reqs if r.cls_name == nm],
+                              horizon_s, split_classes=False)
+                for nm in names}
+    return rep

@@ -44,31 +44,52 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    @staticmethod
+    def _extra_sig(req: Request) -> frozenset:
+        return frozenset(req.extra.keys() if req.extra else ())
+
     def _make_batch(self, reqs: List[Request]) -> Dict[str, jnp.ndarray]:
+        sigs = {self._extra_sig(r) for r in reqs}
+        if len(sigs) > 1:
+            raise ValueError(
+                "cannot batch requests with heterogeneous extra inputs: "
+                f"saw key sets {[sorted(s) for s in sigs]}; "
+                "submit homogeneous waves (Scheduler.step splits by "
+                "extra-signature automatically)")
         S = max(len(r.prompt) for r in reqs)
         toks = np.full((len(reqs), S), self.pad_id, np.int32)
         for i, r in enumerate(reqs):
             toks[i, S - len(r.prompt):] = r.prompt   # left-pad: ragged prompts
         batch = {"tokens": jnp.asarray(toks)}
         if reqs[0].extra:
-            for k, v in reqs[0].extra.items():
+            for k in reqs[0].extra:
                 batch[k] = jnp.stack([jnp.asarray(r.extra[k]) for r in reqs])
         return batch
 
     def step(self) -> List[Request]:
-        """Serve one wave of up to ``batch_slots`` queued requests."""
+        """Serve one wave of up to ``batch_slots`` queued requests.
+
+        A wave only batches requests whose ``extra`` inputs have the same
+        key set (vision/audio tensors must stack); mismatched requests keep
+        their queue position and go out in a later wave."""
         if not self.queue:
             return []
-        wave = [self.queue.popleft()
-                for _ in range(min(self.slots, len(self.queue)))]
+        sig = self._extra_sig(self.queue[0])
+        wave, rest = [], deque()
+        while self.queue and len(wave) < self.slots:
+            r = self.queue.popleft()
+            (wave if self._extra_sig(r) == sig else rest).append(r)
+        rest.extend(self.queue)
+        self.queue = rest
         max_new = max(r.max_new for r in wave)
         res = self.engine.generate(self._make_batch(wave), max_new=max_new)
         new = np.asarray(res.new_tokens)
         for i, r in enumerate(wave):
             r.result_tokens = new[i, :r.max_new]
-            r.latency_s = res.latency_s
+            # each request is charged its own shape, not the padded wave's
+            r.latency_s = self.engine.modeled_latency(len(r.prompt), r.max_new)
             if r.deadline_s is not None:
-                r.met_deadline = res.latency_s <= r.deadline_s
+                r.met_deadline = r.latency_s <= r.deadline_s
         self.done.extend(wave)
         return wave
 

@@ -1,0 +1,176 @@
+"""Workload generation for the serving fleet: arrivals, deadlines, classes.
+
+A *traffic class* bundles an arrival process (Poisson or bursty
+Markov-modulated Poisson), a deadline distribution, and prompt/decode
+shapes — e.g. HFT-like tick reactions (short prompts, tens-of-ms budgets)
+vs. chat turns (longer prompts, second-scale budgets).  ``generate`` draws
+a time-ordered stream of :class:`SimRequest` over a horizon of *simulated*
+seconds; the clock is the same analytic-latency clock the engines run on
+(core.latency), so one unit of traffic time is one unit of modeled TPU
+time and the two sides of the simulation stay in sync by construction.
+
+Everything is seeded and deterministic: the same (classes, horizon, seed)
+triple always yields the same workload, so competing routers can be
+measured on identical request streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One request in the simulated stream, plus its lifecycle results.
+
+    Timing fields are *absolute* simulated seconds except ``deadline_s``,
+    which is relative to ``t_arrive`` (the SLO the client asked for)."""
+    rid: int
+    cls_name: str
+    t_arrive: float
+    prompt_len: int
+    max_new: int
+    deadline_s: float
+    reward_weight: float = 1.0
+
+    # filled in by the continuous batcher / fleet router
+    engine_idx: Optional[int] = None
+    t_admit: Optional[float] = None
+    t_finish: Optional[float] = None
+    latency_s: Optional[float] = None
+    met_deadline: Optional[bool] = None
+    tokens_done: int = 0
+    dropped: bool = False
+    reward: float = 0.0
+
+    @property
+    def deadline_abs(self) -> float:
+        return self.t_arrive + self.deadline_s
+
+    def fresh(self) -> "SimRequest":
+        """Copy with lifecycle state cleared — lets the same workload be
+        replayed against several routers."""
+        return SimRequest(rid=self.rid, cls_name=self.cls_name,
+                          t_arrive=self.t_arrive, prompt_len=self.prompt_len,
+                          max_new=self.max_new, deadline_s=self.deadline_s,
+                          reward_weight=self.reward_weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficClass:
+    """Arrival + shape + SLO distribution for one kind of traffic.
+
+    ``burst_factor`` > 1 turns the Poisson process into a two-state MMPP:
+    the rate alternates between ``rate_hz * burst_factor`` (bursts) and a
+    compensating quiet rate so the long-run mean stays ``rate_hz``.
+    ``burst_frac`` is the fraction of time spent inside bursts."""
+    name: str
+    rate_hz: float                       # mean arrival rate
+    deadline_range_s: Tuple[float, float]  # uniform SLO draw
+    prompt_range: Tuple[int, int] = (64, 256)
+    max_new_range: Tuple[int, int] = (8, 16)
+    reward_weight: float = 1.0
+    burst_factor: float = 1.0
+    burst_frac: float = 0.2
+    burst_len_s: float = 0.5             # mean burst duration
+
+
+def _poisson_times(rate_hz: float, horizon_s: float,
+                   rng: np.random.Generator) -> List[float]:
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate_hz)
+        if t >= horizon_s:
+            return out
+        out.append(t)
+
+
+def _bursty_times(cls: TrafficClass, horizon_s: float,
+                  rng: np.random.Generator) -> List[float]:
+    """Two-state MMPP: mean-preserving on/off modulation of the base rate."""
+    hi = cls.rate_hz * cls.burst_factor
+    lo_frac = 1.0 - cls.burst_frac
+    lo = max(1e-9, (cls.rate_hz - cls.burst_frac * hi) / lo_frac)
+    quiet_len = cls.burst_len_s * lo_frac / cls.burst_frac
+    t, out, in_burst = 0.0, [], False
+    while t < horizon_s:
+        dur = rng.exponential(cls.burst_len_s if in_burst else quiet_len)
+        rate = hi if in_burst else lo
+        seg_end = min(t + dur, horizon_s)
+        tt = t
+        while True:
+            tt += rng.exponential(1.0 / rate)
+            if tt >= seg_end:
+                break
+            out.append(tt)
+        t, in_burst = seg_end, not in_burst
+    return out
+
+
+def generate(classes: Sequence[TrafficClass], horizon_s: float, *,
+             seed: int = 0) -> List[SimRequest]:
+    """Draw the merged, time-sorted request stream for one simulation run."""
+    reqs: List[SimRequest] = []
+    for ci, cls in enumerate(classes):
+        rng = np.random.default_rng(seed * 1009 + ci)
+        if cls.burst_factor > 1.0:
+            times = _bursty_times(cls, horizon_s, rng)
+        else:
+            times = _poisson_times(cls.rate_hz, horizon_s, rng)
+        for t in times:
+            d = rng.uniform(*cls.deadline_range_s)
+            p = int(rng.integers(cls.prompt_range[0], cls.prompt_range[1] + 1))
+            m = int(rng.integers(cls.max_new_range[0],
+                                 cls.max_new_range[1] + 1))
+            reqs.append(SimRequest(rid=-1, cls_name=cls.name, t_arrive=t,
+                                   prompt_len=p, max_new=m, deadline_s=d,
+                                   reward_weight=cls.reward_weight))
+    reqs.sort(key=lambda r: r.t_arrive)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Scenario presets.  Deadlines are calibrated against the analytic ladder
+# (core.latency, qwen2.5 family): ~20ms (1.5B @ FP4) ... ~300ms (14B @ FP8)
+# per action — so "trading" budgets are only meetable by small/high-gamma
+# operating points while "chat" budgets admit the full-quality 14B.
+# ---------------------------------------------------------------------------
+
+def trading_class(rate_hz: float = 30.0) -> TrafficClass:
+    """HFT-like tick reactions: tiny prompts, tens-of-ms hard budgets,
+    bursty arrivals (order-book activity clusters).  The 15-45ms budget
+    straddles the small/high-gamma operating points (~8-20ms per action)
+    and excludes the big models (>=50ms)."""
+    return TrafficClass(name="trading", rate_hz=rate_hz,
+                        deadline_range_s=(0.015, 0.045),
+                        prompt_range=(48, 96), max_new_range=(4, 8),
+                        reward_weight=1.0, burst_factor=3.0,
+                        burst_frac=0.25, burst_len_s=0.4)
+
+
+def chat_class(rate_hz: float = 8.0) -> TrafficClass:
+    """Chat-like turns: longer prompts, sub-second soft budgets that the
+    full-quality 14B point (~230ms per action) meets with queueing room."""
+    return TrafficClass(name="chat", rate_hz=rate_hz,
+                        deadline_range_s=(0.4, 1.2),
+                        prompt_range=(128, 384), max_new_range=(8, 16),
+                        reward_weight=1.0)
+
+
+def scenario(name: str) -> List[TrafficClass]:
+    """Named traffic mixes used by benchmarks/table_serving.py."""
+    if name == "trading":
+        return [trading_class()]
+    if name == "chat":
+        return [chat_class()]
+    if name == "mixed":
+        return [trading_class(), chat_class()]
+    raise KeyError(f"unknown scenario {name!r}; "
+                   "known: trading, chat, mixed")
+
+
+SCENARIOS = ("trading", "chat", "mixed")

@@ -39,8 +39,11 @@ def test_fake_quant_bounded_error(x, bits):
         return
     # E2M1 worst step = 2 (between 4 and 6) over range 6 -> half-step 1/6.
     # e4m3 clipped at 240: top binade [128, 240] has step 16 -> half-step
-    # 8/240 = 1/30 of absmax.
-    worst = (1.0 / 6.0) if bits == 4 else (1.0 / 30.0)
+    # 8/240 = 1/30 of absmax.  The fp8 path casts through the hardware
+    # float8 conversion, which XLA routes via an f16 intermediate on CPU;
+    # that double rounding can push a near-midpoint value one extra f16
+    # ulp (2^-11 of the value) past the half-step bound.
+    worst = (1.0 / 6.0) if bits == 4 else (1.0 / 30.0 + 2.0 ** -11)
     assert np.abs(q - x).max() <= amax * worst + 1e-6
 
 

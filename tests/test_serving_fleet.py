@@ -1,0 +1,278 @@
+"""Serving fleet: traffic generation, continuous batching (EDF admission,
+slot reuse, drop/degrade), FPX routing across the pool, SLO metrics, and
+the wave scheduler's per-request latency / heterogeneous-extra fixes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import fleet as fleet_mod
+from repro.serving import (ContinuousBatcher, FleetRouter, LatencyProfile,
+                           metrics, pool_candidates, traffic)
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.traffic import SimRequest
+
+
+def _eps(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"L{i}.lin{j}": float(rng.uniform(0.05, 0.9))
+            for i in range(cfg.n_layers) for j in range(4)}
+
+
+def _req(rid, *, t=0.0, cls="t", prompt=64, new=8, deadline=1.0, weight=1.0):
+    return SimRequest(rid=rid, cls_name=cls, t_arrive=t, prompt_len=prompt,
+                      max_new=new, deadline_s=deadline, reward_weight=weight)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    cfg = get_config("qwen2.5-1.5b")
+    return LatencyProfile(cfg, 4.0)
+
+
+# -- traffic ----------------------------------------------------------------
+
+def test_traffic_deterministic_and_sorted():
+    a = traffic.generate(traffic.scenario("mixed"), 5.0, seed=3)
+    b = traffic.generate(traffic.scenario("mixed"), 5.0, seed=3)
+    assert [r.t_arrive for r in a] == [r.t_arrive for r in b]
+    times = [r.t_arrive for r in a]
+    assert times == sorted(times)
+    assert all(0.0 <= t < 5.0 for t in times)
+    assert {r.cls_name for r in a} == {"trading", "chat"}
+    assert [r.rid for r in a] == list(range(len(a)))
+
+
+def test_bursty_rate_is_mean_preserving():
+    cls = traffic.trading_class(rate_hz=50.0)
+    n = len(traffic.generate([cls], 60.0, seed=0))
+    assert 0.7 * 50 * 60 < n < 1.3 * 50 * 60
+
+
+# -- continuous batching ----------------------------------------------------
+
+def test_edf_admission_under_contention(profile):
+    """With one slot busy, the queued request with the earliest deadline is
+    admitted first even though it arrived (and was submitted) last."""
+    b = ContinuousBatcher(profile, slots=1, policy="serve")
+    blocker = _req(0, deadline=10.0, new=32)
+    loose = _req(1, t=0.001, deadline=10.0)
+    tight = _req(2, t=0.002, deadline=0.5)
+    for r in (blocker, loose, tight):
+        b.submit(r)
+    b.run()
+    assert blocker.t_admit < tight.t_admit < loose.t_admit
+
+
+def test_slot_reuse_mid_flight(profile):
+    """A freed decode slot is reusable immediately — the third request is
+    admitted when the short request finishes, while the long one is still
+    decoding (no wave barrier)."""
+    b = ContinuousBatcher(profile, slots=2, policy="serve")
+    short = _req(0, new=2, deadline=10.0)
+    long = _req(1, new=40, deadline=10.0)
+    third = _req(2, new=2, deadline=10.0)
+    for r in (short, long, third):
+        b.submit(r)
+    b.run()
+    assert third.t_admit >= short.t_finish
+    assert third.t_admit < long.t_finish
+    assert third.t_finish < long.t_finish
+
+
+def test_degrade_policy_trims_to_deadline(profile):
+    """A request whose full decode cannot fit its deadline is truncated to
+    the token budget that does fit — and still counts as on-time."""
+    step = profile.step_s(1, 64)
+    prefill = profile.prefill_s(64)
+    b = ContinuousBatcher(profile, slots=1, policy="degrade")
+    r = _req(0, prompt=64, new=50, deadline=prefill + 10.5 * step)
+    b.submit(r)
+    b.run()
+    assert 0 < r.tokens_done < 50
+    assert r.met_deadline and not r.dropped
+
+
+def test_drop_policy_rejects_infeasible(profile):
+    retired = []
+    b = ContinuousBatcher(profile, slots=1, policy="drop",
+                          on_retire=retired.append)
+    r = _req(0, prompt=64, new=50, deadline=1e-6)
+    ok = _req(1, prompt=64, new=4, deadline=10.0)
+    b.submit(r)
+    b.submit(ok)
+    b.run()
+    assert r.dropped and r.met_deadline is False and r.tokens_done == 0
+    assert not ok.dropped and ok.met_deadline
+    assert retired == [r, ok]           # drops retire through the callback too
+
+
+def test_hit_rate_and_goodput_accounting():
+    reqs = [_req(0, deadline=1.0), _req(1, deadline=1.0),
+            _req(2, deadline=1.0), _req(3, cls="c", deadline=1.0)]
+    reqs[0].t_finish, reqs[0].latency_s = 0.5, 0.5
+    reqs[0].met_deadline, reqs[0].reward, reqs[0].tokens_done = True, 0.9, 8
+    reqs[1].t_finish, reqs[1].latency_s = 2.0, 2.0
+    reqs[1].met_deadline, reqs[1].reward = False, 0.0
+    reqs[2].dropped, reqs[2].met_deadline = True, False
+    reqs[3].t_finish, reqs[3].latency_s = 0.1, 0.1
+    reqs[3].met_deadline, reqs[3].reward = True, 0.5
+    reqs[3].tokens_done = 4                          # degraded completion
+    rep = metrics.summarize(reqs, horizon_s=10.0)
+    assert rep.n == 4 and rep.served == 3 and rep.dropped == 1
+    assert rep.degraded == 2            # req1 (0 tokens) and req3 (4 of 8)
+    assert rep.hit_rate == pytest.approx(0.5)
+    assert rep.goodput == pytest.approx(1.4)
+    assert rep.goodput_rate == pytest.approx(0.14)
+    assert rep.per_class and rep.per_class["c"].goodput == pytest.approx(0.5)
+    assert rep.p50_s == pytest.approx(0.5)
+
+
+# -- fleet routing ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def pool():
+    fast_cfg = get_config("qwen2.5-1.5b")
+    slow_cfg = get_config("qwen2.5-14b")
+    return pool_candidates([("qwen2.5-1.5b", fast_cfg, _eps(fast_cfg), 1.0),
+                            ("qwen2.5-14b", slow_cfg, _eps(slow_cfg), 0.0)])
+
+
+def _quality(c):
+    return {"qwen2.5-1.5b": 0.6, "qwen2.5-14b": 0.95}[c.model_name]
+
+
+def test_router_tight_deadline_picks_faster_engine(pool):
+    router = FleetRouter(pool, quality=_quality, slots=2)
+    tight = _req(0, deadline=0.04, prompt=64, new=8)
+    loose = _req(1, deadline=2.0, prompt=64, new=8)
+    assert router.dispatch(tight) == 0      # only the 1.5b/gamma=1 point fits
+    assert router.dispatch(loose) == 1      # quality wins when the SLO allows
+
+
+def test_router_slack_accounts_for_backlog(pool):
+    """Once the slow engine's queue eats the deadline slack, requests that
+    would prefer it spill to the fast engine."""
+    router = FleetRouter(pool, quality=_quality, slots=1)
+    lat14 = pool[1].latency_s
+    picks = [router.dispatch(_req(i, deadline=1.5 * lat14,
+                                  prompt=256, new=16))
+             for i in range(6)]
+    assert picks[0] == 1
+    assert 0 in picks                       # later arrivals overflow to fast
+
+
+def test_fleet_feedback_updates_selector(pool):
+    router = FleetRouter(pool, quality=_quality, slots=2)
+    arrivals = [_req(i, t=0.05 * i, cls="trading", deadline=0.04,
+                     prompt=64, new=6) for i in range(10)]
+    out = router.run(arrivals)
+    assert len(out) == 10
+    sel = router.selectors["trading"]
+    assert sum(sel.counts) == 10
+    # realized reward on the fast engine dominates the slow engine's zero
+    assert sel.means[0] > sel.means[1]
+
+
+def test_fleet_beats_static_baselines_on_mixed_traffic():
+    """The acceptance property, at test scale: on a heterogeneous mix the
+    FPX fleet router earns strictly more goodput than every equal-capacity
+    static single-(model, gamma) deployment."""
+    cands = fleet_mod.demo_pool()
+    q = fleet_mod.demo_quality
+    arrivals = traffic.generate(traffic.scenario("mixed"), 10.0, seed=1)
+    fleet_rep = metrics.summarize(
+        FleetRouter(cands, quality=q, slots=4).run(
+            [a.fresh() for a in arrivals]), 10.0)
+    for c in cands:
+        static = metrics.summarize(
+            FleetRouter([c] * len(cands), quality=q, slots=4).run(
+                [a.fresh() for a in arrivals]), 10.0)
+        assert fleet_rep.goodput > static.goodput, c.model_name
+
+
+# -- wave scheduler fixes ---------------------------------------------------
+
+class _FakeEngine:
+    """Engine stand-in: deterministic tokens, real latency model."""
+
+    def __init__(self):
+        self.latency_cfg = get_config("qwen2.5-1.5b")
+        self.avg_bits = 8.0
+        self.batches = []
+
+    modeled_latency = ServingEngine.modeled_latency
+
+    def generate(self, batch, *, max_new=16, **kw):
+        self.batches.append(batch)
+        B = batch["tokens"].shape[0]
+
+        class R:
+            new_tokens = np.zeros((B, max_new), np.int32)
+            latency_s = 123.0
+        return R()
+
+
+def test_scheduler_per_request_latency():
+    eng = _FakeEngine()
+    sched = Scheduler(eng, batch_slots=4)
+    short = Request(rid=0, prompt=np.zeros(8, np.int32), max_new=4,
+                    deadline_s=10.0)
+    long = Request(rid=1, prompt=np.zeros(64, np.int32), max_new=16,
+                   deadline_s=10.0)
+    sched.submit(short)
+    sched.submit(long)
+    sched.run()
+    # each request is charged its own shape, not the padded wave's
+    assert short.latency_s == pytest.approx(eng.modeled_latency(8, 4))
+    assert long.latency_s == pytest.approx(eng.modeled_latency(64, 16))
+    assert short.latency_s < long.latency_s
+    assert short.met_deadline and long.met_deadline
+
+
+def test_scheduler_splits_heterogeneous_extra_waves():
+    eng = _FakeEngine()
+    sched = Scheduler(eng, batch_slots=4)
+    plain1 = Request(rid=0, prompt=np.zeros(8, np.int32), max_new=2)
+    vision = Request(rid=1, prompt=np.zeros(8, np.int32), max_new=2,
+                     extra={"vision": np.zeros((2, 3), np.float32)})
+    plain2 = Request(rid=2, prompt=np.zeros(8, np.int32), max_new=2)
+    for r in (plain1, vision, plain2):
+        sched.submit(r)
+    first = sched.step()
+    assert [r.rid for r in first] == [0, 2]         # homogeneous wave
+    second = sched.step()
+    assert [r.rid for r in second] == [1]
+    assert "vision" in eng.batches[1]
+    assert all(r.result_tokens is not None for r in (plain1, vision, plain2))
+
+
+def test_make_batch_rejects_heterogeneous_extras():
+    eng = _FakeEngine()
+    sched = Scheduler(eng, batch_slots=4)
+    a = Request(rid=0, prompt=np.zeros(4, np.int32))
+    b = Request(rid=1, prompt=np.zeros(4, np.int32),
+                extra={"audio": np.zeros(3, np.float32)})
+    with pytest.raises(ValueError, match="heterogeneous"):
+        sched._make_batch([a, b])
+
+
+def test_scheduler_real_engine_ragged_prompts():
+    """Integration: the live engine path still serves ragged waves and the
+    per-request latency comes from each request's own shape."""
+    cfg = get_config("qwen-sim-1.5b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, max_ctx=64)
+    sched = Scheduler(eng, batch_slots=4)
+    rng = np.random.default_rng(0)
+    lens = [8, 20]
+    for rid, n in enumerate(lens):
+        sched.submit(Request(rid=rid,
+                             prompt=rng.integers(0, cfg.vocab, n).astype(np.int32),
+                             max_new=4, deadline_s=10.0))
+    done = sched.run()
+    assert len(done) == 2
+    assert done[0].latency_s < done[1].latency_s
+    assert all(len(r.result_tokens) == 4 for r in done)
