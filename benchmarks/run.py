@@ -43,6 +43,15 @@ def main() -> None:
                  f"goodput={fleet[8]}_vs_static{best_static[8]}"
                  f":hit={fleet[5]}"))
 
+    # --- Paged KV-cache vs wave serving on real compute -------------------
+    import table_paged
+    tp = table_paged.main(verbose=False)
+    tp_wave = next(r for r in tp if r[0] == "wave")
+    tp_paged = next(r for r in tp if r[0] == "paged")
+    rows.append(("table_paged", float(tp_paged[6]) * 1e3,
+                 f"p99={tp_paged[6]}ms_vs_wave{tp_wave[6]}ms"
+                 f":goodput={tp_paged[7]}_vs_{tp_wave[7]}"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

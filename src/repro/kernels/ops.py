@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.core import quant
 from repro.kernels import fp8_matmul as _fp8
 from repro.kernels import fpx_matmul as _fpx
+from repro.kernels import paged_gather as _pg
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -69,3 +70,22 @@ def quant_matmul(x: jax.Array, w: jax.Array, *, x_bits: int = 8,
 
     out = out[:M, :N]
     return out.reshape(*lead, N).astype(orig_dtype)
+
+
+def gather_pages(pool: jax.Array, block_tables: jax.Array, *,
+                 use_pallas: bool = False, interpret: bool = True) -> jax.Array:
+    """Materialize paged K/V as a contiguous per-lane context.
+
+    pool: (n_pages, page_size, n_kv_heads, head_dim); block_tables: (B, P)
+    int32 page ids.  Returns (B, P * page_size, n_kv_heads, head_dim).  The
+    Pallas path flattens the head dims into one lane axis so each page is a
+    2-D VMEM tile, and runs the scalar-prefetch gather kernel (interpret
+    mode on CPU); the default path is the jnp take the XLA CPU backend
+    already fuses well."""
+    n_pages, ps, H, D = pool.shape
+    B, P = block_tables.shape
+    if use_pallas:
+        flat = _pg.paged_gather(pool.reshape(n_pages, ps, H * D),
+                                block_tables, interpret=interpret)
+        return flat.reshape(B, P * ps, H, D)
+    return jnp.take(pool, block_tables, axis=0).reshape(B, P * ps, H, D)

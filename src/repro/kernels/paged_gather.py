@@ -1,0 +1,60 @@
+"""Paged KV-cache gather Pallas kernel — block-table reads for paged decode.
+
+Paged serving keeps K/V in fixed-size pages inside one shared pool
+(``serving.kv_cache``); a decode step must materialize each lane's logical
+context ``pool[block_table[b]]`` as a contiguous (B, P*page_size, ...) view
+before attention.  On TPU this is the classic scalar-prefetch pattern: the
+block table rides in SMEM via ``PrefetchScalarGridSpec`` and *drives the
+BlockSpec index_map*, so the pages are DMA'd HBM->VMEM directly into their
+destination slots — the gather costs one page-sized copy per (lane, page)
+grid cell and never touches pages the lane does not own.
+
+The pool's trailing (n_kv_heads, head_dim) dims are flattened to one lane
+axis by the ops-layer wrapper (``ops.gather_pages``) so the page block is a
+well-tiled 2-D (page_size, E) VMEM tile.  Validated CPU-side with
+``interpret=True`` against the pure-jnp oracle ``ref.gather_pages_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(bt_ref, pool_ref, o_ref):
+    """Grid (B, P): copy page ``bt[b, p]`` into out slot (b, p).
+
+    The page selection happened in the BlockSpec index_map (scalar
+    prefetch), so the body is a straight VMEM copy."""
+    del bt_ref
+    o_ref[0, 0] = pool_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_gather(pool: jax.Array, block_tables: jax.Array, *,
+                 interpret: bool = True) -> jax.Array:
+    """pool: (n_pages, page_size, E); block_tables: (B, P) int32 page ids.
+
+    Returns (B, P, page_size, E): lane b's pages in logical order.  Page ids
+    must be < n_pages (idle lanes point at a reserved dummy page, never at
+    out-of-range ids)."""
+    n_pages, ps, E = pool.shape
+    B, P = block_tables.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, ps, E), lambda b, p, bt: (bt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, ps, E), lambda b, p, bt: (b, p, 0, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, P, ps, E), pool.dtype),
+        interpret=interpret,
+    )(block_tables, pool)

@@ -32,3 +32,9 @@ def fp4_matmul_ref(x: jax.Array, w: jax.Array, x_bits: int = 8) -> jax.Array:
 
 def quant_matmul_ref(x: jax.Array, w: jax.Array, x_bits: int, w_bits: int) -> jax.Array:
     return quant.quant_matmul_ref(x, w, x_bits, w_bits)
+
+
+def gather_pages_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Paged-KV gather oracle: pool (n_pages, ps, ...), tables (B, P) ->
+    (B, P, ps, ...) — lane b's pages in logical order."""
+    return jnp.take(pool, block_tables, axis=0)

@@ -110,6 +110,52 @@ def causal_mask(sq: int, skv: int, window: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode (block-table KV cache)
+# ---------------------------------------------------------------------------
+
+def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cache: Dict[str, jax.Array], *, scale: float,
+                         rope_theta: float, ctx: ExecContext,
+                         ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One paged decode step for one layer.
+
+    q/k/v: freshly projected (B, 1, H|Hkv, D) for the current token of each
+    lane.  ``cache`` holds this layer's slice of the shared page pool plus
+    the (lane-shared-across-layers) block tables and per-lane positions.
+    Writes lane b's K/V at logical position ``pos[b]`` (page
+    ``block_tables[b, pos[b] // page_size]``, slot ``pos[b] % page_size``),
+    gathers the lane's whole context through its table, and attends with a
+    per-lane validity mask ``slot <= pos[b]``."""
+    from repro.kernels import ops as kernel_ops
+
+    B = q.shape[0]
+    kpool, vpool = cache["kpool"], cache["vpool"]
+    bt = cache["block_tables"]                     # (B, P) int32
+    pos = cache["pos"]                             # (B,)  int32
+    ps = kpool.shape[1]
+    P = bt.shape[1]
+
+    cos, sin = rope_cos_sin(pos[:, None], q.shape[-1], rope_theta)  # (B,1,D/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    pid = jnp.take_along_axis(bt, (pos // ps)[:, None], axis=1)[:, 0]  # (B,)
+    within = pos % ps
+    # distinct live lanes own distinct pages, so the scatter is collision-free
+    # (idle lanes all hit the reserved dummy page — last write wins, unused)
+    kpool = kpool.at[pid, within].set(k[:, 0].astype(kpool.dtype))
+    vpool = vpool.at[pid, within].set(v[:, 0].astype(vpool.dtype))
+
+    ck = kernel_ops.gather_pages(kpool, bt, use_pallas=ctx.use_pallas)
+    cv = kernel_ops.gather_pages(vpool, bt, use_pallas=ctx.use_pallas)
+    slot = jnp.arange(P * ps)
+    mask = (slot[None, :] <= pos[:, None])[:, None, None, :]   # (B,1,1,S)
+    out = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, 1, P * ps)), scale)
+    return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
+                 "pos": pos + 1}
+
+
+# ---------------------------------------------------------------------------
 # Forward (self-attention, train/prefill + decode with cache)
 # ---------------------------------------------------------------------------
 
@@ -128,6 +174,15 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
     With ``cache`` ({"k","v": (B, S_cache, Hkv, D), "pos": ()-int}): decode —
     ``x`` is (B, 1, d), new K/V written at ``pos`` (ring-buffer write for
     sliding-window caches), attends to all valid cache entries.
+
+    With a *paged* cache ({"kpool","vpool": (n_pages, page_size, Hkv, D),
+    "block_tables": (B, P)-int32, "pos": (B,)-int32}): paged decode —
+    each lane has its own position and its own page list into a shared
+    pool; new K/V are scattered into lane b's page at ``pos[b]`` and the
+    lane's context is gathered through its block table (optionally via the
+    Pallas scalar-prefetch kernel when ``ctx.use_pallas``).  Lanes whose
+    table points at the reserved dummy page are idle; their outputs are
+    garbage and must be discarded by the caller.
     """
     B, S, _ = x.shape
     q = modules.quant_linear(params["q"], x, name=join(name, "q"), ctx=ctx)
@@ -152,6 +207,12 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
         mask = causal_mask(S, S, window=sliding_window)
         out = _sdpa(q, k, v, mask, scale)
         new_cache = None
+    elif "kpool" in cache:
+        # paged decode: S == 1, per-lane positions and block tables
+        assert sliding_window is None, \
+            "paged KV cache does not support sliding-window segments"
+        out, new_cache = _paged_decode_attend(q, k, v, cache, scale=scale,
+                                              rope_theta=rope_theta, ctx=ctx)
     else:
         # decode: S == 1
         pos = cache["pos"]  # global position of this token (traced scalar)

@@ -400,6 +400,44 @@ def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return unembed(params, cfg, h, ctx), new_cache
 
 
+def paged_decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                      cache: Dict[str, jax.Array],
+                      ctx: ExecContext = modules.DEFAULT_CTX, *,
+                      unroll: bool = True) -> Tuple[jax.Array, Any]:
+    """One batched decode step against a *paged* KV cache.
+
+    ``batch["token"]``: (B, 1) — one current token per decode lane.
+    ``cache``: {"kpool","vpool": (L, n_pages, page_size, Hkv, D),
+    "block_tables": (B, P) int32, "pos": (B,) int32}.  Unlike
+    :func:`decode_step`, lanes are independent requests: each has its own
+    position and its own page list, which is what lets the paged serving
+    engine admit/retire requests between steps with no wave barrier.
+
+    Only the dense uniform-stack architectures (the qwen family) are
+    supported — sliding-window / hybrid / enc-dec segments keep their
+    contiguous caches for now (see ROADMAP).
+    """
+    if cfg.arch_type != "dense" or cfg.local_global_ratio or cfg.sliding_window:
+        raise NotImplementedError(
+            f"paged decode supports dense uniform stacks only, not "
+            f"{cfg.name} (arch_type={cfg.arch_type})")
+    h = embed(params, cfg, batch["token"], ctx)
+    B = h.shape[0]
+    L = cfg.n_layers
+    bt, pos = cache["block_tables"], cache["pos"]
+    # block tables / positions are shared by every layer; pools are per-layer
+    ext = {"kpool": cache["kpool"], "vpool": cache["vpool"],
+           "block_tables": jnp.broadcast_to(bt, (L, *bt.shape)),
+           "pos": jnp.broadcast_to(pos, (L, B))}
+    body = _attn_seg_body(cfg, None, "decode")
+    h, ys = _run_stack(body, h, params["blocks"]["layers"], L, ctx=ctx,
+                       seg="layers", unroll=unroll, xs_extra=ext,
+                       layer_ids=list(range(L)))
+    logits = unembed(params, cfg, h, ctx)
+    return logits, {"kpool": ys["kpool"], "vpool": ys["vpool"],
+                    "block_tables": bt, "pos": pos + 1}
+
+
 # ---------------------------------------------------------------------------
 # Backbones
 # ---------------------------------------------------------------------------

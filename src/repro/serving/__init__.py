@@ -1,11 +1,27 @@
 """Serving subsystem: from single-engine waves to a deadline-aware fleet.
 
-Two serving paths share this package:
+Three serving paths share this package, all speaking one request contract
+(``Request`` for real prompts, ``SimRequest`` for shape-only traffic; both
+expose ``rid / prompt_len / max_new / t_arrive / deadline_abs`` plus the
+lifecycle fields the engines fill in):
 
-* **Real-compute path** — :mod:`engine` wraps prefill/decode of an actual
+* **Wave path** — :mod:`engine` wraps prefill/decode of an actual
   sim-scale model under jit with a swappable FPX precision policy;
   :mod:`scheduler` batches queued requests into padded waves on top of it.
   Latency is *attributed* from the analytic TPU model, tokens are real.
+  Kept as the reference implementation (and the equivalence oracle for the
+  paged path); the barrier between waves is its defining limitation.
+
+* **Paged continuous path (the fused path)** — :mod:`kv_cache` breaks the
+  dense decode cache into fixed-size pages in a shared pool with
+  per-request block tables; :mod:`paged_engine`'s ``ContinuousEngine``
+  admits EDF-ordered requests into free decode lanes *between real decode
+  steps*, frees pages the step a request retires, and reuses the analytic
+  batcher's drop/degrade admission math on the same ``core.latency``
+  clock.  Attention gathers K/V through the block table
+  (``models.attention`` paged branch; Pallas scalar-prefetch gather in
+  ``kernels.paged_gather``).  Greedy outputs are token-identical to the
+  wave path — same tokens, no barrier.
 
 * **Traffic-scale path** — the fleet simulator.  Its contract, end to end:
 
@@ -13,40 +29,49 @@ Two serving paths share this package:
     analytic roofline model's seconds (``core.latency``).  Traffic
     timestamps and engine-side prefill/decode costs are drawn from the
     same model, so arrival pressure and service capacity are directly
-    comparable numbers.
+    comparable numbers.  Engines drained to a horizon advance their clock
+    to it even when idle, so cross-engine backlog comparisons stay fair.
   - **Traffic** (:mod:`traffic`) draws seeded, replayable request streams:
     per-class arrival processes (Poisson / bursty MMPP), deadline
     distributions, prompt/decode shapes, reward weights.
   - **Continuous batching** (:mod:`continuous`) gives each engine
     operating point ``slots`` decode lanes with earliest-deadline-first
     admission between decode steps, per-request modeled latency, and a
-    drop/degrade admission policy for requests that cannot meet their
-    deadline.
+    drop/degrade admission policy (shared with the paged engine via
+    ``projected_finish`` / ``degraded_budget``) for requests that cannot
+    meet their deadline.
   - **Fleet** (:mod:`fleet`) routes each request across a pool of
     (model, gamma) operating points via ``fpx.select_for_slack`` —
     best quality whose service time fits the request's remaining
     deadline slack — and feeds realized on-time reward back into a
-    per-traffic-class ``fpx.OnlineSelector``.
+    per-traffic-class ``fpx.OnlineSelector``.  The pool may be analytic
+    batchers *or* live paged engines (``FleetRouter(engines=...)``): the
+    router is agnostic because both speak the same interface.
   - **Metrics** (:mod:`metrics`) reduces retired requests to SLO numbers:
     deadline hit-rate, p50/p99 modeled latency, and goodput (reward from
     on-time actions only).
 
-The two paths meet at the operating point: the same ``fpx.Candidate``
-that parameterizes a simulated engine can be applied to a live
-``ServingEngine`` via ``set_policy``.  Fusing them fully (admitting real
-prompts mid-flight) needs KV-cache paging — tracked in ROADMAP.
+The paths meet at the operating point: the same ``fpx.Candidate`` that
+parameterizes a simulated engine can be applied to a live engine via its
+``ExecContext`` precision policy.  ``benchmarks/table_paged.py`` measures
+the fusion: wave vs. paged-continuous on identical requests — same tokens,
+lower p99, higher goodput.
 """
-from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.continuous import (ContinuousBatcher, LatencyProfile,
+                                      degraded_budget, projected_finish)
 from repro.serving.engine import GenerationResult, ServingEngine
 from repro.serving.fleet import FleetRouter, pool_candidates
+from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import SLOReport, summarize
+from repro.serving.paged_engine import ContinuousEngine
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.traffic import (SCENARIOS, SimRequest, TrafficClass,
                                    generate, scenario)
 
 __all__ = [
-    "ContinuousBatcher", "LatencyProfile", "GenerationResult",
-    "ServingEngine", "FleetRouter", "pool_candidates", "SLOReport",
-    "summarize", "Request", "Scheduler", "SCENARIOS", "SimRequest",
-    "TrafficClass", "generate", "scenario",
+    "ContinuousBatcher", "ContinuousEngine", "LatencyProfile",
+    "GenerationResult", "ServingEngine", "FleetRouter", "PagedKVCache",
+    "pool_candidates", "SLOReport", "summarize", "Request", "Scheduler",
+    "SCENARIOS", "SimRequest", "TrafficClass", "generate", "scenario",
+    "degraded_budget", "projected_finish",
 ]

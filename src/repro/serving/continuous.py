@@ -61,12 +61,18 @@ class LatencyProfile:
         return t
 
     def step_s(self, n_active: int, context: int) -> float:
-        """One batched decode step: ``n_active`` slots each emit a token."""
-        key = (n_active, max(1, context // _CTX_BUCKET))
+        """One batched decode step: ``n_active`` slots each emit a token.
+
+        The cost is memoized per context *bucket* and always evaluated at
+        the bucket-representative context (``bucket * _CTX_BUCKET``), so the
+        modeled cost of a bucket is independent of which exact context
+        happened to be seen first — call order cannot skew the clock."""
+        bucket = max(1, context // _CTX_BUCKET)
+        key = (n_active, bucket)
         t = self._step.get(key)
         if t is None:
             t = lat_mod.step_latency(self.cfg, n_tokens=n_active,
-                                     context=max(1, context),
+                                     context=bucket * _CTX_BUCKET,
                                      w_bits=self.avg_bits, hw=self.hw)
             self._step[key] = t
         return t
@@ -89,6 +95,45 @@ class _Running:
     req: SimRequest
     remaining: int
     context: int
+
+
+# ---------------------------------------------------------------------------
+# Admission math, shared by the analytic batcher and the live paged engine
+# (serving.paged_engine) — both project finish times on the same clock.
+# ---------------------------------------------------------------------------
+
+def projected_finish(profile: LatencyProfile, t_now: float,
+                     n_active_after: int, req, n_tokens: int) -> float:
+    """Finish-time projection if ``req`` were admitted now: prefill stalls
+    the engine, then ``n_tokens`` steps at the post-admission occupancy
+    (context taken at the request's mid-decode point)."""
+    step = profile.step_s(n_active_after, req.prompt_len + n_tokens // 2)
+    return t_now + profile.prefill_s(req.prompt_len) + n_tokens * step
+
+
+def degraded_budget(profile: LatencyProfile, t_now: float,
+                    n_active_after: int, req) -> int:
+    """Largest token budget that still fits ``req``'s deadline, with the
+    step cost *re-projected at the trimmed budget's own context* (iterated
+    to a fixed point).  A budget derived from the original ``max_new``'s
+    context alone can overshoot: the first trim changes the context the
+    step cost was computed at.  Starting from ``max_new`` and shrinking
+    monotonically, the fixed point satisfies
+    ``projected_finish(..., n) <= req.deadline_abs``.  Returns 0 when not
+    even one token fits (caller drops)."""
+    slack = req.deadline_abs - t_now - profile.prefill_s(req.prompt_len)
+    if slack <= 0:
+        return 0
+    n = req.max_new
+    while n >= 1:
+        step = profile.step_s(n_active_after, req.prompt_len + n // 2)
+        if step <= 0:
+            return n
+        fit = min(n, int(slack / step))
+        if fit == n:
+            return n
+        n = fit
+    return 0
 
 
 class ContinuousBatcher:
@@ -117,12 +162,8 @@ class ContinuousBatcher:
     # -- admission ----------------------------------------------------------
 
     def _projected_finish(self, req: SimRequest, n_tokens: int) -> float:
-        """Finish-time projection if admitted now: prefill stalls the engine,
-        then ``n_tokens`` steps at the post-admission occupancy."""
-        step = self.profile.step_s(len(self.active) + 1,
-                                   req.prompt_len + n_tokens // 2)
-        return self.t + self.profile.prefill_s(req.prompt_len) \
-            + n_tokens * step
+        return projected_finish(self.profile, self.t, len(self.active) + 1,
+                                req, n_tokens)
 
     def _admit_one(self) -> bool:
         """Admit the earliest-deadline *arrived* pending request, applying
@@ -137,20 +178,12 @@ class ContinuousBatcher:
             if self.policy != "serve" \
                     and self._projected_finish(req, n_tok) > req.deadline_abs:
                 if self.policy == "degrade":
-                    step = self.profile.step_s(
-                        len(self.active) + 1, req.prompt_len + n_tok // 2)
-                    slack = req.deadline_abs - self.t \
-                        - self.profile.prefill_s(req.prompt_len)
-                    n_tok = min(n_tok, int(slack / step)) if step > 0 else 0
+                    n_tok = degraded_budget(self.profile, self.t,
+                                            len(self.active) + 1, req)
                 else:
                     n_tok = 0
                 if n_tok < 1:
-                    req.dropped = True
-                    req.t_finish = self.t
-                    req.met_deadline = False
-                    self.dropped.append(req)
-                    if self.on_retire is not None:
-                        self.on_retire(req)
+                    retire_dropped(self, req)
                     continue                     # slot still free; try next
             req.t_admit = self.t
             self.t += self.profile.prefill_s(req.prompt_len)
@@ -179,28 +212,21 @@ class ContinuousBatcher:
             req = run.req
             req.t_finish = self.t
             req.latency_s = self.t - req.t_arrive
-            req.met_deadline = req.latency_s <= req.deadline_s
+            # deadline_abs, not deadline_s: a Request with no SLO
+            # (deadline_s=None) projects to +inf and always meets it
+            req.met_deadline = req.t_finish <= req.deadline_abs
             self.completed.append(req)
             if self.on_retire is not None:
                 self.on_retire(req)
         self.active = still
 
+    def _n_active(self) -> int:
+        return len(self.active)
+
     def drain(self, until: Optional[float] = None) -> None:
         """Advance the engine clock to ``until`` (or to empty), admitting
         arrivals into free slots between decode steps."""
-        while True:
-            if not self.active and self.pending:
-                nxt = min(r.t_arrive for r in self.pending)
-                if until is not None and nxt >= until and nxt > self.t:
-                    return                       # idle until past the horizon
-                self.t = max(self.t, nxt)
-            if until is not None and self.t >= until:
-                return
-            self._admit()
-            if self.active:
-                self._decode_step()
-            elif not self.pending:
-                return
+        drive(self, until)
 
     def run(self) -> List[SimRequest]:
         self.drain(until=None)
@@ -213,8 +239,58 @@ class ContinuousBatcher:
         how far this engine's clock runs ahead plus queued work divided
         over its slots.  A deliberate first-order heuristic — the router
         only needs enough signal to spread load and respect slack."""
-        step1 = self.profile.step_s(max(1, len(self.active)), _CTX_BUCKET * 4)
-        work = sum(r.remaining for r in self.active) * step1
-        for r in self.pending:
-            work += self.profile.prefill_s(r.prompt_len) + r.max_new * step1
-        return max(0.0, self.t - now) + work / self.slots
+        return estimate_backlog(self.profile, self.t, now,
+                                [r.remaining for r in self.active],
+                                self.pending, self.slots)
+
+
+def retire_dropped(eng, req) -> None:
+    """Shared drop bookkeeping: mark ``req`` rejected at ``eng``'s current
+    clock, record it, and fire the retirement callback (drops retire
+    through the same feedback path as completions)."""
+    req.dropped = True
+    req.t_finish = eng.t
+    req.met_deadline = False
+    eng.dropped.append(req)
+    if eng.on_retire is not None:
+        eng.on_retire(req)
+
+
+def drive(eng, until: Optional[float] = None) -> None:
+    """The drain loop shared by the analytic batcher and the live paged
+    engine: advance ``eng`` to ``until`` (or to empty), admitting arrivals
+    between decode steps.  ``eng`` exposes ``t / pending / _n_active /
+    _admit / _decode_step`` — the engine flavors differ only in what a
+    decode step *does*, never in how time moves.
+
+    Clock contract: an idle engine still advances its clock to ``until``
+    before returning — engines drained to the same horizon must agree on
+    "now", or ``backlog_s`` comparisons across a fleet are skewed by
+    which engine happened to idle last."""
+    while True:
+        if eng._n_active() == 0 and eng.pending:
+            nxt = min(r.t_arrive for r in eng.pending)
+            if until is not None and nxt >= until and nxt > eng.t:
+                eng.t = max(eng.t, until)        # idle through the horizon
+                return
+            eng.t = max(eng.t, nxt)
+        if until is not None and eng.t >= until:
+            return
+        eng._admit()
+        if eng._n_active():
+            eng._decode_step()
+        elif not eng.pending:
+            if until is not None:
+                eng.t = max(eng.t, until)        # empty: idle to the horizon
+            return
+
+
+def estimate_backlog(profile: LatencyProfile, t: float, now: float,
+                     active_remaining: List[int], pending, slots: int,
+                     ) -> float:
+    """The router-facing wait estimate shared by every engine flavor."""
+    step1 = profile.step_s(max(1, len(active_remaining)), _CTX_BUCKET * 4)
+    work = sum(active_remaining) * step1
+    for r in pending:
+        work += profile.prefill_s(r.prompt_len) + r.max_new * step1
+    return max(0.0, t - now) + work / slots

@@ -86,7 +86,13 @@ class ServingEngine:
 
     def generate(self, batch: Dict[str, jax.Array], *, max_new: int = 16,
                  key=None, temp: float = 0.0) -> GenerationResult:
-        """batch: {"tokens": (B, S)} (+ vision/audio for those archs)."""
+        """batch: {"tokens": (B, S)} (+ vision/audio for those archs).
+
+        ``temp > 0`` samples; ``key=None`` then falls back to a fixed seed
+        (``PRNGKey(0)``) instead of crashing inside ``jax.random.split`` —
+        pass a key explicitly for independent draws across calls."""
+        if temp > 0.0 and key is None:
+            key = jax.random.PRNGKey(0)
         tokens = jnp.asarray(batch["tokens"])
         B, S = tokens.shape
         assert S + max_new <= self.max_ctx, (S, max_new, self.max_ctx)

@@ -109,18 +109,30 @@ class FleetRouter:
                  quality: Callable[[Candidate], float],
                  slots: int = 4, policy: str = "degrade",
                  mode: str = "fpx", epsilon: float = 0.1, seed: int = 0,
-                 hw: Hardware = V5E):
+                 hw: Hardware = V5E, engines: Optional[Sequence] = None):
+        """``engines``: optional pre-built engine per candidate — anything
+        speaking the batcher interface (``submit / drain / backlog_s /
+        profile / on_retire``), e.g. live paged
+        :class:`~repro.serving.paged_engine.ContinuousEngine` instances.
+        Default: one analytic ``ContinuousBatcher`` per operating point."""
         assert mode in ("fpx", "bandit"), mode
         self.cands = list(candidates)
         self.quality = quality
         self.mode = mode
         self.epsilon = epsilon
         self.seed = seed
-        self.engines = [
-            ContinuousBatcher(LatencyProfile(c.cfg, c.avg_bits, hw=hw),
-                              slots=slots, policy=policy,
-                              on_retire=self._retire)
-            for c in self.cands]
+        if engines is None:
+            self.engines = [
+                ContinuousBatcher(LatencyProfile(c.cfg, c.avg_bits, hw=hw),
+                                  slots=slots, policy=policy,
+                                  on_retire=self._retire)
+                for c in self.cands]
+        else:
+            assert len(engines) == len(self.cands), \
+                (len(engines), len(self.cands))
+            self.engines = list(engines)
+            for e in self.engines:
+                e.on_retire = self._retire
         self.selectors: Dict[str, OnlineSelector] = {}
         self.retired: List[SimRequest] = []
 

@@ -1,0 +1,138 @@
+"""Paged KV cache: fixed-size pages in a shared pool, per-request page lists.
+
+The wave engine's decode cache is a dense (B, max_ctx, Hkv, D) slab per
+layer: every batch lane owns ``max_ctx`` slots for its whole lifetime, so a
+lane cannot be handed to a new request until the old one retires — the
+physical root of the wave barrier.  This module breaks the slab into
+``page_size``-token *pages* inside one shared per-layer pool:
+
+* A request is admitted by allocating just enough pages to cover its prompt
+  plus decode budget; its **block table** (a fixed-width list of page ids)
+  maps logical positions to pool pages.
+* Attention gathers K/V through the block table
+  (:func:`repro.models.attention.attn_apply` paged branch, optionally via
+  the Pallas scalar-prefetch kernel in ``kernels.paged_gather``).
+* On retirement the pages go back to the free list **immediately**, so a
+  new request can be admitted mid-flight of everyone else — continuous
+  batching on real compute, the fusion ROADMAP tracked.
+
+Page accounting (free list, block tables, per-lane positions) is host-side
+numpy — it is O(pages) bookkeeping between jit'd steps.  The pools
+themselves are device arrays threaded functionally through
+``transformer.paged_decode_step``.
+
+Page 0 is reserved as a *dummy page*: idle decode lanes point their whole
+table at it so one compiled decode step serves any occupancy (fixed-lane
+batching — no recompile as requests come and go).  Writes from idle lanes
+collide harmlessly there; their outputs are discarded.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+#: id of the page idle lanes point at; never allocated to a request.
+DUMMY_PAGE = 0
+
+
+class PagedKVCache:
+    """Shared page pool + per-slot block tables for one engine."""
+
+    def __init__(self, cfg: ModelConfig, *, slots: int, n_pages: int,
+                 page_size: int = 16, max_ctx: int = 256,
+                 dtype=jnp.float32):
+        assert n_pages >= 2, "need at least one dummy + one real page"
+        self.cfg = cfg
+        self.slots = slots
+        self.page_size = page_size
+        self.max_ctx = max_ctx
+        #: block-table width: every slot can address up to max_ctx tokens
+        self.table_width = math.ceil(max_ctx / page_size)
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+                 cfg.head_dim)
+        self.kpool = jnp.zeros(shape, dtype)
+        self.vpool = jnp.zeros(shape, dtype)
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(1, n_pages))   # 0 is the dummy
+        self._owned: List[List[int]] = [[] for _ in range(slots)]
+        self.block_tables = np.full((slots, self.table_width), DUMMY_PAGE,
+                                    np.int32)
+        self.pos = np.zeros((slots,), np.int32)
+
+    # -- allocation ----------------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return math.ceil(n_tokens / self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (n_tokens <= self.max_ctx
+                and self.pages_needed(n_tokens) <= self.free_pages)
+
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """Give ``slot`` pages covering ``n_tokens`` logical positions."""
+        need = self.pages_needed(n_tokens)
+        assert not self._owned[slot], f"slot {slot} already allocated"
+        assert need <= len(self._free), (need, len(self._free))
+        assert n_tokens <= self.max_ctx, (n_tokens, self.max_ctx)
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        self.block_tables[slot, :] = DUMMY_PAGE
+        self.block_tables[slot, :need] = pages
+        self.pos[slot] = 0
+        return list(pages)
+
+    def free(self, slot: int) -> List[int]:
+        """Retire ``slot``: return its pages to the free list immediately."""
+        pages = self._owned[slot]
+        self._free.extend(pages)
+        self._owned[slot] = []
+        self.block_tables[slot, :] = DUMMY_PAGE
+        self.pos[slot] = 0
+        return list(pages)
+
+    # -- data movement -------------------------------------------------------
+
+    def write_prefill(self, slot: int, k: jax.Array, v: jax.Array) -> None:
+        """Scatter a request's prefill K/V into its pages.
+
+        k/v: (n_layers, S, Hkv, D) — the dense cache ``transformer.prefill``
+        built for this request alone, unpadded."""
+        L, S, H, D = k.shape
+        ps = self.page_size
+        n_pg = self.pages_needed(S)
+        pids = np.asarray(self._owned[slot][:n_pg], np.int32)
+        pad = n_pg * ps - S
+        if pad:
+            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+        kp = k.reshape(L, n_pg, ps, H, D)
+        vp = v.reshape(L, n_pg, ps, H, D)
+        self.kpool = self.kpool.at[:, pids].set(kp.astype(self.kpool.dtype))
+        self.vpool = self.vpool.at[:, pids].set(vp.astype(self.vpool.dtype))
+        self.pos[slot] = S
+
+    def decode_cache(self) -> dict:
+        """The pytree ``transformer.paged_decode_step`` consumes."""
+        return {"kpool": self.kpool, "vpool": self.vpool,
+                "block_tables": jnp.asarray(self.block_tables),
+                "pos": jnp.asarray(self.pos)}
+
+    def update_from(self, new_cache: dict) -> None:
+        """Write back the pools a decode step returned (positions stay
+        host-managed: idle lanes must not advance)."""
+        self.kpool = new_cache["kpool"]
+        self.vpool = new_cache["vpool"]
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently owned by live requests."""
+        return 1.0 - self.free_pages / (self.n_pages - 1)

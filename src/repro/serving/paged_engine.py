@@ -1,0 +1,270 @@
+"""Continuous batching on real compute: the paged-KV serving engine.
+
+This is the fusion of the repo's two serving paths (ROADMAP "KV-cache
+paging").  The wave :class:`~repro.serving.scheduler.Scheduler` serves real
+tokens but in padded waves with a full barrier; the analytic
+:class:`~repro.serving.continuous.ContinuousBatcher` admits and retires
+requests mid-flight but never touches a model.  :class:`ContinuousEngine`
+does both at once:
+
+* **Real compute.**  Prompts are prefilled through the actual jit'd model
+  and every decode step emits real tokens for every occupied lane —
+  greedy outputs are token-identical to the wave engine's.
+* **Paged KV cache** (:mod:`~repro.serving.kv_cache`).  Each admitted
+  request gets just enough fixed-size pages from a shared pool; attention
+  gathers through per-lane block tables
+  (:func:`repro.models.attention.attn_apply` paged branch).  Pages return
+  to the free list the step a request retires, so the next request is
+  admitted *mid-flight of everyone else* — no wave barrier.
+* **Fixed-lane batching.**  The decode step always runs at ``slots`` lanes;
+  idle lanes point at the reserved dummy page and their outputs are
+  discarded.  One compiled step serves every occupancy.
+* **The analytic clock.**  Between real steps the engine advances the same
+  ``core.latency`` roofline clock the traffic simulator and the FPX
+  controller use (CPU wall time is meaningless here), and reuses the
+  *identical* EDF + drop/degrade admission math as the analytic batcher
+  (:func:`~repro.serving.continuous.projected_finish` /
+  :func:`~repro.serving.continuous.degraded_budget`).
+
+The engine accepts both request flavors of the serving contract:
+:class:`~repro.serving.scheduler.Request` (real prompt tokens) and
+:class:`~repro.serving.traffic.SimRequest` (shape only — the engine
+synthesizes deterministic tokens), so a
+:class:`~repro.serving.fleet.FleetRouter` can drive a pool of live paged
+engines with the same traffic streams it feeds the analytic fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.latency import Hardware, V5E
+from repro.models import transformer
+from repro.models.modules import ExecContext
+from repro.serving import sampler as sampler_mod
+from repro.serving.continuous import (LatencyProfile, degraded_budget,
+                                      estimate_backlog, projected_finish,
+                                      retire_dropped)
+from repro.serving.continuous import drive as continuous_drive
+from repro.serving.kv_cache import PagedKVCache
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: object                   # Request or SimRequest
+    last_token: int               # token the next decode step consumes
+    remaining: int                # decode steps left
+    context: int                  # prompt + tokens written so far
+    produced: List[int] = dataclasses.field(default_factory=list)
+
+
+class ContinuousEngine:
+    """EDF continuous batching with a paged KV cache on a live model."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 max_ctx: int = 256, policy: str = "degrade",
+                 profile: Optional[LatencyProfile] = None,
+                 latency_cfg: Optional[ModelConfig] = None,
+                 avg_bits: float = 16.0, hw: Hardware = V5E,
+                 ctx: Optional[ExecContext] = None,
+                 on_retire: Optional[Callable] = None,
+                 prompt_seed: int = 0, unroll: bool = True):
+        """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
+        tokens (plus the reserved dummy page); size it *below* that to study
+        page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
+        parameterize the analytic clock exactly as in the analytic batcher,
+        so wave vs. paged comparisons share one notion of time."""
+        if cfg.arch_type != "dense" or cfg.local_global_ratio \
+                or cfg.sliding_window:
+            raise NotImplementedError(
+                "ContinuousEngine needs the paged decode path, which "
+                f"supports dense uniform stacks only (got {cfg.name})")
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.policy = policy
+        assert policy in ("drop", "degrade", "serve"), policy
+        self.profile = profile or LatencyProfile(latency_cfg or cfg,
+                                                 avg_bits, hw=hw)
+        self.ctx = ctx or ExecContext()
+        self.on_retire = on_retire
+        self.prompt_seed = prompt_seed
+        width = -(-max_ctx // page_size)
+        if n_pages is None:
+            n_pages = slots * width + 1
+        self.cache = PagedKVCache(cfg, slots=slots, n_pages=n_pages,
+                                  page_size=page_size, max_ctx=max_ctx)
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
+                                             unroll=unroll))
+        self._decode = jax.jit(
+            lambda p, b, c: transformer.paged_decode_step(p, cfg, b, c,
+                                                          self.ctx,
+                                                          unroll=unroll))
+        self.t = 0.0                      # engine-local analytic clock
+        self.lanes: List[Optional[_Lane]] = [None] * slots
+        self.pending: List = []
+        self.completed: List = []
+        self.dropped: List = []
+        #: (rid, page ids) per admission — observability for tests/benchmarks
+        self.admissions: List[Tuple[int, List[int]]] = []
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, req) -> None:
+        self.pending.append(req)
+
+    def _prompt_for(self, req) -> np.ndarray:
+        p = getattr(req, "prompt", None)
+        if p is not None:
+            return np.asarray(p, np.int32)
+        # SimRequest: deterministic synthetic tokens for its prompt_len
+        rng = np.random.default_rng(self.prompt_seed * 7919 + req.rid)
+        return rng.integers(0, self.cfg.vocab, req.prompt_len,
+                            dtype=np.int32)
+
+    # -- admission -----------------------------------------------------------
+
+    def _n_active(self) -> int:
+        return sum(l is not None for l in self.lanes)
+
+    def _free_lane(self) -> Optional[int]:
+        for i, l in enumerate(self.lanes):
+            if l is None:
+                return i
+        return None
+
+    def _drop(self, req) -> None:
+        retire_dropped(self, req)
+
+    def _admit_one(self) -> bool:
+        """Admit the earliest-deadline arrived request into a free lane,
+        with the shared drop/degrade projection *plus* page feasibility:
+        a request that cannot get pages right now keeps its place in the
+        EDF queue and waits for a retirement to free some."""
+        while True:
+            arrived = [r for r in self.pending if r.t_arrive <= self.t]
+            lane = self._free_lane()
+            if not arrived or lane is None:
+                return False
+            req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
+            S = req.prompt_len
+            # hard capability cap: the block table addresses max_ctx tokens
+            cap = self.cache.max_ctx - S + 1
+            if cap < 1:
+                self.pending.remove(req)
+                self._drop(req)               # prompt alone can never fit
+                continue
+            n_tok = min(req.max_new, cap)
+            if self.policy != "serve" and projected_finish(
+                    self.profile, self.t, self._n_active() + 1, req,
+                    n_tok) > req.deadline_abs:
+                if self.policy == "degrade":
+                    n_tok = min(cap, degraded_budget(
+                        self.profile, self.t, self._n_active() + 1, req))
+                else:
+                    n_tok = 0
+                if n_tok < 1:
+                    self.pending.remove(req)
+                    self._drop(req)
+                    continue                  # lane still free; try next
+            # page feasibility: prompt + (n_tok - 1) decode writes
+            need = self.cache.pages_needed(S + n_tok - 1)
+            if need > self.cache.n_pages - 1:
+                self.pending.remove(req)
+                self._drop(req)               # exceeds the whole pool:
+                continue                      # waiting would hang forever
+            if not self.cache.can_admit(S + n_tok - 1):
+                return False                  # wait for pages (EDF head)
+            self.pending.remove(req)
+            self._start(lane, req, n_tok)
+            return True
+
+    def _admit(self) -> None:
+        while self._admit_one():
+            pass
+
+    def _start(self, lane: int, req, n_tok: int) -> None:
+        """Real prefill into freshly allocated pages; the first output token
+        comes from the prefill logits (same contract as engine.generate)."""
+        S = req.prompt_len
+        pages = self.cache.alloc(lane, S + n_tok - 1)
+        self.admissions.append((req.rid, pages))
+        toks = jnp.asarray(self._prompt_for(req)[None, :])
+        logits, dense_cache = self._prefill(self.params, {"tokens": toks})
+        kv = dense_cache["layers"]
+        self.cache.write_prefill(lane, kv["k"][:, 0], kv["v"][:, 0])
+        t0 = int(np.asarray(sampler_mod.greedy(logits))[0, 0])
+        req.t_admit = self.t
+        req.tokens_done = 1
+        self.t += self.profile.prefill_s(S)
+        lane_state = _Lane(req, last_token=t0, remaining=n_tok - 1,
+                           context=S, produced=[t0])
+        if lane_state.remaining == 0:
+            self._finish(req, lane_state, lane_allocated=lane)
+        else:
+            self.lanes[lane] = lane_state
+
+    # -- the decode loop -----------------------------------------------------
+
+    def _decode_step(self) -> None:
+        """One real batched decode step for every occupied lane."""
+        active = [(i, l) for i, l in enumerate(self.lanes) if l is not None]
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i, l in active:
+            toks[i, 0] = l.last_token
+        logits, new_cache = self._decode(self.params,
+                                         {"token": jnp.asarray(toks)},
+                                         self.cache.decode_cache())
+        self.cache.update_from(new_cache)
+        nxt = np.asarray(sampler_mod.greedy(logits))
+        self.t += self.profile.step_s(len(active),
+                                      max(l.context for _, l in active))
+        for i, l in active:
+            self.cache.pos[i] += 1            # the step wrote position pos
+            l.context += 1
+            tok = int(nxt[i, 0])
+            l.produced.append(tok)
+            l.last_token = tok
+            l.remaining -= 1
+            l.req.tokens_done += 1
+            if l.remaining == 0:
+                self.lanes[i] = None
+                self._finish(l.req, l, lane_allocated=i)
+
+    def _finish(self, req, lane_state: _Lane, *, lane_allocated: int) -> None:
+        self.cache.free(lane_allocated)       # pages reusable immediately
+        req.t_finish = self.t
+        req.latency_s = self.t - req.t_arrive
+        req.met_deadline = req.t_finish <= req.deadline_abs
+        req.result_tokens = np.asarray(lane_state.produced, np.int32)
+        self.completed.append(req)
+        if self.on_retire is not None:
+            self.on_retire(req)
+
+    # -- driving -------------------------------------------------------------
+
+    def drain(self, until: Optional[float] = None) -> None:
+        """Advance the engine to ``until`` (or to empty), running real
+        decode steps and admitting arrivals between them — the shared
+        drive loop, so clock semantics cannot diverge from the analytic
+        batcher's."""
+        continuous_drive(self, until)
+
+    def run(self) -> List:
+        self.drain(until=None)
+        return self.completed
+
+    # -- router-facing estimates ---------------------------------------------
+
+    def backlog_s(self, now: float) -> float:
+        return estimate_backlog(self.profile, self.t, now,
+                                [l.remaining for l in self.lanes
+                                 if l is not None],
+                                self.pending, self.slots)

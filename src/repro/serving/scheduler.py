@@ -21,15 +21,45 @@ from repro.serving.engine import ServingEngine
 
 @dataclasses.dataclass
 class Request:
+    """A real-compute request.
+
+    Shares the serving contract with :class:`~repro.serving.traffic.
+    SimRequest`: both expose ``rid / prompt_len / max_new / t_arrive /
+    deadline_abs`` plus the lifecycle fields below, so the same object can
+    be driven through the wave :class:`Scheduler`, the analytic
+    :class:`~repro.serving.continuous.ContinuousBatcher`, or the live paged
+    :class:`~repro.serving.paged_engine.ContinuousEngine`.  ``Request``
+    additionally carries the actual prompt tokens (``SimRequest`` only has
+    a length; live engines synthesize tokens for it)."""
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new: int = 16
-    deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None   # relative to t_arrive; None = no SLO
     extra: Optional[Dict] = None  # vision/audio inputs
+    t_arrive: float = 0.0
+    cls_name: str = "default"
+    reward_weight: float = 1.0
 
     result_tokens: Optional[np.ndarray] = None
     latency_s: Optional[float] = None
     met_deadline: Optional[bool] = None
+    # lifecycle, filled by the continuous engines (SimRequest contract)
+    engine_idx: Optional[int] = None
+    t_admit: Optional[float] = None
+    t_finish: Optional[float] = None
+    tokens_done: int = 0
+    dropped: bool = False
+    reward: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def deadline_abs(self) -> float:
+        if self.deadline_s is None:
+            return float("inf")
+        return self.t_arrive + self.deadline_s
 
 
 class Scheduler:

@@ -1,0 +1,239 @@
+"""Paged KV-cache serving: block-table cache, Pallas gather, and the live
+``ContinuousEngine`` — token-equivalence with the wave scheduler, mid-flight
+admission with page reuse (no wave barrier), admission policies on real
+compute, and fleet routing over live paged engines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import transformer as T
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import DUMMY_PAGE, PagedKVCache
+from repro.serving.paged_engine import ContinuousEngine
+from repro.serving.scheduler import Request, Scheduler
+from repro.serving.traffic import SimRequest
+
+
+CFG = get_config("qwen-sim-1.5b")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, n).astype(np.int32) for n in lens]
+
+
+def _reqs(prompts, *, max_new=4, deadline=10.0, arrive=0.0):
+    return [Request(rid=i, prompt=p.copy(), max_new=max_new,
+                    deadline_s=deadline, t_arrive=arrive)
+            for i, p in enumerate(prompts)]
+
+
+# -- gather kernel ----------------------------------------------------------
+
+def test_paged_gather_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    for n_pages, ps, H, D, B, P in ((6, 4, 2, 8, 2, 3), (9, 8, 1, 16, 3, 2)):
+        pool = jnp.asarray(rng.normal(size=(n_pages, ps, H, D))
+                           .astype(np.float32))
+        bt = jnp.asarray(rng.integers(0, n_pages, (B, P)).astype(np.int32))
+        got = kernel_ops.gather_pages(pool, bt, use_pallas=True)
+        ref = kernel_ref.gather_pages_ref(pool, bt).reshape(B, P * ps, H, D)
+        assert np.array_equal(np.asarray(got), np.asarray(ref))
+        jnp_path = kernel_ops.gather_pages(pool, bt, use_pallas=False)
+        assert np.array_equal(np.asarray(got), np.asarray(jnp_path))
+
+
+# -- page accounting --------------------------------------------------------
+
+def test_kv_cache_alloc_free_accounting():
+    cache = PagedKVCache(CFG, slots=2, n_pages=7, page_size=8, max_ctx=32)
+    assert cache.free_pages == 6 and cache.table_width == 4
+    a = cache.alloc(0, 17)                     # 3 pages
+    assert len(a) == 3 and DUMMY_PAGE not in a
+    assert cache.free_pages == 3
+    assert list(cache.block_tables[0, :3]) == a
+    assert all(cache.block_tables[0, 3:] == DUMMY_PAGE)
+    assert cache.utilization() == pytest.approx(0.5)
+    b = cache.alloc(1, 24)                     # 3 pages
+    assert not (set(a) & set(b))               # disjoint ownership
+    assert not cache.can_admit(8)              # pool exhausted
+    freed = cache.free(0)
+    assert sorted(freed) == sorted(a)
+    assert cache.free_pages == 3 and cache.can_admit(24)
+    assert all(cache.block_tables[0] == DUMMY_PAGE) and cache.pos[0] == 0
+
+
+def test_paged_decode_rejects_unsupported_arch(params):
+    gcfg = get_config("gemma3-4b")
+    with pytest.raises(NotImplementedError, match="dense uniform"):
+        T.paged_decode_step({}, gcfg, {"token": jnp.zeros((1, 1), jnp.int32)},
+                            {})
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(params, gcfg)
+
+
+# -- equivalence with the wave scheduler (acceptance) -----------------------
+
+def test_paged_engine_token_identical_to_wave_batch(params):
+    """Same greedy requests, equal-length prompts: the paged engine's
+    continuous decode produces token-identical outputs to one padded wave."""
+    prompts = _prompts([12, 12, 12])
+    sched = Scheduler(ServingEngine(params, CFG, max_ctx=64), batch_slots=4)
+    wave = _reqs(prompts)
+    for r in wave:
+        sched.submit(r)
+    sched.run()
+
+    pe = ContinuousEngine(params, CFG, slots=4, page_size=8, max_ctx=64,
+                          policy="serve")
+    paged = _reqs(prompts)
+    for r in paged:
+        pe.submit(r)
+    pe.run()
+    for w, p in zip(wave, paged):
+        assert np.array_equal(w.result_tokens, p.result_tokens), w.rid
+        assert p.tokens_done == p.max_new and p.met_deadline
+
+
+def test_paged_engine_token_identical_ragged(params):
+    """Ragged prompts: compared per-request against the unpadded wave path
+    (batch_slots=1), since left-padding changes what a prompt attends to."""
+    prompts = _prompts([8, 20, 13])
+    sched = Scheduler(ServingEngine(params, CFG, max_ctx=64), batch_slots=1)
+    wave = _reqs(prompts, max_new=5)
+    for r in wave:
+        sched.submit(r)
+    sched.run()
+
+    pe = ContinuousEngine(params, CFG, slots=3, page_size=8, max_ctx=64,
+                          policy="serve")
+    paged = _reqs(prompts, max_new=5)
+    for r in paged:
+        pe.submit(r)
+    pe.run()
+    for w, p in zip(wave, paged):
+        assert np.array_equal(w.result_tokens, p.result_tokens), w.rid
+
+
+def test_mid_flight_retire_and_page_reuse(params):
+    """The no-barrier property (acceptance): with mixed arrivals, a short
+    request retires and its pages are re-allocated to a later arrival while
+    the long request is still decoding."""
+    prompts = _prompts([8, 20, 13])
+    # pool of 8 allocatable pages: A needs 2, B needs 4, C needs 2 — C can
+    # only be admitted once A's pages are back in the free list.
+    pe = ContinuousEngine(params, CFG, slots=2, page_size=8, max_ctx=32,
+                          n_pages=9, policy="serve")
+    A = Request(rid=0, prompt=prompts[0], max_new=2, deadline_s=100.0)
+    B = Request(rid=1, prompt=prompts[1], max_new=12, deadline_s=100.0)
+    C = Request(rid=2, prompt=prompts[2], max_new=2, deadline_s=100.0,
+                t_arrive=1e-6)
+    for r in (A, B, C):
+        pe.submit(r)
+    pe.run()
+    # C was admitted after A retired but strictly before B finished...
+    assert A.t_finish <= C.t_admit < B.t_finish
+    assert C.t_finish < B.t_finish            # ...and retired mid-flight too
+    pages = {rid: set(p) for rid, p in pe.admissions}
+    assert pages[2] & pages[0]                # C physically reused A's pages
+    assert pe.cache.free_pages == 8           # everything returned at drain
+
+
+# -- admission policies on real compute -------------------------------------
+
+def test_paged_engine_degrade_trims_on_real_compute(params):
+    full = get_config("qwen2.5-1.5b")         # real-scale latency model
+    pe = ContinuousEngine(params, CFG, slots=1, page_size=8, max_ctx=128,
+                          latency_cfg=full, policy="degrade")
+    prefill = pe.profile.prefill_s(16)
+    step = pe.profile.step_s(1, 16)
+    prompts = _prompts([16])
+    r = Request(rid=0, prompt=prompts[0], max_new=64,
+                deadline_s=prefill + 6.5 * step)
+    pe.submit(r)
+    pe.run()
+    assert not r.dropped and r.met_deadline
+    assert 0 < r.tokens_done < 64             # trimmed, still on time
+    assert len(r.result_tokens) == r.tokens_done
+
+
+def test_paged_engine_drop_policy(params):
+    full = get_config("qwen2.5-1.5b")
+    retired = []
+    pe = ContinuousEngine(params, CFG, slots=1, page_size=8, max_ctx=128,
+                          latency_cfg=full, policy="drop",
+                          on_retire=retired.append)
+    prompts = _prompts([16, 16])
+    bad = Request(rid=0, prompt=prompts[0], max_new=32, deadline_s=1e-9)
+    ok = Request(rid=1, prompt=prompts[1], max_new=2, deadline_s=10.0)
+    pe.submit(bad)
+    pe.submit(ok)
+    pe.run()
+    assert bad.dropped and bad.tokens_done == 0 and bad.result_tokens is None
+    assert not ok.dropped and ok.met_deadline and len(ok.result_tokens) == 2
+    assert retired == [bad, ok]
+    assert pe.cache.free_pages == pe.cache.n_pages - 1   # nothing leaked
+
+
+def test_request_exceeding_pool_drops_instead_of_hanging(params):
+    """A request whose pages can never fit the pool (even empty) must be
+    dropped, not waited on forever — waiting deadlocks an idle engine."""
+    pe = ContinuousEngine(params, CFG, slots=2, page_size=8, n_pages=4,
+                          max_ctx=64, policy="serve")
+    prompts = _prompts([30, 8])
+    big = Request(rid=0, prompt=prompts[0], max_new=4, deadline_s=10.0)
+    ok = Request(rid=1, prompt=prompts[1], max_new=2, deadline_s=10.0)
+    pe.submit(big)
+    pe.submit(ok)
+    pe.run()                                  # must terminate
+    assert big.dropped and big.tokens_done == 0
+    assert not ok.dropped and len(ok.result_tokens) == 2
+
+
+# -- fleet routing over live engines ----------------------------------------
+
+def test_fleet_router_drives_live_paged_engines(params):
+    """The SimRequest/Request contract end-to-end: the same FleetRouter that
+    runs analytic batchers drives a pool of live paged engines, which
+    synthesize prompts for SimRequests and emit real tokens."""
+    from repro.serving import fleet as fleet_mod
+    from repro.serving.fleet import FleetRouter, pool_candidates
+
+    fast, slow = get_config("qwen2.5-1.5b"), get_config("qwen2.5-14b")
+    cands = pool_candidates(
+        [("qwen2.5-1.5b", fast, fleet_mod._synthetic_eps(fast), 1.0),
+         ("qwen2.5-14b", slow, fleet_mod._synthetic_eps(slow), 0.0)])
+    sim_params = {"qwen2.5-1.5b": params,
+                  "qwen2.5-14b": T.init_params(jax.random.PRNGKey(1),
+                                               get_config("qwen-sim-14b"))}
+    sim_cfgs = {"qwen2.5-1.5b": CFG,
+                "qwen2.5-14b": get_config("qwen-sim-14b")}
+    engines = [ContinuousEngine(sim_params[c.model_name],
+                                sim_cfgs[c.model_name], slots=2,
+                                page_size=8, max_ctx=64,
+                                latency_cfg=c.cfg, avg_bits=c.avg_bits)
+               for c in cands]
+    quality = {"qwen2.5-1.5b": 0.6, "qwen2.5-14b": 0.95}
+    router = FleetRouter(cands, quality=lambda c: quality[c.model_name],
+                         slots=2, engines=engines)
+    arrivals = [SimRequest(rid=i, cls_name="t", t_arrive=0.01 * i,
+                           prompt_len=16, max_new=4,
+                           deadline_s=0.04 if i % 2 else 2.0)
+                for i in range(6)]
+    out = router.run(arrivals)
+    assert len(out) == 6
+    served = [r for r in out if not r.dropped]
+    assert served and all(len(r.result_tokens) == r.tokens_done
+                          for r in served)
+    # tight deadlines landed on the fast engine, loose ones on the 14b
+    assert {r.engine_idx for r in arrivals if r.deadline_s < 0.1} == {0}
+    assert 1 in {r.engine_idx for r in arrivals if r.deadline_s > 1.0}
