@@ -1,0 +1,141 @@
+"""Bench regression gate: fail CI when serving benchmarks get worse.
+
+The bench-smoke job used to only *upload* the fresh ``results/*.csv`` —
+a PR could silently tank goodput or p99 and still go green.  This script
+turns the tables into a gate:
+
+1. **Baseline drift.**  The freshly produced ``results/table_paged.csv``
+   and ``results/table_chunked.csv`` are compared against the *committed*
+   copies (read via ``git show HEAD:<path>``, or ``--baseline-dir``):
+   goodput must not drop and p99 must not rise beyond ``--tol-pct``.  The
+   serving clock is the deterministic analytic roofline, so a genuine
+   improvement should be committed as an updated CSV, not waved through.
+2. **Structural orderings.**  Invariants the tables exist to prove are
+   re-checked from the fresh CSVs, so the job fails even if a benchmark's
+   own asserts are edited away: paged beats wave (p99 down, goodput up);
+   chunked prefill beats stall-prefill on trading p99 with no less total
+   goodput, at equal token counts.
+
+Usage:  python benchmarks/check_regression.py [--results DIR]
+            [--baseline-dir DIR] [--tol-pct 5]
+Exit status 0 = pass, 1 = regression (messages on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+TABLES = ("table_paged.csv", "table_chunked.csv")
+
+
+def read_rows(text: str):
+    rows = list(csv.DictReader(io.StringIO(text)))
+    if not rows:
+        raise SystemExit("empty CSV")
+    return rows
+
+
+def load_fresh(results_dir: str, name: str):
+    path = os.path.join(results_dir, name)
+    with open(path) as f:
+        return read_rows(f.read())
+
+
+def load_baseline(name: str, baseline_dir: str | None):
+    if baseline_dir is not None:
+        with open(os.path.join(baseline_dir, name)) as f:
+            return read_rows(f.read())
+    out = subprocess.run(
+        ["git", "show", f"HEAD:results/{name}"], cwd=REPO,
+        capture_output=True, text=True)
+    if out.returncode != 0:
+        raise SystemExit(f"cannot read committed baseline for {name}: "
+                         f"{out.stderr.strip()}")
+    return read_rows(out.stdout)
+
+
+def key_of(row):
+    # table_paged rows key on "path"; table_chunked on ("path", "class")
+    return (row["path"], row.get("class", ""))
+
+
+def check_drift(name: str, fresh, base, tol_pct: float, errors):
+    """Goodput must not drop, p99 must not rise, beyond tol_pct percent."""
+    fresh_by, base_by = ({key_of(r): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{name}: row set changed "
+                      f"{sorted(base_by)} -> {sorted(fresh_by)}; "
+                      "commit the regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        b_good, f_good = float(b["goodput"]), float(f["goodput"])
+        if f_good < b_good * (1 - tol):
+            errors.append(f"{name} {k}: goodput dropped "
+                          f"{b_good} -> {f_good} (tol {tol_pct}%)")
+        b_p99, f_p99 = float(b["p99_ms"]), float(f["p99_ms"])
+        if f_p99 > b_p99 * (1 + tol):
+            errors.append(f"{name} {k}: p99 rose "
+                          f"{b_p99}ms -> {f_p99}ms (tol {tol_pct}%)")
+
+
+def check_orderings(paged, chunked, errors):
+    """The structural claims the tables prove, re-checked from fresh data."""
+    p = {r["path"]: r for r in paged}
+    if float(p["paged"]["p99_ms"]) >= float(p["wave"]["p99_ms"]):
+        errors.append("table_paged: paged p99 not below wave p99")
+    if float(p["paged"]["goodput"]) < float(p["wave"]["goodput"]):
+        errors.append("table_paged: paged goodput below wave goodput")
+    if p["paged"]["tokens"] != p["wave"]["tokens"]:
+        errors.append("table_paged: token counts diverged between paths")
+
+    c = {(r["path"], r["class"]): r for r in chunked}
+    if float(c[("chunked", "trading")]["p99_ms"]) \
+            >= float(c[("stall", "trading")]["p99_ms"]):
+        errors.append("table_chunked: chunked trading p99 not below stall's")
+    if float(c[("chunked", "all")]["goodput"]) \
+            < float(c[("stall", "all")]["goodput"]):
+        errors.append("table_chunked: chunked goodput below stall goodput")
+    if c[("chunked", "all")]["tokens"] != c[("stall", "all")]["tokens"]:
+        errors.append("table_chunked: token counts diverged between paths")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(REPO, "results"),
+                    help="directory holding the freshly produced CSVs")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="read baselines from this directory instead of "
+                         "git show HEAD:results/")
+    ap.add_argument("--tol-pct", type=float, default=5.0,
+                    help="allowed relative worsening before failing (%%)")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    fresh = {}
+    for name in TABLES:
+        fresh[name] = load_fresh(args.results, name)
+        base = load_baseline(name, args.baseline_dir)
+        check_drift(name, fresh[name], base, args.tol_pct, errors)
+    check_orderings(fresh["table_paged.csv"], fresh["table_chunked.csv"],
+                    errors)
+
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print(f"regression gate: {len(TABLES)} tables OK "
+          f"(tolerance {args.tol_pct}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,6 +52,19 @@ def main() -> None:
                  f"p99={tp_paged[6]}ms_vs_wave{tp_wave[6]}ms"
                  f":goodput={tp_paged[7]}_vs_{tp_wave[7]}"))
 
+    # --- Chunked prefill vs stall-prefill paged serving -------------------
+    import table_chunked
+    tch = table_chunked.main(verbose=False)
+    tc_stall = next(r for r in tch
+                    if r[0] == "stall" and r[1] == "trading")
+    tc_chunk = next(r for r in tch
+                    if r[0] == "chunked" and r[1] == "trading")
+    tc_all_s = next(r for r in tch if r[0] == "stall" and r[1] == "all")
+    tc_all_c = next(r for r in tch if r[0] == "chunked" and r[1] == "all")
+    rows.append(("table_chunked", float(tc_chunk[7]) * 1e3,
+                 f"trading_p99={tc_chunk[7]}ms_vs_stall{tc_stall[7]}ms"
+                 f":goodput={tc_all_c[8]}_vs_{tc_all_s[8]}"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

@@ -10,11 +10,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
 from repro.kernels import fp8_matmul as _fp8
 from repro.kernels import fpx_matmul as _fpx
 from repro.kernels import paged_gather as _pg
+from repro.kernels import paged_scatter as _ps
 
 
 def _pad_to(x: jax.Array, m0: int, m1: int) -> jax.Array:
@@ -89,3 +91,52 @@ def gather_pages(pool: jax.Array, block_tables: jax.Array, *,
                                 block_tables, interpret=interpret)
         return flat.reshape(B, P * ps, H, D)
     return jnp.take(pool, block_tables, axis=0).reshape(B, P * ps, H, D)
+
+
+def scatter_chunk(pool: jax.Array, block_tables: jax.Array, pos: jax.Array,
+                  chunk: jax.Array, *, use_pallas: bool = False,
+                  interpret: bool = True) -> jax.Array:
+    """Write a prefill chunk's K (or V) into block-table pages.
+
+    pool: (n_pages, page_size, n_kv_heads, head_dim); block_tables: (B, P)
+    int32; pos: (B,) int32 start positions; chunk: (B, C, n_kv_heads,
+    head_dim) — token ``i`` of lane ``b`` lands at logical position
+    ``pos[b] + i`` (page ``block_tables[b, (pos[b]+i) // page_size]``, row
+    ``(pos[b]+i) % page_size``).  Returns the updated pool.  Lanes must own
+    disjoint pages (they do, by ``serving.kv_cache`` allocation), so the
+    scatter is collision-free.
+
+    The Pallas path additionally requires every ``pos[b]`` to be
+    page-aligned — the chunk then decomposes into whole-page row runs and
+    runs the scalar-prefetch scatter kernel (``kernels.paged_scatter``,
+    interpret mode on CPU) with the head dims flattened to one lane axis.
+    The serving engine guarantees alignment by using chunk sizes that are
+    multiples of the page size; the jnp default path takes any offset."""
+    n_pages, ps, H, D = pool.shape
+    B, C = chunk.shape[:2]
+    lpos = pos[:, None] + jnp.arange(C)[None, :]            # (B, C) logical
+    if not use_pallas:
+        pid = jnp.take_along_axis(block_tables, lpos // ps, axis=1)
+        return pool.at[pid, lpos % ps].set(chunk.astype(pool.dtype))
+    if not isinstance(pos, jax.core.Tracer):
+        # concrete call (tests, eager use): enforce the documented
+        # precondition — an unaligned start would floor to the page below
+        # and silently blend onto the wrong rows.  Traced calls rely on
+        # the engine's prefill_chunk % page_size == 0 validation.
+        assert not np.any(np.asarray(pos) % ps), \
+            f"Pallas scatter_chunk needs page-aligned starts, got {pos}"
+    npg = -(-C // ps)
+    pad = npg * ps - C
+    first = pos // ps                                       # aligned starts
+    page_ids = jnp.take_along_axis(
+        block_tables, first[:, None] + jnp.arange(npg)[None, :], axis=1)
+    n_valid = jnp.clip(C - jnp.arange(npg)[None, :] * ps, 0, ps) \
+        .astype(jnp.int32) * jnp.ones((B, 1), jnp.int32)
+    ck = chunk.reshape(B, C, H * D)
+    if pad:
+        ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0)))
+    out = _ps.paged_scatter(pool.reshape(n_pages, ps, H * D).astype(pool.dtype),
+                            ck.reshape(B, npg, ps, H * D).astype(pool.dtype),
+                            page_ids.astype(jnp.int32), n_valid,
+                            interpret=interpret)
+    return out.reshape(n_pages, ps, H, D)

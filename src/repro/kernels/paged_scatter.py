@@ -1,0 +1,85 @@
+"""Paged KV-cache chunk scatter Pallas kernel — block-table writes for
+chunked prefill.
+
+The gather kernel (``kernels.paged_gather``) reads a lane's pages into a
+contiguous context; this is its write-side twin.  Chunked prefill absorbs a
+prompt ``chunk_size`` tokens at a time (``serving.paged_engine``), and each
+absorbed chunk must land in the lane's pages: token ``pos[b] + i`` goes to
+page ``block_tables[b, (pos[b] + i) // page_size]``, row
+``(pos[b] + i) % page_size``.
+
+When the chunk start is page-aligned (the engine guarantees this by making
+the chunk size a multiple of the page size), the scatter is page-granular:
+chunk page ``j`` of lane ``b`` is one contiguous run of rows for pool page
+``block_tables[b, pos[b] // page_size + j]``.  That is again the TPU
+scalar-prefetch pattern, now on the *output* side: the destination page ids
+ride in SMEM and drive the out-BlockSpec index_map, the pool aliases
+input->output so untouched pages keep their data, and each grid cell
+blends the chunk's valid rows over the existing page (the final chunk of a
+prompt may fill only part of its last page).
+
+The ops-layer wrapper (``ops.scatter_chunk``) flattens the trailing
+(n_kv_heads, head_dim) dims to one lane axis so each page is a well-tiled
+2-D (page_size, E) VMEM tile, and precomputes the per-(lane, chunk-page)
+destination ids and valid-row counts.  Validated CPU-side with
+``interpret=True`` against the pure-jnp oracle ``ref.scatter_chunk_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(pid_ref, nvalid_ref, chunk_ref, pool_ref, o_ref):
+    """Grid (B, n_chunk_pages): blend chunk page (b, j) over pool page
+    ``pid[b, j]``.
+
+    The destination page selection happened in the out-BlockSpec index_map
+    (scalar prefetch); the body keeps rows past the chunk's valid count
+    from the existing page so a partially-filled final page preserves
+    whatever the pool already held there."""
+    del pid_ref
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n = nvalid_ref[b, j]
+    ps, E = pool_ref.shape[1], pool_ref.shape[2]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ps, E), 0)
+    o_ref[0] = jnp.where(rows < n, chunk_ref[0, 0], pool_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_scatter(pool: jax.Array, chunk: jax.Array, page_ids: jax.Array,
+                  n_valid: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """pool: (n_pages, page_size, E); chunk: (B, n_chunk_pages, page_size, E)
+    page-aligned chunk rows; page_ids: (B, n_chunk_pages) int32 destination
+    pages; n_valid: (B, n_chunk_pages) int32 rows of each chunk page that
+    carry real tokens (page_size except possibly the last).
+
+    Returns the pool with the chunk written.  Destination ids must be
+    distinct across grid cells (lanes own disjoint pages; a chunk's pages
+    are distinct) — the pool is aliased in-place, so colliding writes would
+    be order-dependent."""
+    n_pages, ps, E = pool.shape
+    B, npg = page_ids.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, npg),
+        in_specs=[
+            pl.BlockSpec((1, 1, ps, E), lambda b, j, pid, nv: (b, j, 0, 0)),
+            pl.BlockSpec((1, ps, E), lambda b, j, pid, nv: (pid[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ps, E),
+                               lambda b, j, pid, nv: (pid[b, j], 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pool.shape, pool.dtype),
+        input_output_aliases={3: 0},     # pool (after the 2 scalar operands
+        interpret=interpret,             # and chunk) donates to the output
+    )(page_ids, n_valid, chunk, pool)

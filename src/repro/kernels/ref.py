@@ -38,3 +38,14 @@ def gather_pages_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     """Paged-KV gather oracle: pool (n_pages, ps, ...), tables (B, P) ->
     (B, P, ps, ...) — lane b's pages in logical order."""
     return jnp.take(pool, block_tables, axis=0)
+
+
+def scatter_chunk_ref(pool: jax.Array, block_tables: jax.Array,
+                      pos: jax.Array, chunk: jax.Array) -> jax.Array:
+    """Chunk-scatter oracle: token i of lane b goes to logical position
+    pos[b] + i — page block_tables[b, (pos[b]+i) // ps], row (pos[b]+i) % ps."""
+    ps = pool.shape[1]
+    C = chunk.shape[1]
+    lpos = pos[:, None] + jnp.arange(C)[None, :]
+    pid = jnp.take_along_axis(block_tables, lpos // ps, axis=1)
+    return pool.at[pid, lpos % ps].set(chunk.astype(pool.dtype))

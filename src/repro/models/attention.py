@@ -155,6 +155,49 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
                  "pos": pos + 1}
 
 
+def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
+                          cache: Dict[str, jax.Array], *, scale: float,
+                          rope_theta: float, ctx: ExecContext,
+                          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One chunked-prefill step for one layer: absorb a prompt chunk into
+    the paged cache.
+
+    q/k/v: freshly projected (B, C, H|Hkv, D) for a chunk of each lane's
+    prompt, occupying global positions ``pos[b] .. pos[b] + C - 1``.  The
+    chunk's post-RoPE K (and V) are scattered into the lanes' block-table
+    pages (``kernels.paged_scatter`` when ``ctx.use_pallas``), then each
+    lane's *whole* written context — prior chunks plus this one — is
+    gathered back through its table and attended causally: the query at
+    global position p sees exactly the slots <= p, so the result is
+    mathematically identical to a monolithic prefill of the same prompt."""
+    from repro.kernels import ops as kernel_ops
+
+    B, C = q.shape[0], q.shape[1]
+    kpool, vpool = cache["kpool"], cache["vpool"]
+    bt = cache["block_tables"]                     # (B, P) int32
+    pos = cache["pos"]                             # (B,)  int32: chunk start
+    ps = kpool.shape[1]
+    P = bt.shape[1]
+
+    qpos = pos[:, None] + jnp.arange(C)[None, :]            # (B, C)
+    cos, sin = rope_cos_sin(qpos, q.shape[-1], rope_theta)  # (B, C, D/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    kpool = kernel_ops.scatter_chunk(kpool, bt, pos, k,
+                                     use_pallas=ctx.use_pallas)
+    vpool = kernel_ops.scatter_chunk(vpool, bt, pos, v,
+                                     use_pallas=ctx.use_pallas)
+
+    ck = kernel_ops.gather_pages(kpool, bt, use_pallas=ctx.use_pallas)
+    cv = kernel_ops.gather_pages(vpool, bt, use_pallas=ctx.use_pallas)
+    slot = jnp.arange(P * ps)
+    mask = (slot[None, None, :] <= qpos[:, :, None])[:, None]  # (B,1,C,S)
+    out = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, C, P * ps)), scale)
+    return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
+                 "pos": pos + C}
+
+
 # ---------------------------------------------------------------------------
 # Forward (self-attention, train/prefill + decode with cache)
 # ---------------------------------------------------------------------------
@@ -182,7 +225,11 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
     lane's context is gathered through its block table (optionally via the
     Pallas scalar-prefetch kernel when ``ctx.use_pallas``).  Lanes whose
     table points at the reserved dummy page are idle; their outputs are
-    garbage and must be discarded by the caller.
+    garbage and must be discarded by the caller.  With a paged cache and
+    ``x`` longer than one token, this is a *prefill chunk*: positions
+    ``pos[b] .. pos[b]+S-1`` are absorbed in one causal pass over the
+    lane's already-written pages plus the chunk (chunked prefill — see
+    :func:`repro.models.transformer.prefill_chunk`).
     """
     B, S, _ = x.shape
     q = modules.quant_linear(params["q"], x, name=join(name, "q"), ctx=ctx)
@@ -208,11 +255,20 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
         out = _sdpa(q, k, v, mask, scale)
         new_cache = None
     elif "kpool" in cache:
-        # paged decode: S == 1, per-lane positions and block tables
+        # paged cache: S == 1 is a decode step, S > 1 a prefill chunk —
+        # both write at per-lane positions through per-lane block tables
         assert sliding_window is None, \
             "paged KV cache does not support sliding-window segments"
-        out, new_cache = _paged_decode_attend(q, k, v, cache, scale=scale,
-                                              rope_theta=rope_theta, ctx=ctx)
+        if S > 1:
+            out, new_cache = _paged_prefill_attend(q, k, v, cache,
+                                                   scale=scale,
+                                                   rope_theta=rope_theta,
+                                                   ctx=ctx)
+        else:
+            out, new_cache = _paged_decode_attend(q, k, v, cache,
+                                                  scale=scale,
+                                                  rope_theta=rope_theta,
+                                                  ctx=ctx)
     else:
         # decode: S == 1
         pos = cache["pos"]  # global position of this token (traced scalar)

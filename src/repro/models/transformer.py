@@ -438,6 +438,47 @@ def paged_decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
                     "block_tables": bt, "pos": pos + 1}
 
 
+def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                  cache: Dict[str, jax.Array],
+                  ctx: ExecContext = modules.DEFAULT_CTX, *,
+                  unroll: bool = True) -> Tuple[jax.Array, Any]:
+    """Absorb one chunk of a prompt into a *paged* KV cache.
+
+    ``batch["tokens"]``: (B, C) — the next C prompt tokens of each lane,
+    occupying global positions ``cache["pos"][b] .. pos[b] + C - 1``.
+    ``cache``: the same pytree as :func:`paged_decode_step`.  Each layer
+    attends causally over the lane's already-written pages plus the chunk
+    and scatters the chunk's K/V into its block-table pages, so calling
+    this over a prompt's chunks in order leaves the cache exactly as a
+    monolithic prefill + page write would, while letting the serving
+    engine run decode steps for other lanes *between* chunks (chunked
+    prefill — the ROADMAP's head-of-line-blocking fix).
+
+    Returns (last-position logits (B, 1, V), updated cache with
+    ``pos + C``) — the final chunk's logits supply the request's first
+    output token, the same contract as :func:`prefill`.
+    """
+    if cfg.arch_type != "dense" or cfg.local_global_ratio or cfg.sliding_window:
+        raise NotImplementedError(
+            f"chunked paged prefill supports dense uniform stacks only, not "
+            f"{cfg.name} (arch_type={cfg.arch_type})")
+    h = embed(params, cfg, batch["tokens"], ctx)
+    B = h.shape[0]
+    L = cfg.n_layers
+    bt, pos = cache["block_tables"], cache["pos"]
+    ext = {"kpool": cache["kpool"], "vpool": cache["vpool"],
+           "block_tables": jnp.broadcast_to(bt, (L, *bt.shape)),
+           "pos": jnp.broadcast_to(pos, (L, B))}
+    body = _attn_seg_body(cfg, None, "decode")
+    h, ys = _run_stack(body, h, params["blocks"]["layers"], L, ctx=ctx,
+                       seg="layers", unroll=unroll, xs_extra=ext,
+                       layer_ids=list(range(L)))
+    logits = unembed(params, cfg, h[:, -1:], ctx)
+    C = batch["tokens"].shape[1]
+    return logits, {"kpool": ys["kpool"], "vpool": ys["vpool"],
+                    "block_tables": bt, "pos": pos + C}
+
+
 # ---------------------------------------------------------------------------
 # Backbones
 # ---------------------------------------------------------------------------

@@ -23,6 +23,22 @@ lifecycle fields the engines fill in):
   ``kernels.paged_gather``).  Greedy outputs are token-identical to the
   wave path — same tokens, no barrier.
 
+  **Chunk-interleave contract** (``prefill_chunk=N``, a multiple of the
+  page size; mirrored by the analytic batcher): an admitted prompt is
+  absorbed N tokens at a time — ``transformer.prefill_chunk`` attends
+  over the request's already-written pages plus the chunk and scatters
+  the chunk's K/V into its block-table pages (``kernels.paged_scatter``)
+  — with one decode step for the already-decoding lanes between chunks,
+  so a long prompt never head-of-line-blocks the decode lanes.  Each
+  chunk is charged ``prefill_s(N)`` on the shared clock (chunking re-pays
+  the weight read, raising total prefill cost — the win is tail latency,
+  not throughput); admission projections (``projected_finish`` /
+  ``degraded_budget``) take the same ``prefill_chunk`` so drop/degrade
+  decisions price the interleave in, and the policy is re-applied when
+  the prompt completes because co-resident lanes' real decode charges
+  land during the chunked prefill.  Greedy outputs are token-identical
+  to the monolithic path for any chunk size.
+
 * **Traffic-scale path** — the fleet simulator.  Its contract, end to end:
 
   - **Clock.**  One global notion of simulated time, denominated in the

@@ -23,6 +23,15 @@ finish time.  If the projection already overshoots the deadline the
 paper's "a late action is worth nothing" regime) and ``"degrade"`` trims
 ``max_new`` to the largest token budget that still fits, modeling partial
 / truncated actions (and drops only when not even one token fits).
+
+Chunked prefill (``prefill_chunk=N``): instead of stalling the engine for
+the whole prompt at admission, the prompt is absorbed ``N`` tokens at a
+time with one decode step for the *other* lanes between chunks — the
+head-of-line-blocking fix the ROADMAP tracked.  Each chunk is charged
+``prefill_s(chunk_len)`` on the same clock (chunking re-pays the
+weight-read per chunk, so the total prefill cost rises; the win is that
+decode lanes keep landing tokens).  The projections below take the same
+``prefill_chunk`` so admission accounts for both effects.
 """
 from __future__ import annotations
 
@@ -89,12 +98,29 @@ class LatencyProfile:
             self._service[key] = t
         return t
 
+    def prefill_chunked_s(self, prompt_len: int, chunk: int) -> float:
+        """Total prefill charge when the prompt is absorbed in ``chunk``-token
+        pieces: each chunk re-pays the weight-read, so this is >= the
+        monolithic ``prefill_s(prompt_len)`` — the cost side of chunked
+        prefill's latency trade (the win is decode lanes not stalling)."""
+        return sum(self.prefill_s(c) for c in prompt_chunks(prompt_len, chunk))
+
+
+def prompt_chunks(prompt_len: int, chunk: int) -> List[int]:
+    """Chunk lengths a prompt splits into: full chunks plus a final partial
+    one when ``chunk`` does not divide ``prompt_len``."""
+    assert chunk >= 1, chunk
+    full, rem = divmod(prompt_len, chunk)
+    return [chunk] * full + ([rem] if rem else [])
+
 
 @dataclasses.dataclass
 class _Running:
     req: SimRequest
     remaining: int
     context: int
+    #: prompt tokens not yet absorbed (chunked prefill; 0 = decoding)
+    prefill_left: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -102,17 +128,40 @@ class _Running:
 # (serving.paged_engine) — both project finish times on the same clock.
 # ---------------------------------------------------------------------------
 
+def _prefill_charge(profile: LatencyProfile, prompt_len: int,
+                    n_active_after: int, prefill_chunk: Optional[int],
+                    ) -> float:
+    """Modeled wall time between a request's admission and the end of its
+    prefill.  Monolithic: one stall.  Chunked: the per-chunk charges plus
+    one interleaved decode step per chunk boundary when other lanes are
+    decoding (that interleaving is the point — the *other* lanes' tokens
+    keep landing; for this request it is added wait)."""
+    if prefill_chunk is None:
+        return profile.prefill_s(prompt_len)
+    total = profile.prefill_chunked_s(prompt_len, prefill_chunk)
+    n_chunks = len(prompt_chunks(prompt_len, prefill_chunk))
+    if n_active_after > 1:
+        total += (n_chunks - 1) * profile.step_s(n_active_after, prompt_len)
+    return total
+
+
 def projected_finish(profile: LatencyProfile, t_now: float,
-                     n_active_after: int, req, n_tokens: int) -> float:
+                     n_active_after: int, req, n_tokens: int, *,
+                     prefill_chunk: Optional[int] = None) -> float:
     """Finish-time projection if ``req`` were admitted now: prefill stalls
-    the engine, then ``n_tokens`` steps at the post-admission occupancy
-    (context taken at the request's mid-decode point)."""
+    the engine (monolithically, or chunk-by-chunk with interleaved decode
+    steps — see :func:`_prefill_charge`), then ``n_tokens`` steps at the
+    post-admission occupancy (context taken at the request's mid-decode
+    point)."""
     step = profile.step_s(n_active_after, req.prompt_len + n_tokens // 2)
-    return t_now + profile.prefill_s(req.prompt_len) + n_tokens * step
+    prefill = _prefill_charge(profile, req.prompt_len, n_active_after,
+                              prefill_chunk)
+    return t_now + prefill + n_tokens * step
 
 
 def degraded_budget(profile: LatencyProfile, t_now: float,
-                    n_active_after: int, req) -> int:
+                    n_active_after: int, req, *,
+                    prefill_chunk: Optional[int] = None) -> int:
     """Largest token budget that still fits ``req``'s deadline, with the
     step cost *re-projected at the trimmed budget's own context* (iterated
     to a fixed point).  A budget derived from the original ``max_new``'s
@@ -121,7 +170,9 @@ def degraded_budget(profile: LatencyProfile, t_now: float,
     monotonically, the fixed point satisfies
     ``projected_finish(..., n) <= req.deadline_abs``.  Returns 0 when not
     even one token fits (caller drops)."""
-    slack = req.deadline_abs - t_now - profile.prefill_s(req.prompt_len)
+    prefill = _prefill_charge(profile, req.prompt_len, n_active_after,
+                              prefill_chunk)
+    slack = req.deadline_abs - t_now - prefill
     if slack <= 0:
         return 0
     n = req.max_new
@@ -136,18 +187,46 @@ def degraded_budget(profile: LatencyProfile, t_now: float,
     return 0
 
 
+def post_prefill_fit(profile: LatencyProfile, t_now: float, n_active: int,
+                     context: int, remaining: int, deadline_abs: float,
+                     ) -> int:
+    """Shared post-prefill re-projection: the largest decode-step budget
+    ``n <= remaining`` with ``t_now + n * step <= deadline_abs``, or -1
+    when ``t_now`` is already past the deadline (nothing can land on
+    time).  Both engine flavors call this when a (chunked) prefill
+    completes — interleaved charges from co-resident lanes landed since
+    the admission projection, so the admitted budget must be re-proved.
+    What a fit of 0 means is the caller's: the live engine already holds
+    the prefill-logits token and finishes on time with it (a maximally
+    truncated action); the analytic batcher models no such token and
+    drops."""
+    if t_now > deadline_abs:
+        return -1
+    step = profile.step_s(max(1, n_active), context + remaining // 2)
+    if step <= 0:
+        return remaining
+    return min(remaining, int((deadline_abs - t_now) / step))
+
+
 class ContinuousBatcher:
     def __init__(self, profile: LatencyProfile, *, slots: int = 4,
                  policy: str = "degrade",
-                 on_retire: Optional[Callable[[SimRequest], None]] = None):
+                 on_retire: Optional[Callable[[SimRequest], None]] = None,
+                 prefill_chunk: Optional[int] = None):
         """``on_retire`` fires once per request leaving the system — on
         completion *and* on drop — so a learner sees the reward (or lack
-        of one) for every routing decision."""
+        of one) for every routing decision.  ``prefill_chunk``: absorb
+        admitted prompts this many tokens at a time, interleaved with
+        decode steps for the other slots, instead of stalling the engine
+        for the whole prompt (None = monolithic, the historical
+        behavior)."""
         assert policy in ("drop", "degrade", "serve"), policy
+        assert prefill_chunk is None or prefill_chunk >= 1, prefill_chunk
         self.profile = profile
         self.slots = slots
         self.policy = policy
         self.on_retire = on_retire
+        self.prefill_chunk = prefill_chunk
         self.t = 0.0                      # engine-local simulated clock
         self.pending: List[SimRequest] = []
         self.active: List[_Running] = []
@@ -163,7 +242,8 @@ class ContinuousBatcher:
 
     def _projected_finish(self, req: SimRequest, n_tokens: int) -> float:
         return projected_finish(self.profile, self.t, len(self.active) + 1,
-                                req, n_tokens)
+                                req, n_tokens,
+                                prefill_chunk=self.prefill_chunk)
 
     def _admit_one(self) -> bool:
         """Admit the earliest-deadline *arrived* pending request, applying
@@ -179,16 +259,26 @@ class ContinuousBatcher:
                     and self._projected_finish(req, n_tok) > req.deadline_abs:
                 if self.policy == "degrade":
                     n_tok = degraded_budget(self.profile, self.t,
-                                            len(self.active) + 1, req)
+                                            len(self.active) + 1, req,
+                                            prefill_chunk=self.prefill_chunk)
                 else:
                     n_tok = 0
                 if n_tok < 1:
                     retire_dropped(self, req)
                     continue                     # slot still free; try next
             req.t_admit = self.t
-            self.t += self.profile.prefill_s(req.prompt_len)
-            self.active.append(_Running(req, remaining=n_tok,
-                                        context=req.prompt_len))
+            if self.prefill_chunk is None:
+                # monolithic: the whole prompt is charged as one stall
+                self.t += self.profile.prefill_s(req.prompt_len)
+                req.t_prefill_done = self.t
+                self.active.append(_Running(req, remaining=n_tok,
+                                            context=req.prompt_len))
+            else:
+                # chunked: charge nothing yet — _decode_step absorbs the
+                # prompt chunk-by-chunk, decode steps landing in between
+                self.active.append(_Running(req, remaining=n_tok,
+                                            context=req.prompt_len,
+                                            prefill_left=req.prompt_len))
             return True
 
     def _admit(self) -> None:
@@ -197,12 +287,48 @@ class ContinuousBatcher:
 
     # -- the decode loop ----------------------------------------------------
 
+    def _advance_prefills(self) -> None:
+        """Absorb one chunk for every slot still prefilling (each chunk is
+        its own engine stall), re-applying the drop/degrade policy when a
+        prompt completes: interleaved decode charges landed since the
+        admission projection, so the budget that fit then may not fit
+        now."""
+        for run in list(self.active):
+            if run.prefill_left <= 0:
+                continue
+            c = min(self.prefill_chunk, run.prefill_left)
+            self.t += self.profile.prefill_s(c)
+            run.prefill_left -= c
+            if run.prefill_left > 0:
+                continue
+            run.req.t_prefill_done = self.t
+            if self.policy == "serve":
+                continue
+            fit = post_prefill_fit(self.profile, self.t, len(self.active),
+                                   run.context, run.remaining,
+                                   run.req.deadline_abs)
+            if fit == run.remaining:
+                continue
+            if self.policy == "degrade" and fit >= 1:
+                run.remaining = fit
+            else:
+                # drop policy, past deadline, or not even one token fits
+                # (the analytic clock models no free prefill token)
+                self.active.remove(run)
+                retire_dropped(self, run.req)
+
     def _decode_step(self) -> None:
-        n = len(self.active)
-        ctx = max(r.context for r in self.active)
+        if self.prefill_chunk is not None:
+            self._advance_prefills()
+        decoding = [r for r in self.active if r.prefill_left <= 0]
+        if not decoding:
+            return                        # every occupied slot still prefilling
+        n = len(decoding)
+        ctx = max(r.context for r in decoding)
         self.t += self.profile.step_s(n, ctx)
-        still: List[_Running] = []
-        for run in self.active:
+        still: List[_Running] = [r for r in self.active
+                                 if r.prefill_left > 0]
+        for run in decoding:
             run.remaining -= 1
             run.context += 1
             run.req.tokens_done += 1
@@ -241,7 +367,10 @@ class ContinuousBatcher:
         only needs enough signal to spread load and respect slack."""
         return estimate_backlog(self.profile, self.t, now,
                                 [r.remaining for r in self.active],
-                                self.pending, self.slots)
+                                self.pending, self.slots,
+                                prefill_chunk=self.prefill_chunk,
+                                active_prefill_left=[r.prefill_left
+                                                     for r in self.active])
 
 
 def retire_dropped(eng, req) -> None:
@@ -286,11 +415,29 @@ def drive(eng, until: Optional[float] = None) -> None:
 
 
 def estimate_backlog(profile: LatencyProfile, t: float, now: float,
-                     active_remaining: List[int], pending, slots: int,
+                     active_remaining: List[int], pending, slots: int, *,
+                     prefill_chunk: Optional[int] = None,
+                     active_prefill_left: Optional[List[int]] = None,
                      ) -> float:
-    """The router-facing wait estimate shared by every engine flavor."""
+    """The router-facing wait estimate shared by every engine flavor.
+
+    ``active_prefill_left``: unabsorbed prompt tokens of lanes still
+    mid-prefill.  Monolithic engines charge the whole prefill to ``t`` at
+    admission so it shows up in the clock-ahead term; chunked engines
+    defer those charges, and a router that cannot see them would happily
+    route a tight-deadline request onto an engine mid-way through a long
+    chat prefill."""
     step1 = profile.step_s(max(1, len(active_remaining)), _CTX_BUCKET * 4)
     work = sum(active_remaining) * step1
+
+    def prefill_cost(n_tokens: int) -> float:
+        if prefill_chunk is None:
+            return profile.prefill_s(n_tokens)
+        return profile.prefill_chunked_s(n_tokens, prefill_chunk)
+
+    for left in active_prefill_left or ():
+        if left > 0:
+            work += prefill_cost(left)
     for r in pending:
-        work += profile.prefill_s(r.prompt_len) + r.max_new * step1
+        work += prefill_cost(r.prompt_len) + r.max_new * step1
     return max(0.0, t - now) + work / slots

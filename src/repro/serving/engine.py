@@ -108,8 +108,7 @@ class ServingEngine:
             if i + 1 < max_new:
                 logits, cache = self._decode(self.params, {"token": nxt}, cache)
         new = jnp.concatenate(outs, axis=1)
-        t = lat_mod.decision_latency(self.latency_cfg, prompt_len=S,
-                                     gen_tokens=max_new, w_bits=self.avg_bits)
+        t = self.modeled_latency(S, max_new)
         return GenerationResult(tokens=jnp.concatenate([tokens, new], axis=1),
                                 new_tokens=new, latency_s=t,
                                 logits_last=logits)

@@ -121,11 +121,27 @@ class PagedKVCache:
         self.vpool = self.vpool.at[:, pids].set(vp.astype(self.vpool.dtype))
         self.pos[slot] = S
 
-    def decode_cache(self) -> dict:
-        """The pytree ``transformer.paged_decode_step`` consumes."""
+    def decode_cache(self, exclude: Tuple[int, ...] = ()) -> dict:
+        """The pytree ``transformer.paged_decode_step`` consumes.
+
+        ``exclude``: slots whose rows are masked to the dummy page (pos 0)
+        for this step — mid-prefill lanes own real pages but must not be
+        written or read by a decode step, exactly like idle lanes."""
+        bt, pos = self.block_tables, self.pos
+        if exclude:
+            bt, pos = bt.copy(), pos.copy()
+            for s in exclude:
+                bt[s, :] = DUMMY_PAGE
+                pos[s] = 0
         return {"kpool": self.kpool, "vpool": self.vpool,
-                "block_tables": jnp.asarray(self.block_tables),
-                "pos": jnp.asarray(self.pos)}
+                "block_tables": jnp.asarray(bt), "pos": jnp.asarray(pos)}
+
+    def chunk_cache(self, slot: int) -> dict:
+        """The single-lane pytree ``transformer.prefill_chunk`` consumes:
+        this slot's block table and write position over the shared pools."""
+        return {"kpool": self.kpool, "vpool": self.vpool,
+                "block_tables": jnp.asarray(self.block_tables[slot:slot + 1]),
+                "pos": jnp.asarray(self.pos[slot:slot + 1])}
 
     def update_from(self, new_cache: dict) -> None:
         """Write back the pools a decode step returned (positions stay

@@ -19,6 +19,19 @@ does both at once:
 * **Fixed-lane batching.**  The decode step always runs at ``slots`` lanes;
   idle lanes point at the reserved dummy page and their outputs are
   discarded.  One compiled step serves every occupancy.
+* **Chunked prefill** (``prefill_chunk=N``).  A monolithic prefill stalls
+  every decode lane for the whole prompt — the head-of-line blocking the
+  ROADMAP flagged after PR 2.  With chunking, an admitted prompt is
+  absorbed ``N`` tokens at a time through ``transformer.prefill_chunk``
+  (the chunk's K/V scatter straight into the request's block-table pages),
+  one real decode step for the active lanes landing between chunks.  Each
+  chunk is charged ``profile.prefill_s(N)``, so the clock contract holds
+  chunk-for-chunk; greedy outputs stay token-identical to the monolithic
+  path (tests/test_chunked_prefill.py).  When a prompt completes, the
+  admission policy is re-applied (:meth:`ContinuousEngine.
+  _post_prefill_check`) — interleaved decode charges landed since the
+  admission projection, so "fits the deadline" must be re-proved before
+  the decode budget is spent.
 * **The analytic clock.**  Between real steps the engine advances the same
   ``core.latency`` roofline clock the traffic simulator and the FPX
   controller use (CPU wall time is meaningless here), and reuses the
@@ -48,8 +61,8 @@ from repro.models import transformer
 from repro.models.modules import ExecContext
 from repro.serving import sampler as sampler_mod
 from repro.serving.continuous import (LatencyProfile, degraded_budget,
-                                      estimate_backlog, projected_finish,
-                                      retire_dropped)
+                                      estimate_backlog, post_prefill_fit,
+                                      projected_finish, retire_dropped)
 from repro.serving.continuous import drive as continuous_drive
 from repro.serving.kv_cache import PagedKVCache
 
@@ -57,10 +70,18 @@ from repro.serving.kv_cache import PagedKVCache
 @dataclasses.dataclass
 class _Lane:
     req: object                   # Request or SimRequest
-    last_token: int               # token the next decode step consumes
+    last_token: Optional[int]     # token the next decode step consumes
     remaining: int                # decode steps left
     context: int                  # prompt + tokens written so far
     produced: List[int] = dataclasses.field(default_factory=list)
+    #: chunked prefill: prompt tokens not yet absorbed into pages (None
+    #: once prefill completes and the lane is decoding)
+    prompt_toks: Optional[np.ndarray] = None
+    absorbed: int = 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prompt_toks is not None
 
 
 class ContinuousEngine:
@@ -74,12 +95,24 @@ class ContinuousEngine:
                  avg_bits: float = 16.0, hw: Hardware = V5E,
                  ctx: Optional[ExecContext] = None,
                  on_retire: Optional[Callable] = None,
-                 prompt_seed: int = 0, unroll: bool = True):
+                 prompt_seed: int = 0, unroll: bool = True,
+                 prefill_chunk: Optional[int] = None):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
         parameterize the analytic clock exactly as in the analytic batcher,
-        so wave vs. paged comparisons share one notion of time."""
+        so wave vs. paged comparisons share one notion of time.
+
+        ``prefill_chunk``: absorb admitted prompts this many tokens at a
+        time through ``transformer.prefill_chunk`` — one chunk, then one
+        real decode step for the lanes already decoding, alternating until
+        the prompt is in its pages — instead of stalling every decode lane
+        for the whole prompt (None = monolithic, the historical behavior).
+        Must be a multiple of ``page_size`` so chunk writes stay
+        page-aligned (the Pallas scatter path requires it; it also makes
+        each full chunk exactly fill pages).  Each chunk is charged
+        ``profile.prefill_s(chunk)`` on the engine clock, so the clock
+        contract with the analytic batcher holds chunk-for-chunk."""
         if cfg.arch_type != "dense" or cfg.local_global_ratio \
                 or cfg.sliding_window:
             raise NotImplementedError(
@@ -90,6 +123,12 @@ class ContinuousEngine:
         self.slots = slots
         self.policy = policy
         assert policy in ("drop", "degrade", "serve"), policy
+        if prefill_chunk is not None and (prefill_chunk < page_size
+                                          or prefill_chunk % page_size):
+            raise ValueError(
+                f"prefill_chunk ({prefill_chunk}) must be a positive "
+                f"multiple of page_size ({page_size})")
+        self.prefill_chunk = prefill_chunk
         self.profile = profile or LatencyProfile(latency_cfg or cfg,
                                                  avg_bits, hw=hw)
         self.ctx = ctx or ExecContext()
@@ -103,6 +142,10 @@ class ContinuousEngine:
         self._prefill = jax.jit(
             lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
                                              unroll=unroll))
+        self._chunk = jax.jit(
+            lambda p, b, c: transformer.prefill_chunk(p, cfg, b, c,
+                                                      self.ctx,
+                                                      unroll=unroll))
         self._decode = jax.jit(
             lambda p, b, c: transformer.paged_decode_step(p, cfg, b, c,
                                                           self.ctx,
@@ -164,10 +207,12 @@ class ContinuousEngine:
             n_tok = min(req.max_new, cap)
             if self.policy != "serve" and projected_finish(
                     self.profile, self.t, self._n_active() + 1, req,
-                    n_tok) > req.deadline_abs:
+                    n_tok, prefill_chunk=self.prefill_chunk) \
+                    > req.deadline_abs:
                 if self.policy == "degrade":
                     n_tok = min(cap, degraded_budget(
-                        self.profile, self.t, self._n_active() + 1, req))
+                        self.profile, self.t, self._n_active() + 1, req,
+                        prefill_chunk=self.prefill_chunk))
                 else:
                     n_tok = 0
                 if n_tok < 1:
@@ -191,37 +236,123 @@ class ContinuousEngine:
             pass
 
     def _start(self, lane: int, req, n_tok: int) -> None:
-        """Real prefill into freshly allocated pages; the first output token
-        comes from the prefill logits (same contract as engine.generate)."""
+        """Admit ``req`` into ``lane`` over freshly allocated pages.
+
+        Monolithic (``prefill_chunk=None``): run the whole real prefill
+        now, charge ``prefill_s(S)``, and seed the lane with the first
+        output token from the prefill logits (same contract as
+        engine.generate).  Chunked: just stage the prompt — the drive loop
+        absorbs it chunk-by-chunk via :meth:`_advance_prefills`, decode
+        steps landing in between."""
         S = req.prompt_len
         pages = self.cache.alloc(lane, S + n_tok - 1)
         self.admissions.append((req.rid, pages))
+        req.t_admit = self.t
+        if self.prefill_chunk is not None:
+            self.lanes[lane] = _Lane(req, last_token=None, remaining=n_tok,
+                                     context=0,
+                                     prompt_toks=self._prompt_for(req))
+            return
         toks = jnp.asarray(self._prompt_for(req)[None, :])
         logits, dense_cache = self._prefill(self.params, {"tokens": toks})
         kv = dense_cache["layers"]
         self.cache.write_prefill(lane, kv["k"][:, 0], kv["v"][:, 0])
-        t0 = int(np.asarray(sampler_mod.greedy(logits))[0, 0])
-        req.t_admit = self.t
-        req.tokens_done = 1
         self.t += self.profile.prefill_s(S)
-        lane_state = _Lane(req, last_token=t0, remaining=n_tok - 1,
-                           context=S, produced=[t0])
-        if lane_state.remaining == 0:
-            self._finish(req, lane_state, lane_allocated=lane)
-        else:
-            self.lanes[lane] = lane_state
+        lane_state = _Lane(req, last_token=None, remaining=n_tok,
+                           context=S)
+        self.lanes[lane] = lane_state
+        self._finish_prefill(lane, lane_state, logits)
+
+    # -- chunked prefill -----------------------------------------------------
+
+    def _advance_prefills(self) -> None:
+        """Absorb one chunk for every lane still prefilling: real compute
+        through ``transformer.prefill_chunk`` (the chunk's K/V scatter into
+        the lane's pages), one ``prefill_s(chunk)`` charge per chunk."""
+        for i, l in enumerate(self.lanes):
+            if l is None or not l.prefilling:
+                continue
+            S = len(l.prompt_toks)
+            c = min(self.prefill_chunk, S - l.absorbed)
+            toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
+            logits, new_cache = self._chunk(self.params, {"tokens": toks},
+                                            self.cache.chunk_cache(i))
+            self.cache.update_from(new_cache)
+            self.cache.pos[i] += c
+            l.absorbed += c
+            l.context += c
+            self.t += self.profile.prefill_s(c)
+            if l.absorbed == S:
+                l.prompt_toks = None
+                self._finish_prefill(i, l, logits)
+
+    def _finish_prefill(self, lane: int, l: _Lane, logits) -> None:
+        """Shared prefill completion: seed the lane with the first output
+        token from the prefill logits, then re-apply the admission policy —
+        interleaved decode charges (and co-resident lanes' real step costs)
+        landed since the admission-time projection, so a request can reach
+        this point already unable to meet its deadline (the past-deadline-
+        after-prefill bug: previously such a request was served late)."""
+        req = l.req
+        req.t_prefill_done = self.t
+        t0 = int(np.asarray(sampler_mod.greedy(logits))[0, 0])
+        l.last_token = t0
+        l.produced = [t0]
+        req.tokens_done = 1
+        l.remaining -= 1
+        if self.policy != "serve" and not self._post_prefill_check(lane, l):
+            return
+        if l.remaining == 0:
+            self.lanes[lane] = None
+            self._finish(req, l, lane_allocated=lane)
+
+    def _post_prefill_check(self, lane: int, l: _Lane) -> bool:
+        """Drop/degrade a request whose remaining budget no longer fits its
+        deadline now that prefill has actually been charged (shared
+        re-projection: :func:`~repro.serving.continuous.post_prefill_fit`).
+        Returns False when the lane was released (dropped, or finished
+        early with just the prefill token)."""
+        req = l.req
+        fit = post_prefill_fit(self.profile, self.t, self._n_active(),
+                               l.context, l.remaining, req.deadline_abs)
+        if fit == l.remaining:
+            return True
+        if self.policy == "degrade" and fit >= 0:
+            l.remaining = fit
+            if l.remaining > 0:
+                return True
+            # only the prefill token fits — a maximally truncated action,
+            # still on time
+            self.lanes[lane] = None
+            self._finish(req, l, lane_allocated=lane)
+            return False
+        # past deadline (or drop policy): the late action is worth nothing
+        self.lanes[lane] = None
+        self.cache.free(lane)
+        req.tokens_done = 0
+        self._drop(req)
+        return False
 
     # -- the decode loop -----------------------------------------------------
 
     def _decode_step(self) -> None:
-        """One real batched decode step for every occupied lane."""
-        active = [(i, l) for i, l in enumerate(self.lanes) if l is not None]
+        """One engine iteration: advance every mid-prefill lane by one chunk,
+        then one real batched decode step for the lanes already decoding."""
+        if self.prefill_chunk is not None:
+            self._advance_prefills()
+        active = [(i, l) for i, l in enumerate(self.lanes)
+                  if l is not None and not l.prefilling]
+        if not active:
+            return                        # every occupied lane mid-prefill
+        prefilling = tuple(i for i, l in enumerate(self.lanes)
+                           if l is not None and l.prefilling)
         toks = np.zeros((self.slots, 1), np.int32)
         for i, l in active:
             toks[i, 0] = l.last_token
         logits, new_cache = self._decode(self.params,
                                          {"token": jnp.asarray(toks)},
-                                         self.cache.decode_cache())
+                                         self.cache.decode_cache(
+                                             exclude=prefilling))
         self.cache.update_from(new_cache)
         nxt = np.asarray(sampler_mod.greedy(logits))
         self.t += self.profile.step_s(len(active),
@@ -264,7 +395,11 @@ class ContinuousEngine:
     # -- router-facing estimates ---------------------------------------------
 
     def backlog_s(self, now: float) -> float:
+        lanes = [l for l in self.lanes if l is not None]
         return estimate_backlog(self.profile, self.t, now,
-                                [l.remaining for l in self.lanes
-                                 if l is not None],
-                                self.pending, self.slots)
+                                [l.remaining for l in lanes],
+                                self.pending, self.slots,
+                                prefill_chunk=self.prefill_chunk,
+                                active_prefill_left=[
+                                    len(l.prompt_toks) - l.absorbed
+                                    if l.prefilling else 0 for l in lanes])

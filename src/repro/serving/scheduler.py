@@ -46,6 +46,9 @@ class Request:
     # lifecycle, filled by the continuous engines (SimRequest contract)
     engine_idx: Optional[int] = None
     t_admit: Optional[float] = None
+    #: prompt fully absorbed (chunked prefill sets this later than t_admit
+    #: plus the bare prefill cost — decode steps interleave with chunks)
+    t_prefill_done: Optional[float] = None
     t_finish: Optional[float] = None
     tokens_done: int = 0
     dropped: bool = False

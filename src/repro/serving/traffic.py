@@ -38,6 +38,10 @@ class SimRequest:
     # filled in by the continuous batcher / fleet router
     engine_idx: Optional[int] = None
     t_admit: Optional[float] = None
+    #: when the prompt was fully absorbed (== t_admit + prefill for the
+    #: monolithic path; later under chunked prefill, which interleaves
+    #: decode steps for other lanes between chunks)
+    t_prefill_done: Optional[float] = None
     t_finish: Optional[float] = None
     latency_s: Optional[float] = None
     met_deadline: Optional[bool] = None

@@ -1,0 +1,315 @@
+"""Chunked prefill interleaved with paged decode: the scatter kernel, the
+``transformer.prefill_chunk`` entry point, token identity with monolithic
+prefill across chunk sizes, decode-lane progress during a long prompt's
+prefill, the chunk-aware admission projections, and the
+past-deadline-after-prefill drop/degrade re-check."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.models import transformer as T
+from repro.serving.continuous import (ContinuousBatcher, LatencyProfile,
+                                      projected_finish, prompt_chunks)
+from repro.serving.kv_cache import PagedKVCache
+from repro.serving.paged_engine import ContinuousEngine
+from repro.serving.scheduler import Request
+from repro.serving.traffic import SimRequest
+
+
+CFG = get_config("qwen-sim-1.5b")
+FULL = get_config("qwen2.5-1.5b")         # real-scale clock
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(lens, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, n).astype(np.int32) for n in lens]
+
+
+# -- scatter kernel ----------------------------------------------------------
+
+def test_scatter_chunk_kernel_matches_ref():
+    rng = np.random.default_rng(0)
+    for n_pages, ps, H, D, B, P, C in ((12, 4, 2, 8, 2, 4, 4),
+                                       (12, 4, 2, 8, 2, 4, 8),
+                                       (12, 8, 1, 16, 3, 3, 5),
+                                       (10, 8, 1, 16, 2, 3, 11)):
+        pool = jnp.asarray(rng.normal(size=(n_pages, ps, H, D))
+                           .astype(np.float32))
+        ids = rng.permutation(np.arange(1, n_pages))[:B * P].reshape(B, P)
+        bt = jnp.asarray(ids.astype(np.int32))
+        pos = jnp.asarray((rng.integers(0, 2, B) * ps).astype(np.int32))
+        chunk = jnp.asarray(rng.normal(size=(B, C, H, D)).astype(np.float32))
+        want = np.asarray(kernel_ref.scatter_chunk_ref(pool, bt, pos, chunk))
+        got_p = kernel_ops.scatter_chunk(pool, bt, pos, chunk,
+                                         use_pallas=True)
+        got_j = kernel_ops.scatter_chunk(pool, bt, pos, chunk,
+                                         use_pallas=False)
+        assert np.array_equal(want, np.asarray(got_p)), (n_pages, ps, C)
+        assert np.array_equal(want, np.asarray(got_j)), (n_pages, ps, C)
+
+
+def test_scatter_chunk_unaligned_offset_jnp_path():
+    """The jnp path takes any start offset (the Pallas path requires
+    page-aligned chunk starts, which the engine guarantees)."""
+    rng = np.random.default_rng(2)
+    pool = jnp.asarray(rng.normal(size=(8, 4, 2, 8)).astype(np.float32))
+    bt = jnp.asarray(rng.permutation(np.arange(1, 7))[:6]
+                     .reshape(2, 3).astype(np.int32))
+    pos = jnp.asarray(np.array([3, 5], np.int32))
+    chunk = jnp.asarray(rng.normal(size=(2, 5, 2, 8)).astype(np.float32))
+    want = kernel_ref.scatter_chunk_ref(pool, bt, pos, chunk)
+    got = kernel_ops.scatter_chunk(pool, bt, pos, chunk)
+    assert np.array_equal(np.asarray(want), np.asarray(got))
+
+
+# -- transformer.prefill_chunk vs monolithic prefill ------------------------
+
+def test_prefill_chunk_matches_monolithic_pools(params):
+    """Absorbing a prompt chunk-by-chunk leaves the pools and last-position
+    logits equivalent to a monolithic prefill + page write, for chunk sizes
+    that do and do not divide the prompt length (and one > the prompt)."""
+    S = 20
+    prompt = _prompts([S])[0]
+    mono = PagedKVCache(CFG, slots=1, n_pages=10, page_size=8, max_ctx=64)
+    mono.alloc(0, S + 4)
+    logits_m, dense = T.prefill(params, CFG,
+                                {"tokens": jnp.asarray(prompt[None])})
+    kv = dense["layers"]
+    mono.write_prefill(0, kv["k"][:, 0], kv["v"][:, 0])
+    lm = np.asarray(logits_m)[0, 0]
+
+    for chunk in (8, 5, 16, 32):
+        ch = PagedKVCache(CFG, slots=1, n_pages=10, page_size=8, max_ctx=64)
+        pages = ch.alloc(0, S + 4)
+        cache = ch.chunk_cache(0)
+        logits_c, off = None, 0
+        while off < S:
+            c = min(chunk, S - off)
+            logits_c, cache = T.prefill_chunk(
+                params, CFG, {"tokens": jnp.asarray(prompt[None, off:off + c])},
+                cache)
+            off += c
+        assert int(np.asarray(cache["pos"])[0]) == S
+        n_pg = ch.pages_needed(S)
+        sel = np.asarray(pages[:n_pg])
+        km = np.asarray(mono.kpool)[:, sel].reshape(CFG.n_layers, -1,
+                                                    CFG.n_kv_heads,
+                                                    CFG.head_dim)[:, :S]
+        kc = np.asarray(cache["kpool"])[:, sel].reshape(CFG.n_layers, -1,
+                                                        CFG.n_kv_heads,
+                                                        CFG.head_dim)[:, :S]
+        np.testing.assert_allclose(kc, km, atol=1e-4)
+        lc = np.asarray(logits_c)[0, 0]
+        np.testing.assert_allclose(lc, lm, atol=1e-4)
+        assert lc.argmax() == lm.argmax(), chunk
+
+
+def test_prefill_chunk_rejects_unsupported_arch():
+    gcfg = get_config("gemma3-4b")
+    with pytest.raises(NotImplementedError, match="dense uniform"):
+        T.prefill_chunk({}, gcfg, {"tokens": jnp.zeros((1, 4), jnp.int32)},
+                        {})
+
+
+def test_engine_rejects_misaligned_chunk(params):
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        ContinuousEngine(params, CFG, page_size=8, prefill_chunk=12)
+
+
+# -- engine-level token identity (acceptance) -------------------------------
+
+def test_chunked_engine_token_identical_to_monolithic(params):
+    """Same greedy requests through the paged engine with and without
+    chunked prefill: identical tokens, for chunk sizes that do (8 | 24)
+    and do not (16 ∤ 24, 8 ∤ 13) divide the prompt lengths."""
+    lens = [24, 13, 20]
+    base = _prompts(lens)
+
+    def run(chunk):
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=5, deadline_s=10.0)
+                for i, p in enumerate(base)]
+        pe = ContinuousEngine(params, CFG, slots=3, page_size=8, max_ctx=64,
+                              policy="serve", prefill_chunk=chunk)
+        for r in reqs:
+            pe.submit(r)
+        pe.run()
+        return reqs
+
+    mono = run(None)
+    for chunk in (8, 16):
+        chunked = run(chunk)
+        for m, c in zip(mono, chunked):
+            assert np.array_equal(m.result_tokens, c.result_tokens), \
+                (chunk, m.rid)
+            assert c.tokens_done == c.max_new and c.met_deadline
+            assert c.t_prefill_done is not None
+
+
+def test_decode_lanes_advance_during_long_prefill(params):
+    """The head-of-line fix (acceptance): a short request decoding when a
+    long prompt arrives keeps landing tokens between the newcomer's prefill
+    chunks — and retires *during* that prefill.  Monolithically the same
+    short request cannot finish before the long prefill completes."""
+    def run(chunk):
+        rng = np.random.default_rng(3)
+        A = Request(rid=0,
+                    prompt=rng.integers(0, CFG.vocab, 8).astype(np.int32),
+                    max_new=6, deadline_s=100.0, t_arrive=0.0)
+        B = Request(rid=1,
+                    prompt=rng.integers(0, CFG.vocab, 48).astype(np.int32),
+                    max_new=2, deadline_s=100.0, t_arrive=1e-6)
+        pe = ContinuousEngine(params, CFG, slots=2, page_size=8, max_ctx=64,
+                              policy="serve", latency_cfg=FULL, avg_bits=8.0,
+                              prefill_chunk=chunk)
+        pe.submit(A)
+        pe.submit(B)
+        pe.run()
+        return A, B
+
+    A, B = run(chunk=8)
+    assert B.t_admit < A.t_finish < B.t_prefill_done   # A retired mid-prefill
+    assert A.tokens_done == 6 and B.tokens_done == 2
+    Am, Bm = run(chunk=None)
+    assert Am.t_finish > Bm.t_prefill_done             # the stall, for contrast
+    # same greedy tokens either way
+    assert np.array_equal(A.result_tokens, Am.result_tokens)
+    assert np.array_equal(B.result_tokens, Bm.result_tokens)
+
+
+# -- chunk-aware projections -------------------------------------------------
+
+def test_prompt_chunks_and_chunked_cost():
+    assert prompt_chunks(32, 16) == [16, 16]
+    assert prompt_chunks(20, 8) == [8, 8, 4]
+    assert prompt_chunks(5, 8) == [5]
+    prof = LatencyProfile(FULL, 8.0)
+    total = prof.prefill_chunked_s(48, 16)
+    assert total == pytest.approx(3 * prof.prefill_s(16))
+    # chunking re-pays the weight read: total cost is above monolithic
+    assert total > prof.prefill_s(48)
+
+
+def test_projected_finish_prices_interleave():
+    """With other lanes decoding, the chunked projection must exceed the
+    monolithic one (chunk overhead + interleaved decode steps); with the
+    engine otherwise empty no decode steps interleave."""
+    prof = LatencyProfile(FULL, 8.0)
+    req = SimRequest(rid=0, cls_name="t", t_arrive=0.0, prompt_len=64,
+                     max_new=4, deadline_s=1.0)
+    mono = projected_finish(prof, 0.0, 2, req, 4)
+    chunked = projected_finish(prof, 0.0, 2, req, 4, prefill_chunk=16)
+    assert chunked > mono
+    alone = projected_finish(prof, 0.0, 1, req, 4, prefill_chunk=16)
+    interleave = chunked - alone
+    assert interleave == pytest.approx(
+        (len(prompt_chunks(64, 16)) - 1) * prof.step_s(2, 64)
+        + 4 * (prof.step_s(2, 66) - prof.step_s(1, 66)), abs=1e-9)
+
+
+# -- analytic mirror ---------------------------------------------------------
+
+def test_analytic_batcher_chunked_mirror():
+    """The analytic ContinuousBatcher admits chunk-granularly exactly like
+    the live engine: a short decode finishes during a long prompt's chunked
+    prefill, and the total prefill charge is the per-chunk sum."""
+    prof = LatencyProfile(FULL, 8.0)
+
+    def run(chunk):
+        A = SimRequest(rid=0, cls_name="t", t_arrive=0.0, prompt_len=16,
+                       max_new=6, deadline_s=100.0)
+        B = SimRequest(rid=1, cls_name="t", t_arrive=1e-6, prompt_len=96,
+                       max_new=2, deadline_s=100.0)
+        cb = ContinuousBatcher(prof, slots=2, policy="serve",
+                               prefill_chunk=chunk)
+        cb.submit(A)
+        cb.submit(B)
+        cb.run()
+        return A, B
+
+    A, B = run(16)
+    assert B.t_admit < A.t_finish < B.t_prefill_done
+    assert A.tokens_done == 6 and B.tokens_done == 2
+    # B's prefill window carries its own chunk charges plus A's steps
+    assert B.t_prefill_done - B.t_admit >= prof.prefill_chunked_s(96, 16)
+    Am, Bm = run(None)
+    assert Am.t_finish > Bm.t_prefill_done
+    assert Bm.t_prefill_done == pytest.approx(Bm.t_admit
+                                              + prof.prefill_s(96))
+
+
+# -- the past-deadline-after-prefill bugfix ----------------------------------
+
+def _co_prefill_scenario(params, *, policy, b_deadline_s, c_prompt=64):
+    """A decoding lane plus two prompts admitted back-to-back: each
+    newcomer's admission projection cannot see the *other's* chunk charges,
+    so the earlier one (B) completes its prefill well past its projection.
+    Returns (A, B, C) after the run."""
+    rng = np.random.default_rng(7)
+    A = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 16).astype(np.int32),
+                max_new=30, deadline_s=1000.0, t_arrive=0.0)
+    B = Request(rid=1, prompt=rng.integers(0, CFG.vocab, 64).astype(np.int32),
+                max_new=4, deadline_s=b_deadline_s, t_arrive=1e-6)
+    C = Request(rid=2,
+                prompt=rng.integers(0, CFG.vocab, c_prompt).astype(np.int32),
+                max_new=4, deadline_s=500.0, t_arrive=2e-6)
+    pe = ContinuousEngine(params, CFG, slots=3, page_size=8, max_ctx=128,
+                          policy=policy, latency_cfg=FULL, avg_bits=8.0,
+                          prefill_chunk=16)
+    for r in (A, B, C):
+        pe.submit(r)
+    pe.run()
+    return A, B, C, pe
+
+
+def test_post_prefill_deadline_drop(params):
+    """Regression (the ISSUE bugfix): a request whose deadline can no longer
+    be met once its prefill has actually been charged must be dropped at
+    that point — previously it was served to completion and landed late."""
+    # reality first: how late does B actually finish under no policy?
+    _, B0, _, _ = _co_prefill_scenario(params, policy="serve",
+                                       b_deadline_s=100.0)
+    prof = LatencyProfile(FULL, 8.0)
+    projection = projected_finish(prof, B0.t_admit, 2, B0, 4,
+                                  prefill_chunk=16)
+    # the co-prefilling prompt C opens a real gap between projection and truth
+    assert projection < B0.t_finish, "precondition: projection optimistic"
+    deadline_abs = 0.5 * (projection + B0.t_finish)
+
+    _, B, C, pe = _co_prefill_scenario(
+        params, policy="drop", b_deadline_s=deadline_abs - 1e-6)
+    assert B.dropped and B.tokens_done == 0          # caught at prefill end
+    assert B.t_prefill_done is not None
+    assert not C.dropped and C.tokens_done == 4      # loose deadline unharmed
+    assert pe.cache.free_pages == pe.cache.n_pages - 1   # pages returned
+
+
+def test_post_prefill_deadline_degrade_trims(params):
+    """Same trigger under ``degrade``: the decode budget is re-trimmed when
+    the prompt completes, so the request still lands on time (with fewer
+    tokens) instead of running its full admitted budget late."""
+    _, B0, _, _ = _co_prefill_scenario(params, policy="serve",
+                                       b_deadline_s=100.0, c_prompt=32)
+    prof = LatencyProfile(FULL, 8.0)
+    projection = projected_finish(prof, B0.t_admit, 2, B0, 4,
+                                  prefill_chunk=16)
+    # after B's prefill ends, nothing but decode steps remain (C's shorter
+    # prompt finished prefilling earlier), so the re-trim is near-exact
+    deadline_abs = B0.t_prefill_done + 2.5 * prof.step_s(3, 66)
+    assert deadline_abs > projection, "precondition: admission must not trim"
+
+    _, B, C, _ = _co_prefill_scenario(
+        params, policy="degrade", b_deadline_s=deadline_abs - 1e-6,
+        c_prompt=32)
+    assert not B.dropped
+    assert 0 < B.tokens_done < 4                     # trimmed post-prefill
+    assert B.met_deadline                            # ...and on time
+    assert not C.dropped
