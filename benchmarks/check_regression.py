@@ -10,11 +10,16 @@ turns the tables into a gate:
    goodput must not drop and p99 must not rise beyond ``--tol-pct``.  The
    serving clock is the deterministic analytic roofline, so a genuine
    improvement should be committed as an updated CSV, not waved through.
+   ``results/table_paged_attn.csv`` gates the decode hot path the same
+   way: per-(impl, context, lanes) attention/step microseconds must not
+   rise beyond tolerance.
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
    chunked prefill beats stall-prefill on trading p99 with no less total
-   goodput, at equal token counts.
+   goodput, at equal token counts; the fused paged-attention path strictly
+   dominates gather+SDPA on modeled attention time, step time, and HBM
+   bytes at every measured (context, lanes) point.
 
 Usage:  python benchmarks/check_regression.py [--results DIR]
             [--baseline-dir DIR] [--tol-pct 5]
@@ -32,6 +37,8 @@ import sys
 HERE = os.path.dirname(os.path.abspath(__file__))
 REPO = os.path.dirname(HERE)
 TABLES = ("table_paged.csv", "table_chunked.csv")
+#: the decode hot-path microbench: gated on time/bytes, not goodput/p99
+ATTN_TABLE = "table_paged_attn.csv"
 
 
 def read_rows(text: str):
@@ -87,6 +94,40 @@ def check_drift(name: str, fresh, base, tol_pct: float, errors):
                           f"{b_p99}ms -> {f_p99}ms (tol {tol_pct}%)")
 
 
+def check_attn_drift(fresh, base, tol_pct: float, errors):
+    """Fused/gather modeled attention and step time must not rise."""
+    key = lambda r: (r["impl"], r["context"], r["lanes"])
+    fresh_by, base_by = ({key(r): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{ATTN_TABLE}: row set changed; commit the "
+                      "regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        for col in ("attn_us", "step_us"):
+            if float(f[col]) > float(b[col]) * (1 + tol):
+                errors.append(f"{ATTN_TABLE} {k}: {col} rose "
+                              f"{b[col]} -> {f[col]} (tol {tol_pct}%)")
+
+
+def check_attn_orderings(rows, errors):
+    """The fused kernel must strictly dominate gather+SDPA everywhere."""
+    by = {(r["impl"], r["context"], r["lanes"]): r for r in rows}
+    points = {(c, l) for i, c, l in by if i == "fused"}
+    for c, l in sorted(points):
+        f, g = by.get(("fused", c, l)), by.get(("gather", c, l))
+        if f is None or g is None:
+            errors.append(f"{ATTN_TABLE}: missing impl row at "
+                          f"ctx={c} lanes={l}")
+            continue
+        for col in ("attn_us", "step_us", "hbm_kb"):
+            if float(f[col]) >= float(g[col]):
+                errors.append(f"{ATTN_TABLE} ctx={c} lanes={l}: fused "
+                              f"{col} {f[col]} not below gather {g[col]}")
+
+
 def check_orderings(paged, chunked, errors):
     """The structural claims the tables prove, re-checked from fresh data."""
     p = {r["path"]: r for r in paged}
@@ -127,12 +168,17 @@ def main() -> int:
         check_drift(name, fresh[name], base, args.tol_pct, errors)
     check_orderings(fresh["table_paged.csv"], fresh["table_chunked.csv"],
                     errors)
+    attn_fresh = load_fresh(args.results, ATTN_TABLE)
+    check_attn_drift(attn_fresh, load_baseline(ATTN_TABLE,
+                                               args.baseline_dir),
+                     args.tol_pct, errors)
+    check_attn_orderings(attn_fresh, errors)
 
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
-    print(f"regression gate: {len(TABLES)} tables OK "
+    print(f"regression gate: {len(TABLES) + 1} tables OK "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

@@ -65,6 +65,17 @@ def main() -> None:
                  f"trading_p99={tc_chunk[7]}ms_vs_stall{tc_stall[7]}ms"
                  f":goodput={tc_all_c[8]}_vs_{tc_all_s[8]}"))
 
+    # --- Fused paged flash-attention vs gather+SDPA (decode hot path) -----
+    import table_paged_attn
+    tpa_rows, tpa_flow = table_paged_attn.main(verbose=False)
+    tpa_by = {(r[0], int(r[1]), int(r[2])): r for r in tpa_rows}
+    f_row = tpa_by[("fused", 4096, 4)]
+    g_row = tpa_by[("gather", 4096, 4)]
+    rows.append(("table_paged_attn", float(f_row[4]),
+                 f"step={f_row[4]}us_vs_gather{g_row[4]}us"
+                 f":goodput={tpa_flow['fused'][0]:.0f}"
+                 f"_vs_{tpa_flow['gather'][0]:.0f}"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

@@ -137,8 +137,8 @@ def step_latency(cfg: ModelConfig, *, n_tokens: int, context: int = 0,
             a_bits=a_bits, hw=hw, dequant_to_16=dequant_to_16)
     # attention over the KV cache (always 16-bit mechanics, per the paper)
     if cfg.arch_type != "ssm" and context:
-        kv_bytes = 2.0 * context * cfg.n_kv_heads * cfg.head_dim * 2.0
-        attn_flops = 4.0 * n_tokens * context * cfg.n_heads * cfg.head_dim
+        kv_bytes = _kv_cache_bytes(cfg, context)
+        attn_flops = _attn_flops(cfg, n_tokens, context)
         window = cfg.sliding_window
         n_local = 0
         if window and cfg.local_global_ratio:
@@ -160,6 +160,93 @@ def step_latency(cfg: ModelConfig, *, n_tokens: int, context: int = 0,
                          w_bits=max(8, w_bits), hw=hw)
     total += cfg.n_layers * hw.layer_overhead
     return total
+
+
+def _kv_cache_bytes(cfg: ModelConfig, context: int) -> float:
+    """HBM bytes of one layer's K+V for ``context`` tokens (16-bit
+    mechanics, per the paper — attention math never quantizes).  Shared by
+    :func:`step_latency` and the paged-attention cost models below: the
+    fused/gather pricing difference is computed by subtraction, so the two
+    sides must agree on this formula byte-for-byte."""
+    return 2.0 * context * cfg.n_kv_heads * cfg.head_dim * 2.0
+
+
+def _attn_flops(cfg: ModelConfig, n_tokens: int, context: int) -> float:
+    """Score + combine flops of ``n_tokens`` queries over ``context`` keys,
+    one layer (shared with :func:`step_latency` — see
+    :func:`_kv_cache_bytes`)."""
+    return 4.0 * n_tokens * context * cfg.n_heads * cfg.head_dim
+
+
+def _paged_eff_traffic(impl: str, context: int,
+                       padded_ctx: Optional[int]) -> tuple:
+    """(effective context, traffic multiplier) of a paged-attention impl —
+    the single definition both the step-time and the HBM-bytes models
+    dispatch on, so the two columns of ``table_paged_attn`` cannot
+    desynchronize."""
+    if impl == "fused":
+        return context, 1.0
+    if impl == "gather":
+        return max(context, padded_ctx or context), 3.0
+    raise ValueError(f"unknown paged-attention impl {impl!r}")
+
+
+def paged_attn_step_s(cfg: ModelConfig, *, n_lanes: int, context: int,
+                      impl: str = "fused", padded_ctx: Optional[int] = None,
+                      hw: Hardware = V5E) -> float:
+    """Per-decode-step attention cost of the *paged* serving path.
+
+    ``impl="fused"``: the flash paged-attention kernel — each lane's K/V
+    pages are read once, straight from the pool, and only the lane's
+    *actual* ``context`` tokens move.  This equals the attention term
+    already inside :func:`step_latency`, so profiles priced "fused" are
+    unchanged from the historical clock.
+
+    ``impl="gather"``: the gather+SDPA path the fused kernel replaces —
+    the whole *padded* table extent (``padded_ctx``, i.e. block-table
+    width x page size) is materialized as a contiguous copy (pool read +
+    buffer write) and then re-read by the dense masked SDPA: ~3x the HBM
+    traffic, scaled by the padding rather than the context.  Its score
+    flops also run over every padded slot.
+    """
+    if cfg.arch_type == "ssm" or context <= 0:
+        return 0.0
+    eff, _ = _paged_eff_traffic(impl, context, padded_ctx)
+    fl = _attn_flops(cfg, n_lanes, eff)
+    kb = paged_attn_hbm_bytes(cfg, n_lanes=n_lanes, context=context,
+                              impl=impl, padded_ctx=padded_ctx) \
+        / cfg.n_layers
+    return cfg.n_layers * max(fl / (hw.peak_bf16 * hw.n_chips),
+                              kb / (hw.hbm_bw * hw.n_chips))
+
+
+def paged_attn_hbm_bytes(cfg: ModelConfig, *, n_lanes: int, context: int,
+                         impl: str = "fused",
+                         padded_ctx: Optional[int] = None) -> float:
+    """Modeled per-decode-step K/V HBM bytes of the paged attention path,
+    summed over layers — the quantity the fused kernel exists to shrink
+    (see :func:`paged_attn_step_s` for the two implementations)."""
+    if cfg.arch_type == "ssm" or context <= 0:
+        return 0.0
+    eff, traffic = _paged_eff_traffic(impl, context, padded_ctx)
+    return cfg.n_layers * _kv_cache_bytes(cfg, eff) * n_lanes * traffic
+
+
+def chunk_attn_s(cfg: ModelConfig, *, chunk: int, context: int,
+                 hw: Hardware = V5E) -> float:
+    """Attention-over-prior-pages cost of absorbing a ``chunk``-token
+    prefill chunk against ``context`` already-written tokens (per lane):
+    each layer streams the lane's existing K/V once (flash semantics) and
+    pays the chunk x context score/combine flops.  Zero for the first
+    chunk — the length-aware term that makes chunked-prefill pricing grow
+    with how much of the prompt is already in the pages, exactly like the
+    kernel's work does."""
+    if cfg.arch_type == "ssm" or context <= 0:
+        return 0.0
+    fl = _attn_flops(cfg, chunk, context)
+    kb = _kv_cache_bytes(cfg, context)
+    return cfg.n_layers * max(fl / (hw.peak_bf16 * hw.n_chips),
+                              kb / (hw.hbm_bw * hw.n_chips))
 
 
 def decision_latency(cfg: ModelConfig, *, prompt_len: int = 512,

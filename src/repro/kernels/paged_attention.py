@@ -1,0 +1,162 @@
+"""Fused paged flash-attention Pallas kernel — the decode hot path.
+
+The gather kernel (``kernels.paged_gather``) materializes each lane's whole
+block-table context as a contiguous ``(B, P*page_size, ...)`` buffer before
+a dense masked SDPA runs over it.  That costs ~3x the necessary HBM traffic
+(write the gathered copy, read it back, on top of the unavoidable pool
+read) and always pays for the *padded* table extent ``P * page_size`` even
+when a lane holds ten tokens of a 256-token table.  For the per-token
+decode step — the innermost loop of the serving stack, run once per layer
+per token per lane — that padding tax is the single largest avoidable HBM
+cost in the system.
+
+This kernel fuses the gather into the attention itself.  The grid is
+``(B, P)``: one cell per (lane, table page).  The block table rides in SMEM
+via ``PrefetchScalarGridSpec`` and *drives the K/V BlockSpec index_maps*,
+so each cell DMAs exactly one K page and one V page HBM->VMEM straight out
+of the shared pool — the gathered context never exists.  Within a lane the
+pages stream in logical order and an online-softmax (flash-style ``m``/
+``l``/``acc`` scratch carried across the inner grid dimension) folds each
+page into the running attention state; the final cell normalizes and
+writes the lane's output.  Per-lane validity is masked from the prefetched
+``pos``: slot ``p*page_size + r`` participates iff it is ``<= pos[b] + i``
+for query row ``i`` — which also makes idle lanes (whole table pointing at
+the reserved dummy page, ``pos = 0``) safe: they attend to slot 0 of the
+dummy page and produce finite garbage the engine discards, exactly like
+the gather path.
+
+One kernel body serves both serving entry points:
+
+* **decode** (``Sq = 1``): one fresh query per lane at position ``pos[b]``.
+* **chunked prefill** (``Sq = C``): the chunk's queries at global positions
+  ``pos[b] .. pos[b] + C - 1``, causal within the chunk and full attend
+  over the lane's previously written pages (the chunk's K/V were already
+  scattered into the pool by ``kernels.paged_scatter``, so page ``p``
+  carries them when the grid reaches it).
+
+GQA grouping happens in-kernel: queries fold to ``(Hkv, Sq*group, D)`` so
+scores are one batched ``dot_general`` per page against the ``(Hkv, ps,
+D)`` page tile — no repeated K/V.  Numerics: scores, softmax and the
+output accumulate in fp32 (matching ``attention._sdpa``'s
+``preferred_element_type`` contract); online softmax is mathematically
+identical to the dense masked softmax, so greedy outputs agree with the
+gather+SDPA path.  Validated CPU-side with ``interpret=True`` against the
+pure-jnp oracle ``ref.paged_attend_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: matches attention._sdpa's masked-logit fill — finite, so a fully-masked
+#: page keeps m/l well-defined without NaN-producing (-inf) - (-inf).
+_MASK_VAL = -1e30
+
+
+def _attend_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float):
+    """Grid (B, P): fold page ``bt[b, p]`` into lane ``b``'s running
+    attention state; normalize and emit on the lane's last page.
+
+    The page selection happened in the BlockSpec index_maps (scalar
+    prefetch) — the body only sees the (1, ps, Hkv, D) page tiles.  The
+    ``m``/``l``/``acc`` scratch persists across the inner grid dimension
+    (pages run sequentially per lane), which is what makes the online
+    softmax exact."""
+    del bt_ref
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    n_pg = pl.num_programs(1)
+    _, Sq, H, D = q_ref.shape
+    ps, Hkv = k_ref.shape[1], k_ref.shape[2]
+    G = H // Hkv
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _MASK_VAL)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # queries (Sq, H, D) -> (Hkv, Sq*G, D): kv-head becomes the batch dim
+    # of one grouped dot per page; row i*G+g is query position i, head
+    # kv*G+g of the original layout.
+    q = q_ref[0].astype(jnp.float32)
+    qg = q.reshape(Sq, Hkv, G, D).transpose(1, 0, 2, 3).reshape(Hkv, Sq * G, D)
+    k = k_ref[0].astype(jnp.float32).transpose(1, 0, 2)      # (Hkv, ps, D)
+    v = v_ref[0].astype(jnp.float32).transpose(1, 0, 2)
+
+    s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    # validity: slot p*ps + r is visible to query row i iff <= pos[b] + i
+    slot = p * ps + jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 1)
+    qrow = jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 0) // G
+    ok = slot <= pos_ref[b] + qrow
+    s = jnp.where(ok[None], s, _MASK_VAL)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new[..., None])
+    # a fully-masked page leaves m at _MASK_VAL, where exp(s - m) == 1 for
+    # every masked slot — zero them explicitly so such pages contribute
+    # nothing (the first real page then resets the state via alpha == 0).
+    pexp = jnp.where(ok[None], pexp, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pexp, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jax.lax.dot_general(
+        pexp, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == n_pg - 1)
+    def _finish():
+        out = acc_ref[...] / l_ref[...][..., None]           # (Hkv, Sq*G, D)
+        o_ref[0] = out.reshape(Hkv, Sq, G, D).transpose(1, 0, 2, 3) \
+            .reshape(Sq, H, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                       block_tables: jax.Array, pos: jax.Array, *,
+                       scale: float, interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D) post-RoPE queries at global positions
+    ``pos[b] .. pos[b] + Sq - 1``; kpool/vpool: (n_pages, page_size, Hkv,
+    D) shared pools *already holding* the step's K/V writes;
+    block_tables: (B, P) int32 page ids; pos: (B,) int32.
+
+    Returns (B, Sq, H, D): softmax(q k^T * scale) v over each lane's valid
+    slots (slot <= pos[b] + row), never materializing the gathered
+    context.  Page ids must be < n_pages (idle lanes point at the reserved
+    dummy page, never out of range)."""
+    B, Sq, H, D = q.shape
+    n_pages, ps, Hkv, _ = kpool.shape
+    _, P = block_tables.shape
+    G = H // Hkv
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, P),
+        in_specs=[
+            pl.BlockSpec((1, Sq, H, D), lambda b, p, bt, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, D),
+                         lambda b, p, bt, pos: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, D),
+                         lambda b, p, bt, pos: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, H, D),
+                               lambda b, p, bt, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, Sq * G), jnp.float32),      # running max m
+            pltpu.VMEM((Hkv, Sq * G), jnp.float32),      # running denom l
+            pltpu.VMEM((Hkv, Sq * G, D), jnp.float32),   # unnormalized out
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_attend_kernel, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos, q, kpool, vpool)

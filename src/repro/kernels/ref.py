@@ -40,6 +40,36 @@ def gather_pages_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
     return jnp.take(pool, block_tables, axis=0)
 
 
+def paged_attend_ref(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
+                     block_tables: jax.Array, pos: jax.Array,
+                     scale: float) -> jax.Array:
+    """Paged-attention oracle: gather each lane's context through its block
+    table, then plain masked softmax attention in fp64-free, loop-free jnp.
+
+    q: (B, Sq, H, D) queries at global positions pos[b] + row; pools:
+    (n_pages, ps, Hkv, D); block_tables: (B, P); pos: (B,).  Query row i of
+    lane b attends slots <= pos[b] + i (GQA: query head h reads kv head
+    h // (H // Hkv)).  Deliberately the *direct* computation — no online
+    softmax, no shared code with the kernel under test."""
+    B, Sq, H, D = q.shape
+    ps = kpool.shape[1]
+    Hkv = kpool.shape[2]
+    P = block_tables.shape[1]
+    ck = jnp.take(kpool, block_tables, axis=0).reshape(B, P * ps, Hkv, D)
+    cv = jnp.take(vpool, block_tables, axis=0).reshape(B, P * ps, Hkv, D)
+    # expand kv heads to query heads (GQA), fp32 throughout
+    rep = H // Hkv
+    ck = jnp.repeat(ck, rep, axis=2).astype(jnp.float32)
+    cv = jnp.repeat(cv, rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), ck) * scale
+    qpos = pos[:, None] + jnp.arange(Sq)[None, :]
+    mask = jnp.arange(P * ps)[None, None, :] <= qpos[:, :, None]  # (B,Sq,S)
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, cv)
+    return out.astype(q.dtype)
+
+
 def scatter_chunk_ref(pool: jax.Array, block_tables: jax.Array,
                       pos: jax.Array, chunk: jax.Array) -> jax.Array:
     """Chunk-scatter oracle: token i of lane b goes to logical position

@@ -6,6 +6,7 @@ stay full precision, exactly as the paper prescribes (Sec. 4.1).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -19,11 +20,25 @@ from repro.models.modules import ExecContext, join
 # RoPE
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    """Inverse-frequency table ``1 / theta^(i/half)``, cached per
+    (head_dim, theta): every layer of every decode step used to recompute
+    this identical constant — hoisting it shares one table across
+    layers/steps (and across traces, where it embeds as the same
+    constant).  ``ensure_compile_time_eval`` keeps the cached table a
+    concrete array even when first touched inside a jit trace (a cached
+    tracer would leak into later traces)."""
+    half = head_dim // 2
+    with jax.ensure_compile_time_eval():
+        return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32)
+                                / half))
+
+
 def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float = 10000.0,
                  dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
     """positions: (..., S) int -> cos/sin of shape (..., S, head_dim//2)."""
-    half = head_dim // 2
-    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    freq = _rope_inv_freq(head_dim, float(theta))
     ang = positions[..., None].astype(jnp.float32) * freq
     return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
 
@@ -124,16 +139,17 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     the (lane-shared-across-layers) block tables and per-lane positions.
     Writes lane b's K/V at logical position ``pos[b]`` (page
     ``block_tables[b, pos[b] // page_size]``, slot ``pos[b] % page_size``),
-    gathers the lane's whole context through its table, and attends with a
-    per-lane validity mask ``slot <= pos[b]``."""
+    then attends over the lane's paged context with a per-lane validity
+    mask ``slot <= pos[b]`` via :func:`repro.kernels.ops.paged_attend` —
+    the fused flash kernel reads K/V pages straight from the pool when
+    ``ctx.use_pallas``; the jnp path gathers and runs dense masked SDPA
+    (the historical semantics)."""
     from repro.kernels import ops as kernel_ops
 
-    B = q.shape[0]
     kpool, vpool = cache["kpool"], cache["vpool"]
     bt = cache["block_tables"]                     # (B, P) int32
     pos = cache["pos"]                             # (B,)  int32
     ps = kpool.shape[1]
-    P = bt.shape[1]
 
     cos, sin = rope_cos_sin(pos[:, None], q.shape[-1], rope_theta)  # (B,1,D/2)
     q = apply_rope(q, cos, sin)
@@ -146,11 +162,8 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     kpool = kpool.at[pid, within].set(k[:, 0].astype(kpool.dtype))
     vpool = vpool.at[pid, within].set(v[:, 0].astype(vpool.dtype))
 
-    ck = kernel_ops.gather_pages(kpool, bt, use_pallas=ctx.use_pallas)
-    cv = kernel_ops.gather_pages(vpool, bt, use_pallas=ctx.use_pallas)
-    slot = jnp.arange(P * ps)
-    mask = (slot[None, :] <= pos[:, None])[:, None, None, :]   # (B,1,1,S)
-    out = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, 1, P * ps)), scale)
+    out = kernel_ops.paged_attend(q, kpool, vpool, bt, pos, scale=scale,
+                                  use_pallas=ctx.use_pallas)
     return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
                  "pos": pos + 1}
 
@@ -167,17 +180,17 @@ def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     chunk's post-RoPE K (and V) are scattered into the lanes' block-table
     pages (``kernels.paged_scatter`` when ``ctx.use_pallas``), then each
     lane's *whole* written context — prior chunks plus this one — is
-    gathered back through its table and attended causally: the query at
-    global position p sees exactly the slots <= p, so the result is
-    mathematically identical to a monolithic prefill of the same prompt."""
+    attended causally through :func:`repro.kernels.ops.paged_attend`
+    (fused flash kernel over the pool pages when ``ctx.use_pallas``; jnp
+    gather + dense masked SDPA otherwise): the query at global position p
+    sees exactly the slots <= p, so the result is mathematically identical
+    to a monolithic prefill of the same prompt."""
     from repro.kernels import ops as kernel_ops
 
-    B, C = q.shape[0], q.shape[1]
+    C = q.shape[1]
     kpool, vpool = cache["kpool"], cache["vpool"]
     bt = cache["block_tables"]                     # (B, P) int32
     pos = cache["pos"]                             # (B,)  int32: chunk start
-    ps = kpool.shape[1]
-    P = bt.shape[1]
 
     qpos = pos[:, None] + jnp.arange(C)[None, :]            # (B, C)
     cos, sin = rope_cos_sin(qpos, q.shape[-1], rope_theta)  # (B, C, D/2)
@@ -189,11 +202,8 @@ def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     vpool = kernel_ops.scatter_chunk(vpool, bt, pos, v,
                                      use_pallas=ctx.use_pallas)
 
-    ck = kernel_ops.gather_pages(kpool, bt, use_pallas=ctx.use_pallas)
-    cv = kernel_ops.gather_pages(vpool, bt, use_pallas=ctx.use_pallas)
-    slot = jnp.arange(P * ps)
-    mask = (slot[None, None, :] <= qpos[:, :, None])[:, None]  # (B,1,C,S)
-    out = _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, C, P * ps)), scale)
+    out = kernel_ops.paged_attend(q, kpool, vpool, bt, pos, scale=scale,
+                                  use_pallas=ctx.use_pallas)
     return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
                  "pos": pos + C}
 
@@ -222,8 +232,10 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
     "block_tables": (B, P)-int32, "pos": (B,)-int32}): paged decode —
     each lane has its own position and its own page list into a shared
     pool; new K/V are scattered into lane b's page at ``pos[b]`` and the
-    lane's context is gathered through its block table (optionally via the
-    Pallas scalar-prefetch kernel when ``ctx.use_pallas``).  Lanes whose
+    lane attends over its block-table context via ``ops.paged_attend``
+    (the fused paged flash-attention kernel when ``ctx.use_pallas`` —
+    pages stream pool-direct through an online softmax; jnp gather + dense
+    masked SDPA otherwise).  Lanes whose
     table points at the reserved dummy page are idle; their outputs are
     garbage and must be discarded by the caller.  With a paged cache and
     ``x`` longer than one token, this is a *prefill chunk*: positions

@@ -412,6 +412,10 @@ def paged_decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     :func:`decode_step`, lanes are independent requests: each has its own
     position and its own page list, which is what lets the paged serving
     engine admit/retire requests between steps with no wave barrier.
+    Per-layer attention runs through ``ops.paged_attend`` — with
+    ``ctx.use_pallas`` the fused paged flash-attention kernel reads K/V
+    pages straight from the pool and never materializes the gathered
+    context.
 
     Only the dense uniform-stack architectures (the qwen family) are
     supported — sliding-window / hybrid / enc-dec segments keep their

@@ -18,10 +18,14 @@ lifecycle fields the engines fill in):
   admits EDF-ordered requests into free decode lanes *between real decode
   steps*, frees pages the step a request retires, and reuses the analytic
   batcher's drop/degrade admission math on the same ``core.latency``
-  clock.  Attention gathers K/V through the block table
-  (``models.attention`` paged branch; Pallas scalar-prefetch gather in
-  ``kernels.paged_gather``).  Greedy outputs are token-identical to the
-  wave path — same tokens, no barrier.
+  clock.  Attention runs through ``ops.paged_attend``
+  (``models.attention`` paged branch): the fused paged flash-attention
+  kernel (``kernels.paged_attention``) streams K/V pages straight from
+  the pool through an online softmax when ``use_pallas`` — the gathered
+  context is never materialized — with a jnp gather+SDPA fallback
+  otherwise; profiles price the two implementations via
+  ``LatencyProfile(attn_impl=...)``.  Greedy outputs are token-identical
+  to the wave path — same tokens, no barrier.
 
   **Chunk-interleave contract** (``prefill_chunk=N``, a multiple of the
   page size; mirrored by the analytic batcher): an admitted prompt is
@@ -30,9 +34,10 @@ lifecycle fields the engines fill in):
   the chunk's K/V into its block-table pages (``kernels.paged_scatter``)
   — with one decode step for the already-decoding lanes between chunks,
   so a long prompt never head-of-line-blocks the decode lanes.  Each
-  chunk is charged ``prefill_s(N)`` on the shared clock (chunking re-pays
-  the weight read, raising total prefill cost — the win is tail latency,
-  not throughput); admission projections (``projected_finish`` /
+  chunk is charged ``prefill_s(N, context=absorbed)`` on the shared clock
+  (chunking re-pays the weight read and each later chunk attends over the
+  pages already written — both raise total prefill cost; the win is tail
+  latency, not throughput); admission projections (``projected_finish`` /
   ``degraded_budget``) take the same ``prefill_chunk`` so drop/degrade
   decisions price the interleave in, and the policy is re-applied when
   the prompt completes because co-resident lanes' real decode charges

@@ -27,11 +27,12 @@ paper's "a late action is worth nothing" regime) and ``"degrade"`` trims
 Chunked prefill (``prefill_chunk=N``): instead of stalling the engine for
 the whole prompt at admission, the prompt is absorbed ``N`` tokens at a
 time with one decode step for the *other* lanes between chunks — the
-head-of-line-blocking fix the ROADMAP tracked.  Each chunk is charged
-``prefill_s(chunk_len)`` on the same clock (chunking re-pays the
-weight-read per chunk, so the total prefill cost rises; the win is that
-decode lanes keep landing tokens).  The projections below take the same
-``prefill_chunk`` so admission accounts for both effects.
+head-of-line-blocking fix the ROADMAP tracked.  Each chunk is charged the
+length-aware ``prefill_s(chunk_len, context=absorbed)`` on the same clock
+(chunking re-pays the weight-read per chunk *and* each later chunk
+attends over the pages already written, so the total prefill cost rises;
+the win is that decode lanes keep landing tokens).  The projections below
+take the same ``prefill_chunk`` so admission accounts for both effects.
 """
 from __future__ import annotations
 
@@ -50,23 +51,57 @@ _CTX_BUCKET = 64
 
 
 class LatencyProfile:
-    """Memoized analytic costs of one (model config, avg_bits) point."""
+    """Memoized analytic costs of one (model config, avg_bits) point.
+
+    ``attn_impl`` selects how the *paged decode attention* is priced:
+    ``"fused"`` (default) models the fused paged flash-attention kernel —
+    one pool-direct read of each lane's actual context, which is exactly
+    the attention term :func:`repro.core.latency.step_latency` always
+    charged, so fused profiles reproduce the historical clock bit-for-bit.
+    ``"gather"`` models the gather+SDPA path the kernel replaced: ~3x the
+    KV traffic at the *padded* block-table extent (``padded_ctx``), added
+    on top.  Engines built on a gather profile project slower steps, so
+    admission, degrade budgets and routing all see the difference — the
+    kernel's win flows into goodput, not just microbenchmarks."""
 
     def __init__(self, cfg: ModelConfig, avg_bits: float, *,
-                 hw: Hardware = V5E):
+                 hw: Hardware = V5E, attn_impl: str = "fused",
+                 padded_ctx: Optional[int] = None):
+        assert attn_impl in ("fused", "gather"), attn_impl
+        if attn_impl == "gather" and (cfg.arch_type != "dense"
+                                      or cfg.sliding_window
+                                      or cfg.local_global_ratio):
+            # the gather adjustment in step_s cancels step_latency's
+            # built-in attention term, which prices windowed layers at
+            # min(context, window) — the cancellation is only exact for
+            # the dense uniform stacks the paged engine itself supports
+            raise ValueError(
+                "attn_impl='gather' models the paged decode path, which "
+                f"supports dense uniform stacks only (got {cfg.name})")
         self.cfg = cfg
         self.avg_bits = avg_bits
         self.hw = hw
-        self._prefill: Dict[int, float] = {}
+        self.attn_impl = attn_impl
+        self.padded_ctx = padded_ctx
+        self._prefill: Dict[Tuple[int, int], float] = {}
         self._step: Dict[Tuple[int, int], float] = {}
         self._service: Dict[Tuple[int, int], float] = {}
 
-    def prefill_s(self, prompt_len: int) -> float:
-        t = self._prefill.get(prompt_len)
+    def prefill_s(self, prompt_len: int, context: int = 0) -> float:
+        """Cost of absorbing ``prompt_len`` prompt tokens with ``context``
+        tokens already written to the request's pages (0 for a monolithic
+        prefill or a first chunk).  The context term is the length-aware
+        attention charge of a later chunk attending over the lane's prior
+        pages (:func:`repro.core.latency.chunk_attn_s`)."""
+        key = (prompt_len, context)
+        t = self._prefill.get(key)
         if t is None:
             t = lat_mod.step_latency(self.cfg, n_tokens=prompt_len,
                                      w_bits=self.avg_bits, hw=self.hw)
-            self._prefill[prompt_len] = t
+            if context:
+                t += lat_mod.chunk_attn_s(self.cfg, chunk=prompt_len,
+                                          context=context, hw=self.hw)
+            self._prefill[key] = t
         return t
 
     def step_s(self, n_active: int, context: int) -> float:
@@ -80,9 +115,19 @@ class LatencyProfile:
         key = (n_active, bucket)
         t = self._step.get(key)
         if t is None:
+            ctx_rep = bucket * _CTX_BUCKET
             t = lat_mod.step_latency(self.cfg, n_tokens=n_active,
-                                     context=bucket * _CTX_BUCKET,
+                                     context=ctx_rep,
                                      w_bits=self.avg_bits, hw=self.hw)
+            if self.attn_impl == "gather":
+                # replace the built-in (fused-equivalent) attention term
+                # with the gather path's padded 3x-traffic term
+                t += lat_mod.paged_attn_step_s(
+                    self.cfg, n_lanes=n_active, context=ctx_rep,
+                    impl="gather", padded_ctx=self.padded_ctx, hw=self.hw) \
+                    - lat_mod.paged_attn_step_s(
+                        self.cfg, n_lanes=n_active, context=ctx_rep,
+                        impl="fused", hw=self.hw)
             self._step[key] = t
         return t
 
@@ -98,12 +143,23 @@ class LatencyProfile:
             self._service[key] = t
         return t
 
-    def prefill_chunked_s(self, prompt_len: int, chunk: int) -> float:
+    def prefill_chunked_s(self, prompt_len: int, chunk: int,
+                          start_ctx: int = 0) -> float:
         """Total prefill charge when the prompt is absorbed in ``chunk``-token
-        pieces: each chunk re-pays the weight-read, so this is >= the
+        pieces: each chunk re-pays the weight-read *and* (length-aware)
+        attends over every previously written chunk, so this is >= the
         monolithic ``prefill_s(prompt_len)`` — the cost side of chunked
-        prefill's latency trade (the win is decode lanes not stalling)."""
-        return sum(self.prefill_s(c) for c in prompt_chunks(prompt_len, chunk))
+        prefill's latency trade (the win is decode lanes not stalling).
+
+        ``start_ctx``: tokens already written to the lane's pages before
+        these chunks — pricing the *remainder* of a mid-flight prefill
+        (the router's backlog estimate) must charge the attend over
+        everything absorbed so far, not restart from zero context."""
+        total, done = 0.0, start_ctx
+        for c in prompt_chunks(prompt_len, chunk):
+            total += self.prefill_s(c, context=done)
+            done += c
+        return total
 
 
 def prompt_chunks(prompt_len: int, chunk: int) -> List[int]:
@@ -297,7 +353,8 @@ class ContinuousBatcher:
             if run.prefill_left <= 0:
                 continue
             c = min(self.prefill_chunk, run.prefill_left)
-            self.t += self.profile.prefill_s(c)
+            absorbed = run.req.prompt_len - run.prefill_left
+            self.t += self.profile.prefill_s(c, context=absorbed)
             run.prefill_left -= c
             if run.prefill_left > 0:
                 continue
@@ -370,7 +427,11 @@ class ContinuousBatcher:
                                 self.pending, self.slots,
                                 prefill_chunk=self.prefill_chunk,
                                 active_prefill_left=[r.prefill_left
-                                                     for r in self.active])
+                                                     for r in self.active],
+                                active_prefill_done=[
+                                    r.req.prompt_len - r.prefill_left
+                                    if r.prefill_left > 0 else 0
+                                    for r in self.active])
 
 
 def retire_dropped(eng, req) -> None:
@@ -418,6 +479,7 @@ def estimate_backlog(profile: LatencyProfile, t: float, now: float,
                      active_remaining: List[int], pending, slots: int, *,
                      prefill_chunk: Optional[int] = None,
                      active_prefill_left: Optional[List[int]] = None,
+                     active_prefill_done: Optional[List[int]] = None,
                      ) -> float:
     """The router-facing wait estimate shared by every engine flavor.
 
@@ -426,18 +488,25 @@ def estimate_backlog(profile: LatencyProfile, t: float, now: float,
     admission so it shows up in the clock-ahead term; chunked engines
     defer those charges, and a router that cannot see them would happily
     route a tight-deadline request onto an engine mid-way through a long
-    chat prefill."""
+    chat prefill.  ``active_prefill_done`` (parallel list): tokens those
+    lanes have *already* absorbed — the remaining chunks attend over them,
+    so under the length-aware clock a prefill near the end of a long
+    prompt is priced at its true (high) per-chunk cost, not as a fresh
+    start."""
     step1 = profile.step_s(max(1, len(active_remaining)), _CTX_BUCKET * 4)
     work = sum(active_remaining) * step1
 
-    def prefill_cost(n_tokens: int) -> float:
+    def prefill_cost(n_tokens: int, start_ctx: int = 0) -> float:
         if prefill_chunk is None:
             return profile.prefill_s(n_tokens)
-        return profile.prefill_chunked_s(n_tokens, prefill_chunk)
+        return profile.prefill_chunked_s(n_tokens, prefill_chunk,
+                                         start_ctx=start_ctx)
 
-    for left in active_prefill_left or ():
+    left_list = list(active_prefill_left or ())
+    done_list = list(active_prefill_done or ()) or [0] * len(left_list)
+    for left, done in zip(left_list, done_list):
         if left > 0:
-            work += prefill_cost(left)
+            work += prefill_cost(left, start_ctx=done)
     for r in pending:
         work += prefill_cost(r.prompt_len) + r.max_new * step1
     return max(0.0, t - now) + work / slots

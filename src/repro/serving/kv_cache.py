@@ -126,22 +126,30 @@ class PagedKVCache:
 
         ``exclude``: slots whose rows are masked to the dummy page (pos 0)
         for this step — mid-prefill lanes own real pages but must not be
-        written or read by a decode step, exactly like idle lanes."""
-        bt, pos = self.block_tables, self.pos
-        if exclude:
-            bt, pos = bt.copy(), pos.copy()
-            for s in exclude:
-                bt[s, :] = DUMMY_PAGE
-                pos[s] = 0
+        written or read by a decode step, exactly like idle lanes.
+
+        The block table / position rows are **copied** before wrapping:
+        ``jnp.asarray`` of a numpy array may alias its buffer zero-copy on
+        the CPU backend, and the engine mutates ``self.pos`` /
+        ``self.block_tables`` between (asynchronously dispatched) steps —
+        handing out the live buffers is a data race once nothing on the
+        host forces a sync per step (it used to be masked by host-side
+        sampling materializing the logits every step)."""
+        bt, pos = self.block_tables.copy(), self.pos.copy()
+        for s in exclude:
+            bt[s, :] = DUMMY_PAGE
+            pos[s] = 0
         return {"kpool": self.kpool, "vpool": self.vpool,
                 "block_tables": jnp.asarray(bt), "pos": jnp.asarray(pos)}
 
     def chunk_cache(self, slot: int) -> dict:
         """The single-lane pytree ``transformer.prefill_chunk`` consumes:
-        this slot's block table and write position over the shared pools."""
+        this slot's block table and write position over the shared pools
+        (copied, not aliased — see :meth:`decode_cache`)."""
         return {"kpool": self.kpool, "vpool": self.vpool,
-                "block_tables": jnp.asarray(self.block_tables[slot:slot + 1]),
-                "pos": jnp.asarray(self.pos[slot:slot + 1])}
+                "block_tables":
+                    jnp.asarray(self.block_tables[slot:slot + 1].copy()),
+                "pos": jnp.asarray(self.pos[slot:slot + 1].copy())}
 
     def update_from(self, new_cache: dict) -> None:
         """Write back the pools a decode step returned (positions stay

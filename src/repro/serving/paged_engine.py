@@ -25,8 +25,9 @@ does both at once:
   absorbed ``N`` tokens at a time through ``transformer.prefill_chunk``
   (the chunk's K/V scatter straight into the request's block-table pages),
   one real decode step for the active lanes landing between chunks.  Each
-  chunk is charged ``profile.prefill_s(N)``, so the clock contract holds
-  chunk-for-chunk; greedy outputs stay token-identical to the monolithic
+  chunk is charged ``profile.prefill_s(N, context=absorbed)`` — length-
+  aware, later chunks attend over the pages already written — so the clock
+  contract holds chunk-for-chunk; greedy outputs stay token-identical to the monolithic
   path (tests/test_chunked_prefill.py).  When a prompt completes, the
   admission policy is re-applied (:meth:`ContinuousEngine.
   _post_prefill_check`) — interleaved decode charges landed since the
@@ -67,6 +68,14 @@ from repro.serving.continuous import drive as continuous_drive
 from repro.serving.kv_cache import PagedKVCache
 
 
+def _sample_first(step_out):
+    """Fold greedy sampling into a jit'd prefill/chunk/decode step: map the
+    (logits, cache) a transformer entry point returns to (token ids, cache)
+    so the logits never leave the device."""
+    logits, cache = step_out
+    return sampler_mod.greedy(logits), cache
+
+
 @dataclasses.dataclass
 class _Lane:
     req: object                   # Request or SimRequest
@@ -96,7 +105,8 @@ class ContinuousEngine:
                  ctx: Optional[ExecContext] = None,
                  on_retire: Optional[Callable] = None,
                  prompt_seed: int = 0, unroll: bool = True,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 attn_impl: str = "fused"):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
@@ -111,8 +121,18 @@ class ContinuousEngine:
         Must be a multiple of ``page_size`` so chunk writes stay
         page-aligned (the Pallas scatter path requires it; it also makes
         each full chunk exactly fill pages).  Each chunk is charged
-        ``profile.prefill_s(chunk)`` on the engine clock, so the clock
-        contract with the analytic batcher holds chunk-for-chunk."""
+        ``profile.prefill_s(chunk, context=absorbed)`` on the engine clock
+        — length-aware, since a later chunk attends over every previously
+        written page — so the clock contract with the analytic batcher
+        holds chunk-for-chunk.
+
+        ``attn_impl``: how a default-constructed profile prices the paged
+        decode attention — ``"fused"`` (the paged flash-attention kernel:
+        one pool-direct read of each lane's actual context; this is also
+        the historical clock) or ``"gather"`` (the materialize-then-SDPA
+        path the kernel replaced: ~3x the KV traffic at the padded
+        block-table extent).  Ignored when ``profile`` is passed
+        explicitly."""
         if cfg.arch_type != "dense" or cfg.local_global_ratio \
                 or cfg.sliding_window:
             raise NotImplementedError(
@@ -129,27 +149,33 @@ class ContinuousEngine:
                 f"prefill_chunk ({prefill_chunk}) must be a positive "
                 f"multiple of page_size ({page_size})")
         self.prefill_chunk = prefill_chunk
+        width = -(-max_ctx // page_size)
         self.profile = profile or LatencyProfile(latency_cfg or cfg,
-                                                 avg_bits, hw=hw)
+                                                 avg_bits, hw=hw,
+                                                 attn_impl=attn_impl,
+                                                 padded_ctx=width * page_size)
         self.ctx = ctx or ExecContext()
         self.on_retire = on_retire
         self.prompt_seed = prompt_seed
-        width = -(-max_ctx // page_size)
         if n_pages is None:
             n_pages = slots * width + 1
         self.cache = PagedKVCache(cfg, slots=slots, n_pages=n_pages,
                                   page_size=page_size, max_ctx=max_ctx)
+        # greedy sampling lives *inside* the jit'd steps: only (slots,)-sized
+        # int32 token ids cross the device->host boundary per step, never the
+        # (slots, vocab) logits the host-side sampler used to materialize.
         self._prefill = jax.jit(
-            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
-                                             unroll=unroll))
+            lambda p, b: _sample_first(transformer.prefill(p, cfg, b,
+                                                           self.ctx,
+                                                           unroll=unroll)))
         self._chunk = jax.jit(
-            lambda p, b, c: transformer.prefill_chunk(p, cfg, b, c,
-                                                      self.ctx,
-                                                      unroll=unroll))
+            lambda p, b, c: _sample_first(
+                transformer.prefill_chunk(p, cfg, b, c, self.ctx,
+                                          unroll=unroll)))
         self._decode = jax.jit(
-            lambda p, b, c: transformer.paged_decode_step(p, cfg, b, c,
-                                                          self.ctx,
-                                                          unroll=unroll))
+            lambda p, b, c: _sample_first(
+                transformer.paged_decode_step(p, cfg, b, c, self.ctx,
+                                              unroll=unroll)))
         self.t = 0.0                      # engine-local analytic clock
         self.lanes: List[Optional[_Lane]] = [None] * slots
         self.pending: List = []
@@ -254,48 +280,51 @@ class ContinuousEngine:
                                      prompt_toks=self._prompt_for(req))
             return
         toks = jnp.asarray(self._prompt_for(req)[None, :])
-        logits, dense_cache = self._prefill(self.params, {"tokens": toks})
+        first_tok, dense_cache = self._prefill(self.params, {"tokens": toks})
         kv = dense_cache["layers"]
         self.cache.write_prefill(lane, kv["k"][:, 0], kv["v"][:, 0])
         self.t += self.profile.prefill_s(S)
         lane_state = _Lane(req, last_token=None, remaining=n_tok,
                            context=S)
         self.lanes[lane] = lane_state
-        self._finish_prefill(lane, lane_state, logits)
+        self._finish_prefill(lane, lane_state, first_tok)
 
     # -- chunked prefill -----------------------------------------------------
 
     def _advance_prefills(self) -> None:
         """Absorb one chunk for every lane still prefilling: real compute
         through ``transformer.prefill_chunk`` (the chunk's K/V scatter into
-        the lane's pages), one ``prefill_s(chunk)`` charge per chunk."""
+        the lane's pages), one length-aware ``prefill_s(chunk,
+        context=absorbed)`` charge per chunk — later chunks attend over
+        the lane's previously written pages and are priced accordingly."""
         for i, l in enumerate(self.lanes):
             if l is None or not l.prefilling:
                 continue
             S = len(l.prompt_toks)
             c = min(self.prefill_chunk, S - l.absorbed)
             toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
-            logits, new_cache = self._chunk(self.params, {"tokens": toks},
-                                            self.cache.chunk_cache(i))
+            first_tok, new_cache = self._chunk(self.params, {"tokens": toks},
+                                               self.cache.chunk_cache(i))
             self.cache.update_from(new_cache)
             self.cache.pos[i] += c
+            self.t += self.profile.prefill_s(c, context=l.absorbed)
             l.absorbed += c
             l.context += c
-            self.t += self.profile.prefill_s(c)
             if l.absorbed == S:
                 l.prompt_toks = None
-                self._finish_prefill(i, l, logits)
+                self._finish_prefill(i, l, first_tok)
 
-    def _finish_prefill(self, lane: int, l: _Lane, logits) -> None:
+    def _finish_prefill(self, lane: int, l: _Lane, first_tok) -> None:
         """Shared prefill completion: seed the lane with the first output
-        token from the prefill logits, then re-apply the admission policy —
-        interleaved decode charges (and co-resident lanes' real step costs)
-        landed since the admission-time projection, so a request can reach
-        this point already unable to meet its deadline (the past-deadline-
-        after-prefill bug: previously such a request was served late)."""
+        token (sampled on-device inside the jit'd prefill/chunk step), then
+        re-apply the admission policy — interleaved decode charges (and
+        co-resident lanes' real step costs) landed since the admission-time
+        projection, so a request can reach this point already unable to
+        meet its deadline (the past-deadline-after-prefill bug: previously
+        such a request was served late)."""
         req = l.req
         req.t_prefill_done = self.t
-        t0 = int(np.asarray(sampler_mod.greedy(logits))[0, 0])
+        t0 = int(np.asarray(first_tok)[0, 0])
         l.last_token = t0
         l.produced = [t0]
         req.tokens_done = 1
@@ -349,12 +378,12 @@ class ContinuousEngine:
         toks = np.zeros((self.slots, 1), np.int32)
         for i, l in active:
             toks[i, 0] = l.last_token
-        logits, new_cache = self._decode(self.params,
-                                         {"token": jnp.asarray(toks)},
-                                         self.cache.decode_cache(
-                                             exclude=prefilling))
+        next_toks, new_cache = self._decode(self.params,
+                                            {"token": jnp.asarray(toks)},
+                                            self.cache.decode_cache(
+                                                exclude=prefilling))
         self.cache.update_from(new_cache)
-        nxt = np.asarray(sampler_mod.greedy(logits))
+        nxt = np.asarray(next_toks)                  # (slots, 1) int32 only
         self.t += self.profile.step_s(len(active),
                                       max(l.context for _, l in active))
         for i, l in active:
@@ -402,4 +431,7 @@ class ContinuousEngine:
                                 prefill_chunk=self.prefill_chunk,
                                 active_prefill_left=[
                                     len(l.prompt_toks) - l.absorbed
-                                    if l.prefilling else 0 for l in lanes])
+                                    if l.prefilling else 0 for l in lanes],
+                                active_prefill_done=[
+                                    l.absorbed if l.prefilling else 0
+                                    for l in lanes])

@@ -193,9 +193,16 @@ def test_prompt_chunks_and_chunked_cost():
     assert prompt_chunks(5, 8) == [5]
     prof = LatencyProfile(FULL, 8.0)
     total = prof.prefill_chunked_s(48, 16)
-    assert total == pytest.approx(3 * prof.prefill_s(16))
-    # chunking re-pays the weight read: total cost is above monolithic
-    assert total > prof.prefill_s(48)
+    # length-aware: chunk j attends over the j*16 already-written tokens,
+    # so the total is the per-chunk sum at growing context — strictly above
+    # three context-free chunks, which in turn exceed the monolithic cost
+    # (each chunk re-pays the weight read)
+    assert total == pytest.approx(prof.prefill_s(16)
+                                  + prof.prefill_s(16, context=16)
+                                  + prof.prefill_s(16, context=32))
+    assert total > 3 * prof.prefill_s(16) > prof.prefill_s(48)
+    # first chunk has nothing to attend over: context 0 adds nothing
+    assert prof.prefill_s(16, context=0) == prof.prefill_s(16)
 
 
 def test_projected_finish_prices_interleave():
@@ -213,6 +220,25 @@ def test_projected_finish_prices_interleave():
     assert interleave == pytest.approx(
         (len(prompt_chunks(64, 16)) - 1) * prof.step_s(2, 64)
         + 4 * (prof.step_s(2, 66) - prof.step_s(1, 66)), abs=1e-9)
+
+
+def test_backlog_prices_absorbed_prefill_context():
+    """The router backlog estimate must charge a mid-prefill lane's
+    remaining chunks at the context it has already absorbed: near the end
+    of a long prompt each chunk attends over ~the whole prompt, so the
+    same 128 tokens left must cost more than a fresh 128-token start."""
+    from repro.serving.continuous import estimate_backlog
+
+    prof = LatencyProfile(FULL, 8.0)
+    common = dict(prefill_chunk=64, active_prefill_left=[128])
+    near_end = estimate_backlog(prof, 0.0, 0.0, [0], [], 4,
+                                active_prefill_done=[3968], **common)
+    fresh = estimate_backlog(prof, 0.0, 0.0, [0], [], 4,
+                             active_prefill_done=[0], **common)
+    assert near_end > fresh
+    # omitted absorbed contexts default to zero (monolithic callers)
+    legacy = estimate_backlog(prof, 0.0, 0.0, [0], [], 4, **common)
+    assert legacy == pytest.approx(fresh)
 
 
 # -- analytic mirror ---------------------------------------------------------
