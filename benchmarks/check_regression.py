@@ -12,18 +12,33 @@ turns the tables into a gate:
    improvement should be committed as an updated CSV, not waved through.
    ``results/table_paged_attn.csv`` gates the decode hot path the same
    way: per-(impl, context, lanes) attention/step microseconds must not
-   rise beyond tolerance.
+   rise beyond tolerance.  ``results/table_hybrid.csv`` gates the
+   sliding-window paged path: per-context windowed step/KV costs and the
+   hybrid-pool fleet goodput.
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
    chunked prefill beats stall-prefill on trading p99 with no less total
    goodput, at equal token counts; the fused paged-attention path strictly
    dominates gather+SDPA on modeled attention time, step time, and HBM
-   bytes at every measured (context, lanes) point.
+   bytes at every measured (context, lanes) point; the windowed
+   gemma3-class stack strictly undercuts its dense-uniform equivalent on
+   step time and KV bytes beyond the window, and a fleet pool holding a
+   windowed gemma3-class engine earns at least the goodput of the same
+   pool priced dense.
+
+Malformed tables (empty, or missing the gated columns) fail the gate
+with a named error rather than a traceback — a refactor that drops a
+column must not slip through as a crash-then-green rerun.
 
 Usage:  python benchmarks/check_regression.py [--results DIR]
             [--baseline-dir DIR] [--tol-pct 5]
 Exit status 0 = pass, 1 = regression (messages on stderr).
+
+Unit-tested in tests/test_check_regression.py: ``main(argv)`` takes its
+argv explicitly and all filesystem access goes through --results /
+--baseline-dir, so the tests drive the real entry point on synthetic
+tables.
 """
 from __future__ import annotations
 
@@ -39,6 +54,8 @@ REPO = os.path.dirname(HERE)
 TABLES = ("table_paged.csv", "table_chunked.csv")
 #: the decode hot-path microbench: gated on time/bytes, not goodput/p99
 ATTN_TABLE = "table_paged_attn.csv"
+#: the sliding-window paged path: windowed-vs-dense costs + fleet goodput
+HYBRID_TABLE = "table_hybrid.csv"
 
 
 def read_rows(text: str):
@@ -46,6 +63,21 @@ def read_rows(text: str):
     if not rows:
         raise SystemExit("empty CSV")
     return rows
+
+
+def col(row, name: str, table: str, errors) -> float | None:
+    """A gated numeric cell.  A missing or non-numeric column is its own
+    named regression (the historical behavior was a KeyError traceback,
+    which CI surfaced as a crash instead of a finding)."""
+    val = row.get(name)
+    if val is None or val == "":
+        errors.append(f"{table}: missing column {name!r}")
+        return None
+    try:
+        return float(val)
+    except ValueError:
+        errors.append(f"{table}: non-numeric {name}={val!r}")
+        return None
 
 
 def load_fresh(results_dir: str, name: str):
@@ -68,8 +100,10 @@ def load_baseline(name: str, baseline_dir: str | None):
 
 
 def key_of(row):
-    # table_paged rows key on "path"; table_chunked on ("path", "class")
-    return (row["path"], row.get("class", ""))
+    # table_paged rows key on "path"; table_chunked on ("path", "class").
+    # .get, not [...]: a table missing its key column must surface as a
+    # row-set-changed / missing-row finding, never a KeyError traceback.
+    return (row.get("path"), row.get("class", ""))
 
 
 def check_drift(name: str, fresh, base, tol_pct: float, errors):
@@ -84,19 +118,19 @@ def check_drift(name: str, fresh, base, tol_pct: float, errors):
     tol = tol_pct / 100.0
     for k, b in base_by.items():
         f = fresh_by[k]
-        b_good, f_good = float(b["goodput"]), float(f["goodput"])
-        if f_good < b_good * (1 - tol):
+        b_good, f_good = (col(r, "goodput", name, errors) for r in (b, f))
+        if None not in (b_good, f_good) and f_good < b_good * (1 - tol):
             errors.append(f"{name} {k}: goodput dropped "
                           f"{b_good} -> {f_good} (tol {tol_pct}%)")
-        b_p99, f_p99 = float(b["p99_ms"]), float(f["p99_ms"])
-        if f_p99 > b_p99 * (1 + tol):
+        b_p99, f_p99 = (col(r, "p99_ms", name, errors) for r in (b, f))
+        if None not in (b_p99, f_p99) and f_p99 > b_p99 * (1 + tol):
             errors.append(f"{name} {k}: p99 rose "
                           f"{b_p99}ms -> {f_p99}ms (tol {tol_pct}%)")
 
 
 def check_attn_drift(fresh, base, tol_pct: float, errors):
     """Fused/gather modeled attention and step time must not rise."""
-    key = lambda r: (r["impl"], r["context"], r["lanes"])
+    key = lambda r: (r.get("impl"), r.get("context"), r.get("lanes"))
     fresh_by, base_by = ({key(r): r for r in rows}
                          for rows in (fresh, base))
     if set(fresh_by) != set(base_by):
@@ -106,15 +140,17 @@ def check_attn_drift(fresh, base, tol_pct: float, errors):
     tol = tol_pct / 100.0
     for k, b in base_by.items():
         f = fresh_by[k]
-        for col in ("attn_us", "step_us"):
-            if float(f[col]) > float(b[col]) * (1 + tol):
-                errors.append(f"{ATTN_TABLE} {k}: {col} rose "
-                              f"{b[col]} -> {f[col]} (tol {tol_pct}%)")
+        for c in ("attn_us", "step_us"):
+            bv, fv = (col(r, c, ATTN_TABLE, errors) for r in (b, f))
+            if None not in (bv, fv) and fv > bv * (1 + tol):
+                errors.append(f"{ATTN_TABLE} {k}: {c} rose "
+                              f"{bv} -> {fv} (tol {tol_pct}%)")
 
 
 def check_attn_orderings(rows, errors):
     """The fused kernel must strictly dominate gather+SDPA everywhere."""
-    by = {(r["impl"], r["context"], r["lanes"]): r for r in rows}
+    by = {(r.get("impl"), r.get("context"), r.get("lanes")): r
+          for r in rows}
     points = {(c, l) for i, c, l in by if i == "fused"}
     for c, l in sorted(points):
         f, g = by.get(("fused", c, l)), by.get(("gather", c, l))
@@ -122,34 +158,122 @@ def check_attn_orderings(rows, errors):
             errors.append(f"{ATTN_TABLE}: missing impl row at "
                           f"ctx={c} lanes={l}")
             continue
-        for col in ("attn_us", "step_us", "hbm_kb"):
-            if float(f[col]) >= float(g[col]):
+        for cname in ("attn_us", "step_us", "hbm_kb"):
+            fv, gv = (col(r, cname, ATTN_TABLE, errors) for r in (f, g))
+            if None not in (fv, gv) and fv >= gv:
                 errors.append(f"{ATTN_TABLE} ctx={c} lanes={l}: fused "
-                              f"{col} {f[col]} not below gather {g[col]}")
+                              f"{cname} {fv} not below gather {gv}")
 
 
 def check_orderings(paged, chunked, errors):
     """The structural claims the tables prove, re-checked from fresh data."""
-    p = {r["path"]: r for r in paged}
-    if float(p["paged"]["p99_ms"]) >= float(p["wave"]["p99_ms"]):
-        errors.append("table_paged: paged p99 not below wave p99")
-    if float(p["paged"]["goodput"]) < float(p["wave"]["goodput"]):
-        errors.append("table_paged: paged goodput below wave goodput")
-    if p["paged"]["tokens"] != p["wave"]["tokens"]:
-        errors.append("table_paged: token counts diverged between paths")
+    p = {r.get("path"): r for r in paged}
+    def num(tbl, row, name):
+        return col(row, name, tbl, errors)
+    pw, pp = p.get("wave"), p.get("paged")
+    if pw is None or pp is None:
+        errors.append("table_paged: missing wave/paged row")
+    else:
+        a, b = num("table_paged", pp, "p99_ms"), num("table_paged", pw,
+                                                     "p99_ms")
+        if None not in (a, b) and a >= b:
+            errors.append("table_paged: paged p99 not below wave p99")
+        a, b = num("table_paged", pp, "goodput"), num("table_paged", pw,
+                                                      "goodput")
+        if None not in (a, b) and a < b:
+            errors.append("table_paged: paged goodput below wave goodput")
+        if pp.get("tokens") != pw.get("tokens"):
+            errors.append("table_paged: token counts diverged between paths")
 
-    c = {(r["path"], r["class"]): r for r in chunked}
-    if float(c[("chunked", "trading")]["p99_ms"]) \
-            >= float(c[("stall", "trading")]["p99_ms"]):
+    c = {(r.get("path"), r.get("class")): r for r in chunked}
+    need = [("chunked", "trading"), ("stall", "trading"),
+            ("chunked", "all"), ("stall", "all")]
+    if any(k not in c for k in need):
+        errors.append("table_chunked: missing path/class rows")
+        return
+    a = num("table_chunked", c[("chunked", "trading")], "p99_ms")
+    b = num("table_chunked", c[("stall", "trading")], "p99_ms")
+    if None not in (a, b) and a >= b:
         errors.append("table_chunked: chunked trading p99 not below stall's")
-    if float(c[("chunked", "all")]["goodput"]) \
-            < float(c[("stall", "all")]["goodput"]):
+    a = num("table_chunked", c[("chunked", "all")], "goodput")
+    b = num("table_chunked", c[("stall", "all")], "goodput")
+    if None not in (a, b) and a < b:
         errors.append("table_chunked: chunked goodput below stall goodput")
-    if c[("chunked", "all")]["tokens"] != c[("stall", "all")]["tokens"]:
+    if c[("chunked", "all")].get("tokens") != c[("stall", "all")].get("tokens"):
         errors.append("table_chunked: token counts diverged between paths")
 
 
-def main() -> int:
+def check_hybrid_drift(fresh, base, tol_pct: float, errors):
+    """The hybrid paged table: windowed/dense step+KV costs must not
+    rise, fleet goodput must not drop, p99 must not rise."""
+    key = lambda r: (r.get("kind"), r.get("name"), r.get("context"))
+    fresh_by, base_by = ({key(r): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{HYBRID_TABLE}: row set changed; commit the "
+                      "regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        cols = (("attn_us", +1), ("step_us", +1), ("kv_kib", +1)) \
+            if k[0] == "attn" else (("goodput", -1), ("p99_ms", +1))
+        for cname, sign in cols:
+            bv, fv = (col(r, cname, HYBRID_TABLE, errors) for r in (b, f))
+            if None in (bv, fv):
+                continue
+            if sign > 0 and fv > bv * (1 + tol):
+                errors.append(f"{HYBRID_TABLE} {k}: {cname} rose "
+                              f"{bv} -> {fv} (tol {tol_pct}%)")
+            if sign < 0 and fv < bv * (1 - tol):
+                errors.append(f"{HYBRID_TABLE} {k}: {cname} dropped "
+                              f"{bv} -> {fv} (tol {tol_pct}%)")
+
+
+def check_hybrid_orderings(rows, errors):
+    """Windowed pricing must undercut the dense equivalent beyond the
+    window, and the hybrid-engine fleet pool must earn >= the dense-priced
+    pool's goodput.  The window the strictness boundary uses rides in the
+    table's own ``window`` column."""
+    attn = {(r.get("name"), r.get("context")): r
+            for r in rows if r.get("kind") == "attn"}
+    windows = [col(r, "window", HYBRID_TABLE, errors)
+               for (n, _), r in attn.items() if n == "windowed"]
+    if not windows or None in windows:
+        errors.append(f"{HYBRID_TABLE}: no windowed rows with a window")
+        return
+    window = int(windows[0])
+    ctxs = sorted({int(c) for _, c in attn if c}, key=int)
+    for ctx in ctxs:
+        w = attn.get(("windowed", str(ctx)))
+        d = attn.get(("dense", str(ctx)))
+        if w is None or d is None:
+            errors.append(f"{HYBRID_TABLE}: missing windowed/dense row at "
+                          f"ctx={ctx}")
+            continue
+        for cname in ("attn_us", "step_us", "kv_kib"):
+            wv, dv = (col(r, cname, HYBRID_TABLE, errors) for r in (w, d))
+            if None in (wv, dv):
+                continue
+            if wv > dv:
+                errors.append(f"{HYBRID_TABLE} ctx={ctx}: windowed "
+                              f"{cname} {wv} above dense {dv}")
+            if ctx > window and wv >= dv:
+                errors.append(f"{HYBRID_TABLE} ctx={ctx}: windowed "
+                              f"{cname} {wv} not strictly below dense "
+                              f"{dv} beyond the window")
+    fleet = {r.get("name"): r for r in rows if r.get("kind") == "fleet"}
+    h, d = fleet.get("hybrid-pool"), fleet.get("dense-pool")
+    if h is None or d is None:
+        errors.append(f"{HYBRID_TABLE}: missing fleet pool rows")
+        return
+    hv, dv = (col(r, "goodput", HYBRID_TABLE, errors) for r in (h, d))
+    if None not in (hv, dv) and hv < dv:
+        errors.append(f"{HYBRID_TABLE}: hybrid-pool goodput {hv} below "
+                      f"dense-pool {dv}")
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
                     help="directory holding the freshly produced CSVs")
@@ -158,7 +282,7 @@ def main() -> int:
                          "git show HEAD:results/")
     ap.add_argument("--tol-pct", type=float, default=5.0,
                     help="allowed relative worsening before failing (%%)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     errors: list[str] = []
     fresh = {}
@@ -173,12 +297,17 @@ def main() -> int:
                                                args.baseline_dir),
                      args.tol_pct, errors)
     check_attn_orderings(attn_fresh, errors)
+    hybrid_fresh = load_fresh(args.results, HYBRID_TABLE)
+    check_hybrid_drift(hybrid_fresh, load_baseline(HYBRID_TABLE,
+                                                   args.baseline_dir),
+                       args.tol_pct, errors)
+    check_hybrid_orderings(hybrid_fresh, errors)
 
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
-    print(f"regression gate: {len(TABLES) + 1} tables OK "
+    print(f"regression gate: {len(TABLES) + 2} tables OK "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

@@ -76,6 +76,17 @@ def main() -> None:
                  f":goodput={tpa_flow['fused'][0]:.0f}"
                  f"_vs_{tpa_flow['gather'][0]:.0f}"))
 
+    # --- Hybrid sliding-window paged serving ------------------------------
+    import table_hybrid
+    th_rows, th_good = table_hybrid.main(verbose=False)
+    th_by = {(r[0], r[1], int(r[2])): r for r in th_rows if r[0] == "attn"}
+    w16k = th_by[("attn", "windowed", 16384)]
+    d16k = th_by[("attn", "dense", 16384)]
+    rows.append(("table_hybrid", float(w16k[5]),
+                 f"step={w16k[5]}us_vs_dense{d16k[5]}us"
+                 f":goodput={th_good['hybrid-pool']:.1f}"
+                 f"_vs_{th_good['dense-pool']:.1f}"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

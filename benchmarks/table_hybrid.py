@@ -1,0 +1,162 @@
+"""Sliding-window paged serving: windowed vs dense KV traffic/step time,
+and fleet goodput with gemma3-class engines in the pool.
+
+Two claims, one table (``results/table_hybrid.csv``):
+
+1. **Micro (kind=attn).**  At the gemma3-4b deployment point (5:1
+   local:global, 1024-token window), the paged path's modeled per-step
+   attention time, full decode-step time (``LatencyProfile.step_s`` — what
+   admission projections and the router consume), and per-step KV HBM
+   bytes, against the *dense-uniform equivalent* of the same stack (the
+   window stripped — how the clock priced every stack before the paged
+   path learned windows).  Below the window the two agree (the mask is
+   inert); beyond it the windowed stack is strictly cheaper, because the
+   sliding-window groups' out-of-window pages were freed mid-flight and
+   the fused kernel reads only ``min(context, window)`` per local layer.
+
+2. **Fleet (kind=fleet).**  The win flows through admission into goodput:
+   the same seeded decode-heavy long-context stream through two FPX fleet
+   pools (a slow high-quality qwen2.5-14b anchor plus a gemma3-class fast
+   point) differing only in whether the gemma3-class engine gets
+   window-aware paging — windowed (the hybrid paged path as shipped) vs
+   its dense equivalent (every local layer paying full-context KV
+   traffic, the only way to serve the stack before per-layer-group
+   windows).  The windowed engine's cheaper steps admit more work within
+   deadline, so the hybrid pool must earn at least the dense pool's
+   goodput at identical traffic.
+
+Run:  PYTHONPATH=src python benchmarks/table_hybrid.py
+Writes results/table_hybrid.csv (gated by check_regression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import latency as lat_mod
+from repro.serving.continuous import LatencyProfile
+from repro.serving.fleet import FleetRouter, _synthetic_eps, pool_candidates
+from repro.serving.metrics import summarize
+from repro.serving.traffic import SimRequest
+
+from common import write_table, RESULTS
+
+LAT_MODEL = "gemma3-4b"           # window 1024, 5 local : 1 global
+COMPANION = "qwen2.5-14b"         # the slow, high-quality anchor engine
+AVG_BITS = 8.0
+CONTEXTS = (256, 1024, 4096, 16384)
+LANES = 4
+
+PROMPT = 8192                     # far past the window: windows pay most
+MAX_NEW = 64
+N_REQS = 48
+SEED = 23
+QUALITY = {COMPANION: 0.94, LAT_MODEL: 0.80}
+
+
+def dense_equiv(cfg):
+    """The same stack with its windows stripped: every layer priced (and
+    paged) as full attention — the pre-hybrid clock."""
+    return dataclasses.replace(cfg, sliding_window=None,
+                               local_global_ratio=0,
+                               name=cfg.name + "-dense-equiv")
+
+
+def microbench(cfg):
+    """kind=attn rows: windowed vs dense-equivalent modeled costs."""
+    dcfg = dense_equiv(cfg)
+    profiles = {"windowed": LatencyProfile(cfg, AVG_BITS),
+                "dense": LatencyProfile(dcfg, AVG_BITS)}
+    cfgs = {"windowed": cfg, "dense": dcfg}
+    rows = []
+    for name in ("windowed", "dense"):
+        for ctx in CONTEXTS:
+            attn_s = lat_mod.paged_attn_step_s(cfgs[name], n_lanes=LANES,
+                                               context=ctx)
+            step_s = profiles[name].step_s(LANES, ctx)
+            kv = lat_mod.paged_attn_hbm_bytes(cfgs[name], n_lanes=LANES,
+                                              context=ctx)
+            rows.append(["attn", name, ctx,
+                         cfg.sliding_window if name == "windowed" else "",
+                         f"{attn_s * 1e6:.2f}", f"{step_s * 1e6:.2f}",
+                         f"{kv / 1024:.0f}", "", "", ""])
+    return rows
+
+
+def fleet_goodput(cfg):
+    """kind=fleet rows: identical traffic through a pool whose
+    gemma3-class engine is priced windowed vs dense."""
+    qw = get_config(COMPANION)
+    out_rows, goodputs = [], {}
+    for label, g3cfg in (("hybrid-pool", cfg),
+                         ("dense-pool", dense_equiv(cfg))):
+        cands = pool_candidates(
+            [(COMPANION, qw, _synthetic_eps(qw), 0.4),
+             (LAT_MODEL, g3cfg, _synthetic_eps(g3cfg), 0.4)],
+            prompt_len=PROMPT, gen_tokens=MAX_NEW)
+        router = FleetRouter(cands,
+                             quality=lambda c: QUALITY[c.model_name],
+                             slots=LANES, policy="drop")
+        # deadline scale: the windowed gemma3 service time — identical
+        # across pools so the streams are comparable request-for-request
+        svc = LatencyProfile(cfg, AVG_BITS).service_s(PROMPT, MAX_NEW)
+        rng = np.random.default_rng(SEED)
+        t, arrivals = 0.0, []
+        for i in range(N_REQS):
+            t += rng.exponential(svc / (0.55 * 2 * LANES))
+            arrivals.append(SimRequest(
+                rid=i, cls_name="chat", t_arrive=t, prompt_len=PROMPT,
+                max_new=MAX_NEW,
+                deadline_s=svc * float(rng.uniform(1.4, 2.6))))
+        retired = router.run(arrivals)
+        rep = summarize(retired, horizon_s=max(r.t_finish or t
+                                               for r in retired))
+        toks = sum(r.tokens_done for r in retired if not r.dropped)
+        out_rows.append(["fleet", label, "", "", "", "", "",
+                         f"{rep.goodput:.1f}", f"{rep.p99_s * 1e3:.1f}",
+                         toks])
+        goodputs[label] = rep.goodput
+    return out_rows, goodputs
+
+
+def main(verbose: bool = True):
+    cfg = get_config(LAT_MODEL)
+    rows = microbench(cfg)
+
+    # acceptance: windowed never above dense; strictly below past the window
+    by = {(r[1], r[2]): r for r in rows}
+    for ctx in CONTEXTS:
+        w, d = by[("windowed", ctx)], by[("dense", ctx)]
+        for i, colname in ((4, "attn_us"), (5, "step_us"), (6, "kv_kib")):
+            assert float(w[i]) <= float(d[i]), (colname, ctx)
+            if ctx > cfg.sliding_window:
+                assert float(w[i]) < float(d[i]), \
+                    f"windowed {colname} not strictly below dense at {ctx}"
+
+    fleet_rows, goodputs = fleet_goodput(cfg)
+    assert goodputs["hybrid-pool"] >= goodputs["dense-pool"], goodputs
+    rows += fleet_rows
+
+    if verbose:
+        for r in rows:
+            if r[0] == "attn":
+                print(f"{r[1]:9s} ctx={r[2]:6d} attn={r[4]:>10s}us "
+                      f"step={r[5]:>10s}us kv={r[6]:>8s}KiB")
+            else:
+                print(f"{r[1]:11s} goodput={r[7]} p99={r[8]}ms "
+                      f"tokens={r[9]}")
+    write_table(os.path.join(RESULTS, "table_hybrid.csv"),
+                ["kind", "name", "context", "window", "attn_us", "step_us",
+                 "kv_kib", "goodput", "p99_ms", "tokens"],
+                rows)
+    return rows, goodputs
+
+
+if __name__ == "__main__":
+    main()

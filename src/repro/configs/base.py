@@ -134,7 +134,16 @@ class ModelConfig:
         if self.local_global_ratio:
             changes["local_global_ratio"] = 1  # 1 local : 1 global in 2 layers
         if self.sliding_window:
-            changes["sliding_window"] = 8
+            # never *grow* the window past the original (a config could
+            # legitimately carry a tiny window), and keep it >= 1: the
+            # paged serving path sizes window-group page demand as
+            # ceil(window/page_size) + 1 for *any* page size — no
+            # divisibility requirement — but a zero/negative window would
+            # mask away a query's own position and break the live-page
+            # bound.  The smoke window deliberately stays un-aligned to
+            # typical page sizes so reduced configs exercise the
+            # window-spans-a-page-boundary paths.
+            changes["sliding_window"] = max(1, min(self.sliding_window, 8))
         if self.n_kv_heads > min(self.n_heads, 4):
             changes["n_kv_heads"] = changes["n_heads"]
         return dataclasses.replace(self, **changes)

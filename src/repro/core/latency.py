@@ -110,6 +110,34 @@ def attn_free_xlstm(cfg: ModelConfig, d: int, di: int):
             (di, 2 * cfg.n_heads, 1.0), (di, d, 1.0)]
 
 
+def attn_layer_groups(cfg: ModelConfig) -> list:
+    """``(n_layers, window)`` attention layer groups of one stack.
+
+    The single definition of "which layers attend over how much context"
+    shared by :func:`step_latency` and the paged-attention cost models
+    below — a windowed (local) group's effective context is
+    ``min(context, window)``, a global group's is ``context``.  This is
+    the per-layer-group pricing that makes sliding-window stacks
+    (starcoder2-class uniform windows, gemma3-class local:global hybrids)
+    project cheaper decode steps, which admission projections, the
+    analytic batcher, and the fleet router all inherit.
+
+    Attention-free stacks (ssm) have no groups.  Hybrid (hymba-class)
+    stacks keep the historical all-windowed pricing: their three global
+    layers are a fixed small minority and the hybrid arch is not yet on
+    the paged path (see ``transformer.paged_decode_step``)."""
+    if cfg.arch_type == "ssm":
+        return []
+    W = cfg.sliding_window
+    if not W:
+        return [(cfg.n_layers, None)]
+    if cfg.local_global_ratio:
+        sb = cfg.local_global_ratio + 1
+        n_global = cfg.n_layers // sb
+        return [(cfg.n_layers - n_global, W), (n_global, None)]
+    return [(cfg.n_layers, W)]
+
+
 def step_latency(cfg: ModelConfig, *, n_tokens: int, context: int = 0,
                  w_bits: float = 16, a_bits: Optional[int] = None,
                  hw: Hardware = V5E, dequant_to_16: bool = False) -> float:
@@ -137,22 +165,12 @@ def step_latency(cfg: ModelConfig, *, n_tokens: int, context: int = 0,
             a_bits=a_bits, hw=hw, dequant_to_16=dequant_to_16)
     # attention over the KV cache (always 16-bit mechanics, per the paper)
     if cfg.arch_type != "ssm" and context:
-        kv_bytes = _kv_cache_bytes(cfg, context)
-        attn_flops = _attn_flops(cfg, n_tokens, context)
-        window = cfg.sliding_window
-        n_local = 0
-        if window and cfg.local_global_ratio:
-            sb = cfg.local_global_ratio + 1
-            n_local = cfg.n_layers - cfg.n_layers // sb
-        elif window:
-            n_local = cfg.n_layers
-        n_global = cfg.n_layers - n_local
-        for n_l, c_eff in ((n_local, min(context, window or context)),
-                           (n_global, context)):
+        for n_l, window in attn_layer_groups(cfg):
             if not n_l:
                 continue
-            kb = kv_bytes * (c_eff / context)
-            fl = attn_flops * (c_eff / context)
+            c_eff = min(context, window) if window else context
+            kb = _kv_cache_bytes(cfg, c_eff)
+            fl = _attn_flops(cfg, n_tokens, c_eff)
             total += n_l * max(fl / (hw.peak_bf16 * hw.n_chips),
                                kb * n_tokens / (hw.hbm_bw * hw.n_chips))
     # embedding + head
@@ -178,14 +196,22 @@ def _attn_flops(cfg: ModelConfig, n_tokens: int, context: int) -> float:
     return 4.0 * n_tokens * context * cfg.n_heads * cfg.head_dim
 
 
-def _paged_eff_traffic(impl: str, context: int,
-                       padded_ctx: Optional[int]) -> tuple:
-    """(effective context, traffic multiplier) of a paged-attention impl —
-    the single definition both the step-time and the HBM-bytes models
-    dispatch on, so the two columns of ``table_paged_attn`` cannot
-    desynchronize."""
+def _paged_eff_traffic(impl: str, context: int, padded_ctx: Optional[int],
+                       window: Optional[int] = None) -> tuple:
+    """(effective context, traffic multiplier) of a paged-attention impl
+    for one attention layer group — the single definition both the
+    step-time and the HBM-bytes models dispatch on, so the two columns of
+    ``table_paged_attn`` cannot desynchronize.
+
+    ``window``: the group's sliding window, if any.  The fused kernel
+    reads only the retained in-window pages of a local layer
+    (``serving.kv_cache`` frees out-of-window pages mid-flight), so its
+    effective context is ``min(context, window)``.  The gather path
+    materializes the whole *padded block-table extent* regardless — the
+    table keeps full logical width even for window groups (freed entries
+    point at the dummy page) — so a window buys it nothing."""
     if impl == "fused":
-        return context, 1.0
+        return (min(context, window) if window else context), 1.0
     if impl == "gather":
         return max(context, padded_ctx or context), 3.0
     raise ValueError(f"unknown paged-attention impl {impl!r}")
@@ -208,16 +234,24 @@ def paged_attn_step_s(cfg: ModelConfig, *, n_lanes: int, context: int,
     buffer write) and then re-read by the dense masked SDPA: ~3x the HBM
     traffic, scaled by the padding rather than the context.  Its score
     flops also run over every padded slot.
+
+    Both implementations price per attention layer *group*
+    (:func:`attn_layer_groups`): sliding-window layers cost the fused
+    kernel only ``min(context, window)`` — the lever that makes
+    gemma3-class and starcoder2-class stacks cheap on the paged path.
     """
     if cfg.arch_type == "ssm" or context <= 0:
         return 0.0
-    eff, _ = _paged_eff_traffic(impl, context, padded_ctx)
-    fl = _attn_flops(cfg, n_lanes, eff)
-    kb = paged_attn_hbm_bytes(cfg, n_lanes=n_lanes, context=context,
-                              impl=impl, padded_ctx=padded_ctx) \
-        / cfg.n_layers
-    return cfg.n_layers * max(fl / (hw.peak_bf16 * hw.n_chips),
-                              kb / (hw.hbm_bw * hw.n_chips))
+    total = 0.0
+    for n_l, window in attn_layer_groups(cfg):
+        if not n_l:
+            continue
+        eff, traffic = _paged_eff_traffic(impl, context, padded_ctx, window)
+        fl = _attn_flops(cfg, n_lanes, eff)
+        kb = _kv_cache_bytes(cfg, eff) * n_lanes * traffic
+        total += n_l * max(fl / (hw.peak_bf16 * hw.n_chips),
+                           kb / (hw.hbm_bw * hw.n_chips))
+    return total
 
 
 def paged_attn_hbm_bytes(cfg: ModelConfig, *, n_lanes: int, context: int,
@@ -225,11 +259,16 @@ def paged_attn_hbm_bytes(cfg: ModelConfig, *, n_lanes: int, context: int,
                          padded_ctx: Optional[int] = None) -> float:
     """Modeled per-decode-step K/V HBM bytes of the paged attention path,
     summed over layers — the quantity the fused kernel exists to shrink
-    (see :func:`paged_attn_step_s` for the two implementations)."""
+    (see :func:`paged_attn_step_s` for the two implementations; windowed
+    layer groups move only their retained ``min(context, window)`` tokens
+    on the fused path)."""
     if cfg.arch_type == "ssm" or context <= 0:
         return 0.0
-    eff, traffic = _paged_eff_traffic(impl, context, padded_ctx)
-    return cfg.n_layers * _kv_cache_bytes(cfg, eff) * n_lanes * traffic
+    total = 0.0
+    for n_l, window in attn_layer_groups(cfg):
+        eff, traffic = _paged_eff_traffic(impl, context, padded_ctx, window)
+        total += n_l * _kv_cache_bytes(cfg, eff) * n_lanes * traffic
+    return total
 
 
 def chunk_attn_s(cfg: ModelConfig, *, chunk: int, context: int,
@@ -240,13 +279,20 @@ def chunk_attn_s(cfg: ModelConfig, *, chunk: int, context: int,
     pays the chunk x context score/combine flops.  Zero for the first
     chunk — the length-aware term that makes chunked-prefill pricing grow
     with how much of the prompt is already in the pages, exactly like the
-    kernel's work does."""
+    kernel's work does.  Sliding-window layer groups stream only their
+    retained ``min(context, window)`` prior tokens."""
     if cfg.arch_type == "ssm" or context <= 0:
         return 0.0
-    fl = _attn_flops(cfg, chunk, context)
-    kb = _kv_cache_bytes(cfg, context)
-    return cfg.n_layers * max(fl / (hw.peak_bf16 * hw.n_chips),
-                              kb / (hw.hbm_bw * hw.n_chips))
+    total = 0.0
+    for n_l, window in attn_layer_groups(cfg):
+        if not n_l:
+            continue
+        c_eff = min(context, window) if window else context
+        fl = _attn_flops(cfg, chunk, c_eff)
+        kb = _kv_cache_bytes(cfg, c_eff)
+        total += n_l * max(fl / (hw.peak_bf16 * hw.n_chips),
+                           kb / (hw.hbm_bw * hw.n_chips))
+    return total
 
 
 def decision_latency(cfg: ModelConfig, *, prompt_len: int = 512,

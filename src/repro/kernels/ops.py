@@ -8,6 +8,8 @@ the property tests sweep shapes and dtypes over this equivalence.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -96,8 +98,8 @@ def gather_pages(pool: jax.Array, block_tables: jax.Array, *,
 
 def paged_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
                  block_tables: jax.Array, pos: jax.Array, *, scale: float,
-                 use_pallas: bool = False, interpret: bool = True
-                 ) -> jax.Array:
+                 use_pallas: bool = False, interpret: bool = True,
+                 window: Optional[int] = None) -> jax.Array:
     """Attention of per-lane queries over their block-table paged context.
 
     q: (B, Sq, H, D) post-RoPE queries at global positions ``pos[b] ..
@@ -107,6 +109,12 @@ def paged_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
     decode step, ``Sq > 1`` a prefill chunk (causal within the chunk, full
     attend over earlier pages) — the mask is ``slot <= pos[b] + row``
     either way.
+
+    ``window``: static sliding-window size of this layer group (None =
+    full attention).  Adds the validity term ``slot > pos[b] + row -
+    window`` on both paths, so a local layer attends over only its
+    retained in-window slots — freed out-of-window table entries point at
+    the dummy page and fall entirely under this mask.
 
     The Pallas path runs the fused flash kernel
     (:func:`repro.kernels.paged_attention.paged_flash_attend`): pages are
@@ -128,7 +136,8 @@ def paged_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
     if use_pallas:
         return _pa.paged_flash_attend(q, kpool, vpool, block_tables, pos,
                                       scale=float(scale),
-                                      interpret=interpret)
+                                      interpret=interpret,
+                                      window=window)
     # one gather for both pools: a single take over the (2, n_pages, ...)
     # stacked view instead of two per-layer gathers.  The stack is a copy
     # XLA may materialize; measured on the CPU backend it loses ~20% at
@@ -139,14 +148,18 @@ def paged_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
     cv = kv[1].reshape(B, P * ps, Hkv, D)
     slot = jnp.arange(P * ps)
     qpos = pos[:, None] + jnp.arange(Sq)[None, :]            # (B, Sq)
-    mask = (slot[None, None, :] <= qpos[:, :, None])[:, None]  # (B,1,Sq,S)
+    mask = slot[None, None, :] <= qpos[:, :, None]           # (B, Sq, S)
+    if window is not None:
+        mask &= slot[None, None, :] > qpos[:, :, None] - window
+    mask = mask[:, None]                                     # (B,1,Sq,S)
     return _sdpa(q, ck, cv, jnp.broadcast_to(mask, (B, 1, Sq, P * ps)),
                  scale)
 
 
 def scatter_chunk(pool: jax.Array, block_tables: jax.Array, pos: jax.Array,
                   chunk: jax.Array, *, use_pallas: bool = False,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: bool = True,
+                  skip_page: Optional[int] = None) -> jax.Array:
     """Write a prefill chunk's K (or V) into block-table pages.
 
     pool: (n_pages, page_size, n_kv_heads, head_dim); block_tables: (B, P)
@@ -156,6 +169,20 @@ def scatter_chunk(pool: jax.Array, block_tables: jax.Array, pos: jax.Array,
     ``(pos[b]+i) % page_size``).  Returns the updated pool.  Lanes must own
     disjoint pages (they do, by ``serving.kv_cache`` allocation), so the
     scatter is collision-free.
+
+    ``skip_page``: table entries equal to this page id are *not* written —
+    the write-side window-validity mask.  Sliding-window layer groups park
+    retired (out-of-window) table entries on the reserved dummy page
+    (``serving.kv_cache.DUMMY_PAGE``); several lanes' retired entries alias
+    the same physical page, so unsuppressed writes there would collide
+    order-dependently under the Pallas kernel's in-place pool aliasing.
+    Note every *in-chunk* position must still be written even when it is
+    already out of the window of the chunk's final query: each chunk row
+    is attended by at least its own (and its successors') in-chunk
+    queries, so only whole retired pages — never row sub-ranges — are
+    skippable.  The serving engine keeps all of a chunk's own pages
+    retained while the chunk is absorbed, so with it this mask only ever
+    fires for callers scattering into stale tables.
 
     The Pallas path additionally requires every ``pos[b]`` to be
     page-aligned — the chunk then decomposes into whole-page row runs and
@@ -168,7 +195,14 @@ def scatter_chunk(pool: jax.Array, block_tables: jax.Array, pos: jax.Array,
     lpos = pos[:, None] + jnp.arange(C)[None, :]            # (B, C) logical
     if not use_pallas:
         pid = jnp.take_along_axis(block_tables, lpos // ps, axis=1)
-        return pool.at[pid, lpos % ps].set(chunk.astype(pool.dtype))
+        vals = chunk.astype(pool.dtype)
+        if skip_page is not None:
+            # keep the skipped rows at their current pool values (a read-
+            # modify-write, so the jnp path stays deterministic and
+            # bit-identical to the Pallas path's suppression)
+            keep = (pid == skip_page)[..., None, None]
+            vals = jnp.where(keep, pool[pid, lpos % ps], vals)
+        return pool.at[pid, lpos % ps].set(vals)
     if not isinstance(pos, jax.core.Tracer):
         # concrete call (tests, eager use): enforce the documented
         # precondition — an unaligned start would floor to the page below
@@ -183,6 +217,11 @@ def scatter_chunk(pool: jax.Array, block_tables: jax.Array, pos: jax.Array,
         block_tables, first[:, None] + jnp.arange(npg)[None, :], axis=1)
     n_valid = jnp.clip(C - jnp.arange(npg)[None, :] * ps, 0, ps) \
         .astype(jnp.int32) * jnp.ones((B, 1), jnp.int32)
+    if skip_page is not None:
+        # retired destinations (window-freed table entries aliased to the
+        # dummy page): zero their valid-row count so the kernel writes the
+        # existing page back untouched
+        n_valid = jnp.where(page_ids == skip_page, 0, n_valid)
     ck = chunk.reshape(B, C, H * D)
     if pad:
         ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0)))

@@ -20,7 +20,11 @@ pages stream in logical order and an online-softmax (flash-style ``m``/
 page into the running attention state; the final cell normalizes and
 writes the lane's output.  Per-lane validity is masked from the prefetched
 ``pos``: slot ``p*page_size + r`` participates iff it is ``<= pos[b] + i``
-for query row ``i`` — which also makes idle lanes (whole table pointing at
+for query row ``i`` — and, for sliding-window layer groups (``window=W``),
+additionally ``> pos[b] + i - W``, so local layers attend over only the
+retained in-window pages (out-of-window pages are freed back to the pool
+by ``serving.kv_cache`` and their table entries point at the dummy page).
+The causal-only mask also makes idle lanes (whole table pointing at
 the reserved dummy page, ``pos = 0``) safe: they attend to slot 0 of the
 dummy page and produce finite garbage the engine discards, exactly like
 the gather path.
@@ -58,7 +62,8 @@ _MASK_VAL = -1e30
 
 
 def _attend_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, scale: float):
+                   m_ref, l_ref, acc_ref, *, scale: float,
+                   window: "int | None"):
     """Grid (B, P): fold page ``bt[b, p]`` into lane ``b``'s running
     attention state; normalize and emit on the lane's last page.
 
@@ -66,7 +71,17 @@ def _attend_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     prefetch) — the body only sees the (1, ps, Hkv, D) page tiles.  The
     ``m``/``l``/``acc`` scratch persists across the inner grid dimension
     (pages run sequentially per lane), which is what makes the online
-    softmax exact."""
+    softmax exact.
+
+    ``window``: static sliding-window size of this layer group, or None
+    for full attention.  Window validity is masked from the prefetched
+    per-lane ``pos`` exactly like causality: slot ``p*ps + r`` is visible
+    to query row ``i`` iff ``pos[b] + i - window < slot <= pos[b] + i``.
+    Pages whose whole extent is out of window were already freed back to
+    the pool by ``serving.kv_cache`` (their table entries point at the
+    reserved dummy page) — the mask is what makes attending "over only
+    the retained pages" sound: a dummy or stale page under the window
+    horizon contributes nothing."""
     del bt_ref
     b = pl.program_id(0)
     p = pl.program_id(1)
@@ -95,6 +110,8 @@ def _attend_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     slot = p * ps + jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 1)
     qrow = jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 0) // G
     ok = slot <= pos_ref[b] + qrow
+    if window is not None:
+        ok &= slot > pos_ref[b] + qrow - window
     s = jnp.where(ok[None], s, _MASK_VAL)
 
     m_prev = m_ref[...]
@@ -118,19 +135,22 @@ def _attend_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
             .reshape(Sq, H, D).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "window"))
 def paged_flash_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
                        block_tables: jax.Array, pos: jax.Array, *,
-                       scale: float, interpret: bool = True) -> jax.Array:
+                       scale: float, interpret: bool = True,
+                       window: "int | None" = None) -> jax.Array:
     """q: (B, Sq, H, D) post-RoPE queries at global positions
     ``pos[b] .. pos[b] + Sq - 1``; kpool/vpool: (n_pages, page_size, Hkv,
     D) shared pools *already holding* the step's K/V writes;
     block_tables: (B, P) int32 page ids; pos: (B,) int32.
 
     Returns (B, Sq, H, D): softmax(q k^T * scale) v over each lane's valid
-    slots (slot <= pos[b] + row), never materializing the gathered
-    context.  Page ids must be < n_pages (idle lanes point at the reserved
-    dummy page, never out of range)."""
+    slots (``pos[b] + row - window < slot <= pos[b] + row``; ``window``
+    None = full causal), never materializing the gathered context.  Page
+    ids must be < n_pages (idle lanes — and the freed out-of-window table
+    entries of sliding-window layer groups — point at the reserved dummy
+    page, never out of range)."""
     B, Sq, H, D = q.shape
     n_pages, ps, Hkv, _ = kpool.shape
     _, P = block_tables.shape
@@ -155,7 +175,7 @@ def paged_flash_attend(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_attend_kernel, scale=scale),
+        functools.partial(_attend_kernel, scale=scale, window=window),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Sq, H, D), q.dtype),
         interpret=interpret,

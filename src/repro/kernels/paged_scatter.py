@@ -62,7 +62,12 @@ def paged_scatter(pool: jax.Array, chunk: jax.Array, page_ids: jax.Array,
     Returns the pool with the chunk written.  Destination ids must be
     distinct across grid cells (lanes own disjoint pages; a chunk's pages
     are distinct) — the pool is aliased in-place, so colliding writes would
-    be order-dependent."""
+    be order-dependent.  The one sanctioned exception: cells with
+    ``n_valid == 0`` write their page back untouched, so suppressed
+    destinations (``ops.scatter_chunk(skip_page=...)`` — window-retired
+    table entries parked on the serving layer's dummy page) may alias the
+    same physical page across any number of cells and stay
+    deterministic."""
     n_pages, ps, E = pool.shape
     B, npg = page_ids.shape
 

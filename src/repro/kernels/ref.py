@@ -42,13 +42,14 @@ def gather_pages_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
 
 def paged_attend_ref(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
                      block_tables: jax.Array, pos: jax.Array,
-                     scale: float) -> jax.Array:
+                     scale: float, window=None) -> jax.Array:
     """Paged-attention oracle: gather each lane's context through its block
     table, then plain masked softmax attention in fp64-free, loop-free jnp.
 
     q: (B, Sq, H, D) queries at global positions pos[b] + row; pools:
     (n_pages, ps, Hkv, D); block_tables: (B, P); pos: (B,).  Query row i of
-    lane b attends slots <= pos[b] + i (GQA: query head h reads kv head
+    lane b attends slots <= pos[b] + i — and, with a sliding ``window``,
+    only slots > pos[b] + i - window (GQA: query head h reads kv head
     h // (H // Hkv)).  Deliberately the *direct* computation — no online
     softmax, no shared code with the kernel under test."""
     B, Sq, H, D = q.shape
@@ -63,7 +64,10 @@ def paged_attend_ref(q: jax.Array, kpool: jax.Array, vpool: jax.Array,
     cv = jnp.repeat(cv, rep, axis=2).astype(jnp.float32)
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), ck) * scale
     qpos = pos[:, None] + jnp.arange(Sq)[None, :]
-    mask = jnp.arange(P * ps)[None, None, :] <= qpos[:, :, None]  # (B,Sq,S)
+    slot = jnp.arange(P * ps)[None, None, :]
+    mask = slot <= qpos[:, :, None]                           # (B,Sq,S)
+    if window is not None:
+        mask &= slot > qpos[:, :, None] - window
     logits = jnp.where(mask[:, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, cv)

@@ -131,6 +131,7 @@ def causal_mask(sq: int, skv: int, window: Optional[int] = None,
 def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
                          cache: Dict[str, jax.Array], *, scale: float,
                          rope_theta: float, ctx: ExecContext,
+                         window: Optional[int] = None,
                          ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One paged decode step for one layer.
 
@@ -140,7 +141,9 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     Writes lane b's K/V at logical position ``pos[b]`` (page
     ``block_tables[b, pos[b] // page_size]``, slot ``pos[b] % page_size``),
     then attends over the lane's paged context with a per-lane validity
-    mask ``slot <= pos[b]`` via :func:`repro.kernels.ops.paged_attend` —
+    mask ``slot <= pos[b]`` (plus ``slot > pos[b] - window`` for
+    sliding-window layer groups, whose out-of-window pages the cache has
+    freed) via :func:`repro.kernels.ops.paged_attend` —
     the fused flash kernel reads K/V pages straight from the pool when
     ``ctx.use_pallas``; the jnp path gathers and runs dense masked SDPA
     (the historical semantics)."""
@@ -163,7 +166,7 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     vpool = vpool.at[pid, within].set(v[:, 0].astype(vpool.dtype))
 
     out = kernel_ops.paged_attend(q, kpool, vpool, bt, pos, scale=scale,
-                                  use_pallas=ctx.use_pallas)
+                                  use_pallas=ctx.use_pallas, window=window)
     return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
                  "pos": pos + 1}
 
@@ -171,6 +174,7 @@ def _paged_decode_attend(q: jax.Array, k: jax.Array, v: jax.Array,
 def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
                           cache: Dict[str, jax.Array], *, scale: float,
                           rope_theta: float, ctx: ExecContext,
+                          window: Optional[int] = None,
                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One chunked-prefill step for one layer: absorb a prompt chunk into
     the paged cache.
@@ -197,13 +201,20 @@ def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
 
+    # skip_page: window groups park retired table entries on the dummy
+    # page (id 0); suppressing writes there keeps the in-place Pallas
+    # scatter deterministic.  The serving engine keeps every page of the
+    # chunk's own span live, so this only fires for stale tables.
+    skip = None if window is None else 0
     kpool = kernel_ops.scatter_chunk(kpool, bt, pos, k,
-                                     use_pallas=ctx.use_pallas)
+                                     use_pallas=ctx.use_pallas,
+                                     skip_page=skip)
     vpool = kernel_ops.scatter_chunk(vpool, bt, pos, v,
-                                     use_pallas=ctx.use_pallas)
+                                     use_pallas=ctx.use_pallas,
+                                     skip_page=skip)
 
     out = kernel_ops.paged_attend(q, kpool, vpool, bt, pos, scale=scale,
-                                  use_pallas=ctx.use_pallas)
+                                  use_pallas=ctx.use_pallas, window=window)
     return out, {"kpool": kpool, "vpool": vpool, "block_tables": bt,
                  "pos": pos + C}
 
@@ -268,19 +279,22 @@ def attn_apply(params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
         new_cache = None
     elif "kpool" in cache:
         # paged cache: S == 1 is a decode step, S > 1 a prefill chunk —
-        # both write at per-lane positions through per-lane block tables
-        assert sliding_window is None, \
-            "paged KV cache does not support sliding-window segments"
+        # both write at per-lane positions through per-lane block tables.
+        # ``sliding_window`` marks this layer as part of a windowed group:
+        # the kernels mask validity to the window and the cache frees
+        # out-of-window pages mid-flight.
         if S > 1:
             out, new_cache = _paged_prefill_attend(q, k, v, cache,
                                                    scale=scale,
                                                    rope_theta=rope_theta,
-                                                   ctx=ctx)
+                                                   ctx=ctx,
+                                                   window=sliding_window)
         else:
             out, new_cache = _paged_decode_attend(q, k, v, cache,
                                                   scale=scale,
                                                   rope_theta=rope_theta,
-                                                  ctx=ctx)
+                                                  ctx=ctx,
+                                                  window=sliding_window)
     else:
         # decode: S == 1
         pos = cache["pos"]  # global position of this token (traced scalar)

@@ -97,6 +97,56 @@ def segment_layout(cfg: ModelConfig) -> List[Tuple[str, List[int]]]:
 
 
 # ---------------------------------------------------------------------------
+# Paged layer groups
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedGroup:
+    """One attention layer group of the paged serving path.
+
+    ``layers``: global layer indices in stack order (the order the group's
+    per-layer page pools are stacked in).  ``window``: the group's sliding
+    window, or None for full attention.  Sliding-window groups get their
+    own block tables in :class:`repro.serving.kv_cache.PagedKVCache`, with
+    out-of-window pages freed back to the pool mid-flight."""
+    name: str
+    layers: Tuple[int, ...]
+    window: Optional[int]
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Whether the paged continuous path can serve this stack: every
+    dense/moe attention layout — uniform, uniform-windowed
+    (starcoder2-class), and local:global (gemma3-class).  SSM/hybrid/
+    enc-dec/VLM segments keep contiguous caches (see ROADMAP)."""
+    return cfg.arch_type in ("dense", "moe")
+
+
+def _check_paged_supported(cfg: ModelConfig) -> None:
+    if not paged_supported(cfg):
+        raise NotImplementedError(
+            "paged decode supports dense/moe attention stacks (uniform, "
+            f"sliding-window, local:global), not {cfg.name} "
+            f"(arch_type={cfg.arch_type})")
+
+
+def paged_layer_groups(cfg: ModelConfig) -> List[PagedGroup]:
+    """The layer groups a paged KV cache partitions this stack into —
+    group names match :func:`segment_layout` segment keys, so the paged
+    entry points route each segment through its group's block tables."""
+    _check_paged_supported(cfg)
+    W = cfg.sliding_window
+    layout = dict(segment_layout(cfg))
+    if "layers" in layout:
+        return [PagedGroup("layers", tuple(layout["layers"]), W)]
+    groups = [PagedGroup("local", tuple(layout["local"]), W),
+              PagedGroup("global", tuple(layout["global"]), None)]
+    if layout.get("tail"):
+        groups.append(PagedGroup("tail", tuple(layout["tail"]), W))
+    return groups
+
+
+# ---------------------------------------------------------------------------
 # Init
 # ---------------------------------------------------------------------------
 
@@ -379,14 +429,25 @@ def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
             ctx: ExecContext = modules.DEFAULT_CTX, *,
             unroll: bool = False,
-            cache_len: Optional[int] = None) -> Tuple[jax.Array, Any]:
+            cache_len: Optional[int] = None,
+            raw_kv: bool = False) -> Tuple[jax.Array, Any]:
     """Causal forward that also returns the decode cache.
 
     ``cache_len``: total decode-context budget; full (non-windowed) caches
     are padded to it so subsequent ``decode_step`` calls have free slots.
-    Returns (last-position logits (B, 1, V), cache)."""
+    Returns (last-position logits (B, 1, V), cache).
+
+    ``raw_kv``: return each segment's captured K/V exactly as written —
+    one slot per prompt position, no padding, no sliding-window
+    ring-buffer slicing/rotation — keyed by segment.  This is what the
+    paged serving engine scatters into block-table pages
+    (``serving.kv_cache.write_prefill``): the paged path addresses
+    *logical* positions, so the wave path's ring layout would be wrong
+    for it.  Dense/moe stacks only."""
+    if raw_kv:
+        _check_paged_supported(cfg)
     h, cache = _backbone(params, cfg, batch, ctx, mode="prefill",
-                         unroll=unroll, cache_len=cache_len)
+                         unroll=unroll, cache_len=cache_len, raw_kv=raw_kv)
     logits = unembed(params, cfg, h[:, -1:], ctx)
     return logits, cache
 
@@ -400,6 +461,79 @@ def decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return unembed(params, cfg, h, ctx), new_cache
 
 
+def _paged_stack_dims(cfg: ModelConfig, name: str) -> Tuple[int, ...]:
+    """Leading stack dims of segment ``name``'s per-layer caches — must
+    mirror how ``init_params`` nests the segment's parameter stacks so
+    ``_run_stack`` slices params and caches in lockstep."""
+    if name == "layers":
+        return (cfg.n_layers,)
+    sb = cfg.local_global_ratio + 1
+    G = cfg.n_layers // sb
+    if name == "local":
+        return (G, sb - 1)
+    if name == "global":
+        return (G,)
+    return (cfg.n_layers - G * sb,)                    # tail
+
+
+def _paged_seg_cache(cfg: ModelConfig, cache: Dict[str, Any], B: int,
+                     ) -> Dict[str, Any]:
+    """Map the engine's grouped cache pytree ({"pos": (B,), "groups":
+    {name: {"kpool","vpool","block_tables"}}}) to the per-segment
+    per-layer cache stacks ``_dense_backbone``'s decode mode slices: each
+    layer of a segment sees its own pool slice plus the group-shared
+    block table and per-lane positions."""
+    pos = cache["pos"]
+    out: Dict[str, Any] = {}
+    for g in paged_layer_groups(cfg):
+        gc = cache["groups"][g.name]
+        dims = _paged_stack_dims(cfg, g.name)
+        kp, vp = gc["kpool"], gc["vpool"]
+        bt = gc["block_tables"]
+        out[g.name] = {
+            "kpool": kp.reshape(*dims, *kp.shape[1:]),
+            "vpool": vp.reshape(*dims, *vp.shape[1:]),
+            "block_tables": jnp.broadcast_to(bt, (*dims, *bt.shape)),
+            "pos": jnp.broadcast_to(pos, (*dims, B)),
+        }
+    return out
+
+
+def _paged_new_cache(cfg: ModelConfig, cache: Dict[str, Any], ys,
+                     n_written: int) -> Dict[str, Any]:
+    """Collect the updated pools a paged step returned (per-segment
+    per-layer cache stacks) back into the engine's grouped pytree.  Block
+    tables and positions stay host-managed."""
+    groups = {}
+    for g in paged_layer_groups(cfg):
+        y = ys[g.name]
+        kp, vp = y["kpool"], y["vpool"]
+        # collapse nested stack dims (e.g. local's (G, R)) to flat layers
+        groups[g.name] = {
+            "kpool": kp.reshape(len(g.layers), *kp.shape[-4:]),
+            "vpool": vp.reshape(len(g.layers), *vp.shape[-4:]),
+            "block_tables": cache["groups"][g.name]["block_tables"],
+        }
+    return {"pos": cache["pos"] + n_written, "groups": groups}
+
+
+def _paged_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                cache: Dict[str, jax.Array], ctx: ExecContext, *,
+                unroll: bool) -> Tuple[jax.Array, Any]:
+    """Shared body of :func:`paged_decode_step` / :func:`prefill_chunk`:
+    one pass of the dense/moe backbone in decode mode over the grouped
+    paged cache — each segment (uniform "layers", or gemma3-style
+    local/global/tail) routes through its own group's block tables, with
+    that group's sliding window masked in-kernel."""
+    _check_paged_supported(cfg)
+    tok = batch["token"] if "token" in batch else batch["tokens"]
+    B, n = tok.shape
+    seg_cache = _paged_seg_cache(cfg, cache, B)
+    h, ys = _dense_backbone(params, cfg, batch, ctx, mode="decode",
+                            unroll=unroll, cache=seg_cache)
+    return h, _paged_new_cache(cfg, cache, ys, n)
+
+
 def paged_decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
                       cache: Dict[str, jax.Array],
                       ctx: ExecContext = modules.DEFAULT_CTX, *,
@@ -407,39 +541,26 @@ def paged_decode_step(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     """One batched decode step against a *paged* KV cache.
 
     ``batch["token"]``: (B, 1) — one current token per decode lane.
-    ``cache``: {"kpool","vpool": (L, n_pages, page_size, Hkv, D),
-    "block_tables": (B, P) int32, "pos": (B,) int32}.  Unlike
+    ``cache``: {"pos": (B,) int32, "groups": {name: {"kpool", "vpool":
+    (n_group_layers, n_pages, page_size, Hkv, D), "block_tables": (B, P)
+    int32}}} — one group per attention layer group
+    (:func:`paged_layer_groups`).  Unlike
     :func:`decode_step`, lanes are independent requests: each has its own
-    position and its own page list, which is what lets the paged serving
+    position and its own page lists, which is what lets the paged serving
     engine admit/retire requests between steps with no wave barrier.
     Per-layer attention runs through ``ops.paged_attend`` — with
     ``ctx.use_pallas`` the fused paged flash-attention kernel reads K/V
     pages straight from the pool and never materializes the gathered
-    context.
+    context; sliding-window groups (starcoder2-class uniform windows,
+    gemma3-class local layers) carry their window into the kernels'
+    validity mask and attend over only their retained in-window pages.
 
-    Only the dense uniform-stack architectures (the qwen family) are
-    supported — sliding-window / hybrid / enc-dec segments keep their
-    contiguous caches for now (see ROADMAP).
+    Every dense/moe attention stack is supported; ssm / hybrid / enc-dec
+    / vlm segments keep their contiguous caches (see ROADMAP).
     """
-    if cfg.arch_type != "dense" or cfg.local_global_ratio or cfg.sliding_window:
-        raise NotImplementedError(
-            f"paged decode supports dense uniform stacks only, not "
-            f"{cfg.name} (arch_type={cfg.arch_type})")
-    h = embed(params, cfg, batch["token"], ctx)
-    B = h.shape[0]
-    L = cfg.n_layers
-    bt, pos = cache["block_tables"], cache["pos"]
-    # block tables / positions are shared by every layer; pools are per-layer
-    ext = {"kpool": cache["kpool"], "vpool": cache["vpool"],
-           "block_tables": jnp.broadcast_to(bt, (L, *bt.shape)),
-           "pos": jnp.broadcast_to(pos, (L, B))}
-    body = _attn_seg_body(cfg, None, "decode")
-    h, ys = _run_stack(body, h, params["blocks"]["layers"], L, ctx=ctx,
-                       seg="layers", unroll=unroll, xs_extra=ext,
-                       layer_ids=list(range(L)))
-    logits = unembed(params, cfg, h, ctx)
-    return logits, {"kpool": ys["kpool"], "vpool": ys["vpool"],
-                    "block_tables": bt, "pos": pos + 1}
+    h, new_cache = _paged_step(params, cfg, batch, cache, ctx,
+                               unroll=unroll)
+    return unembed(params, cfg, h, ctx), new_cache
 
 
 def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
@@ -452,7 +573,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     occupying global positions ``cache["pos"][b] .. pos[b] + C - 1``.
     ``cache``: the same pytree as :func:`paged_decode_step`.  Each layer
     attends causally over the lane's already-written pages plus the chunk
-    and scatters the chunk's K/V into its block-table pages, so calling
+    (through its group's block table, window-masked for local groups) and
+    scatters the chunk's K/V into its block-table pages, so calling
     this over a prompt's chunks in order leaves the cache exactly as a
     monolithic prefill + page write would, while letting the serving
     engine run decode steps for other lanes *between* chunks (chunked
@@ -462,25 +584,24 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     ``pos + C``) — the final chunk's logits supply the request's first
     output token, the same contract as :func:`prefill`.
     """
-    if cfg.arch_type != "dense" or cfg.local_global_ratio or cfg.sliding_window:
-        raise NotImplementedError(
-            f"chunked paged prefill supports dense uniform stacks only, not "
-            f"{cfg.name} (arch_type={cfg.arch_type})")
-    h = embed(params, cfg, batch["tokens"], ctx)
-    B = h.shape[0]
-    L = cfg.n_layers
-    bt, pos = cache["block_tables"], cache["pos"]
-    ext = {"kpool": cache["kpool"], "vpool": cache["vpool"],
-           "block_tables": jnp.broadcast_to(bt, (L, *bt.shape)),
-           "pos": jnp.broadcast_to(pos, (L, B))}
-    body = _attn_seg_body(cfg, None, "decode")
-    h, ys = _run_stack(body, h, params["blocks"]["layers"], L, ctx=ctx,
-                       seg="layers", unroll=unroll, xs_extra=ext,
-                       layer_ids=list(range(L)))
-    logits = unembed(params, cfg, h[:, -1:], ctx)
-    C = batch["tokens"].shape[1]
-    return logits, {"kpool": ys["kpool"], "vpool": ys["vpool"],
-                    "block_tables": bt, "pos": pos + C}
+    h, new_cache = _paged_step(params, cfg, batch, cache, ctx,
+                               unroll=unroll)
+    return unembed(params, cfg, h[:, -1:], ctx), new_cache
+
+
+def raw_prefill_group_kv(cfg: ModelConfig, raw_cache: Dict[str, Any],
+                         lane: int = 0) -> Dict[str, Dict[str, jax.Array]]:
+    """Flatten the per-segment raw prefill K/V (``prefill(...,
+    raw_kv=True)``) of one batch lane into per-group (n_group_layers, S,
+    Hkv, D) arrays, in the group's stack order — the shape
+    ``serving.kv_cache.write_prefill`` scatters into pages."""
+    out = {}
+    for g in paged_layer_groups(cfg):
+        y = raw_cache[g.name]                # {"k","v"}: (*stack, B, S, Hkv, D)
+        k = y["k"].reshape(len(g.layers), *y["k"].shape[-4:])
+        v = y["v"].reshape(len(g.layers), *y["v"].shape[-4:])
+        out[g.name] = {"k": k[:, lane], "v": v[:, lane]}
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -488,7 +609,7 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 # ---------------------------------------------------------------------------
 
 def _backbone(params, cfg, batch, ctx, *, mode: str, unroll: bool, cache=None,
-              cache_len: Optional[int] = None):
+              cache_len: Optional[int] = None, raw_kv: bool = False):
     t = cfg.arch_type
     kw = dict(mode=mode, unroll=unroll, cache=cache, cache_len=cache_len)
     if t == "ssm":
@@ -499,7 +620,7 @@ def _backbone(params, cfg, batch, ctx, *, mode: str, unroll: bool, cache=None,
         return _hybrid_backbone(params, cfg, batch, ctx, **kw)
     if t == "audio":
         return _encdec_backbone(params, cfg, batch, ctx, **kw)
-    return _dense_backbone(params, cfg, batch, ctx, **kw)
+    return _dense_backbone(params, cfg, batch, ctx, raw_kv=raw_kv, **kw)
 
 
 def _attn_seg_body(cfg, window, mode, hybrid=False):
@@ -561,9 +682,12 @@ def _finish_prefill_cache(kv, *, window: Optional[int], seq: int,
 
 
 def _dense_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
-        cache_len=None):
+        cache_len=None, raw_kv=False):
     if mode == "decode":
-        h = embed(params, cfg, batch["token"], ctx)
+        # "token": one-token decode; "tokens": a multi-token paged prefill
+        # chunk (the paged branch of attn_apply takes S > 1)
+        tok = batch["token"] if "token" in batch else batch["tokens"]
+        h = embed(params, cfg, tok, ctx)
     else:
         h = embed(params, cfg, batch["tokens"], ctx)
     S = h.shape[1] if mode != "decode" else None
@@ -581,6 +705,8 @@ def _dense_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
         if mode == "decode":
             return h, {"layers": ys}
         if mode == "prefill":
+            if raw_kv:
+                return h, {"layers": ys}
             return h, {"layers": _finish_prefill_cache(ys, window=window, seq=S, cache_len=cache_len)}
         return h, None
 
@@ -625,6 +751,8 @@ def _dense_backbone(params, cfg, batch, ctx, *, mode, unroll, cache=None,
         return h, out
     if mode == "prefill":
         lys, gys = ys
+        if raw_kv:
+            return h, {"local": lys, "global": gys, "tail": tail_ys}
         out = {
             "local": _finish_prefill_cache(lys, window=W, seq=S, cache_len=cache_len),
             "global": _finish_prefill_cache(gys, window=None, seq=S, cache_len=cache_len),

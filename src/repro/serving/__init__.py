@@ -13,8 +13,9 @@ lifecycle fields the engines fill in):
   paged path); the barrier between waves is its defining limitation.
 
 * **Paged continuous path (the fused path)** — :mod:`kv_cache` breaks the
-  dense decode cache into fixed-size pages in a shared pool with
-  per-request block tables; :mod:`paged_engine`'s ``ContinuousEngine``
+  dense decode cache into fixed-size pages in shared per-layer-group
+  pools with per-request block tables; :mod:`paged_engine`'s
+  ``ContinuousEngine``
   admits EDF-ordered requests into free decode lanes *between real decode
   steps*, frees pages the step a request retires, and reuses the analytic
   batcher's drop/degrade admission math on the same ``core.latency``
@@ -26,6 +27,30 @@ lifecycle fields the engines fill in):
   otherwise; profiles price the two implementations via
   ``LatencyProfile(attn_impl=...)``.  Greedy outputs are token-identical
   to the wave path — same tokens, no barrier.
+
+  **Hybrid sliding-window stacks** (every dense/moe attention layout:
+  uniform, starcoder2-class uniform-windowed, gemma3-class local:global).
+  ``transformer.paged_layer_groups`` partitions the stack into attention
+  layer groups; each group owns its own pools, free list, and block
+  tables in :class:`~repro.serving.kv_cache.PagedKVCache`.  Sliding-
+  window groups retain at most ``ceil(window/page_size) + 1`` live pages
+  per lane — the paged equivalent of the wave path's contiguous ring
+  buffers — allocating pages lazily as the write position advances and
+  freeing out-of-window pages back to the pool *mid-flight* (retired
+  table entries park on the reserved dummy page; the kernels mask
+  validity to ``pos - window < slot <= pos`` per lane, so local layers
+  attend over only their retained pages).  Admission sizes page demand
+  per group — window-bounded for local groups — so long-decode requests
+  on windowed stacks cost the pool a constant handful of pages, and
+  ``core.latency`` prices local-layer attention at ``min(context,
+  window)`` (``attn_layer_groups``), so admission projections, the
+  analytic batcher, and the fleet router all see the cheaper steps.
+  Token identity with the contiguous wave path is enforced for every
+  servable config x page size x chunk size x kernel implementation by
+  the cross-path differential harness (tests/test_hybrid_paged.py);
+  ``benchmarks/table_hybrid.py`` measures the windowed-vs-dense KV
+  traffic and step time plus the fleet goodput a gemma3-class engine
+  earns in the pool.
 
   **Chunk-interleave contract** (``prefill_chunk=N``, a multiple of the
   page size; mirrored by the analytic batcher): an admitted prompt is

@@ -68,16 +68,16 @@ class LatencyProfile:
                  hw: Hardware = V5E, attn_impl: str = "fused",
                  padded_ctx: Optional[int] = None):
         assert attn_impl in ("fused", "gather"), attn_impl
-        if attn_impl == "gather" and (cfg.arch_type != "dense"
-                                      or cfg.sliding_window
-                                      or cfg.local_global_ratio):
+        if attn_impl == "gather" and cfg.arch_type not in ("dense", "moe"):
             # the gather adjustment in step_s cancels step_latency's
-            # built-in attention term, which prices windowed layers at
-            # min(context, window) — the cancellation is only exact for
-            # the dense uniform stacks the paged engine itself supports
+            # built-in attention term; both now price per attention layer
+            # group (core.latency.attn_layer_groups), so the cancellation
+            # is exact for every stack the paged engine serves — dense and
+            # moe, uniform-windowed (starcoder2-class) and local:global
+            # (gemma3-class) included
             raise ValueError(
                 "attn_impl='gather' models the paged decode path, which "
-                f"supports dense uniform stacks only (got {cfg.name})")
+                f"supports dense/moe attention stacks only (got {cfg.name})")
         self.cfg = cfg
         self.avg_bits = avg_bits
         self.hw = hw

@@ -1,52 +1,88 @@
-"""Paged KV cache: fixed-size pages in a shared pool, per-request page lists.
+"""Paged KV cache: fixed-size pages in shared per-layer-group pools.
 
 The wave engine's decode cache is a dense (B, max_ctx, Hkv, D) slab per
 layer: every batch lane owns ``max_ctx`` slots for its whole lifetime, so a
 lane cannot be handed to a new request until the old one retires — the
 physical root of the wave barrier.  This module breaks the slab into
-``page_size``-token *pages* inside one shared per-layer pool:
+``page_size``-token *pages* inside shared pools:
 
 * A request is admitted by allocating just enough pages to cover its prompt
-  plus decode budget; its **block table** (a fixed-width list of page ids)
-  maps logical positions to pool pages.
+  plus decode budget; its **block tables** (fixed-width lists of page ids,
+  one per layer group) map logical positions to pool pages.
 * Attention gathers K/V through the block table
-  (:func:`repro.models.attention.attn_apply` paged branch, optionally via
-  the Pallas scalar-prefetch kernel in ``kernels.paged_gather``).
+  (:func:`repro.models.attention.attn_apply` paged branch, via the fused
+  paged flash-attention kernel or the jnp gather+SDPA fallback).
 * On retirement the pages go back to the free list **immediately**, so a
   new request can be admitted mid-flight of everyone else — continuous
   batching on real compute, the fusion ROADMAP tracked.
 
-Page accounting (free list, block tables, per-lane positions) is host-side
-numpy — it is O(pages) bookkeeping between jit'd steps.  The pools
-themselves are device arrays threaded functionally through
+**Layer groups** (:func:`repro.models.transformer.paged_layer_groups`).
+Uniform stacks have one group ("layers"); gemma3-class local:global
+stacks split into "local"/"global"(/"tail").  Each group owns its own
+pools — shaped ``(n_group_layers, n_pages, page_size, Hkv, D)`` — its own
+free list, and its own per-slot block tables, because the groups' page
+*lifetimes* differ:
+
+* **Full-attention groups** allocate every page of a request's budget at
+  admission and keep them until retirement (the historical behavior).
+* **Sliding-window groups** retain only the pages under the window — at
+  most ``ceil(window/page_size) + 1`` live pages per slot regardless of
+  decoded length, the paged equivalent of the contiguous ring buffer the
+  wave path uses for windowed layers.  Pages are allocated lazily as the
+  write position advances and **freed back to the pool mid-flight** the
+  moment their whole extent falls out of the window (their table entries
+  park on the reserved dummy page; the kernels' window-validity mask makes
+  them unreachable).  This is what lets the engine size admission by the
+  *window-bounded* page demand: a 4096-window starcoder2-class request
+  decoding thousands of tokens costs the pool a constant handful of pages
+  per local layer.
+
+**Reservations.**  Lazy window allocation must never fail mid-flight: a
+freed page is immediately reusable by *other* requests' admissions, so
+each slot records its peak concurrent page demand per group at admission
+and :meth:`can_admit` measures the pool's *available* (free minus
+outstanding-reserved) pages.  The invariant — free >= sum over slots of
+(reserved - owned)+ — makes every lazy allocation a guaranteed pop.
+
+Page accounting (free lists, block tables, per-lane positions) is
+host-side numpy — it is O(pages) bookkeeping between jit'd steps.  The
+pools themselves are device arrays threaded functionally through
 ``transformer.paged_decode_step``.
 
-Page 0 is reserved as a *dummy page*: idle decode lanes point their whole
-table at it so one compiled decode step serves any occupancy (fixed-lane
-batching — no recompile as requests come and go).  Writes from idle lanes
-collide harmlessly there; their outputs are discarded.
+Page 0 of every group is reserved as a *dummy page*: idle decode lanes
+point their whole table at it (and window groups their retired entries) so
+one compiled decode step serves any occupancy (fixed-lane batching — no
+recompile as requests come and go).  Writes from idle lanes collide
+harmlessly there; their outputs are discarded.
 """
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models.transformer import PagedGroup, paged_layer_groups
 
-#: id of the page idle lanes point at; never allocated to a request.
+#: id of the page idle lanes (and retired window entries) point at; never
+#: allocated to a request.  One per group pool.
 DUMMY_PAGE = 0
 
 
 class PagedKVCache:
-    """Shared page pool + per-slot block tables for one engine."""
+    """Shared per-group page pools + per-slot block tables for one engine."""
 
     def __init__(self, cfg: ModelConfig, *, slots: int, n_pages: int,
                  page_size: int = 16, max_ctx: int = 256,
                  dtype=jnp.float32):
+        """``n_pages`` sizes each *full-attention* group's pool (the
+        historical meaning — for uniform stacks it is simply the pool
+        size).  Sliding-window groups never hold more than ``slots *
+        win_cap + 1`` live pages, so their pools are capped there — the
+        KV-memory saving windows exist to buy."""
         assert n_pages >= 2, "need at least one dummy + one real page"
         self.cfg = cfg
         self.slots = slots
@@ -54,79 +90,265 @@ class PagedKVCache:
         self.max_ctx = max_ctx
         #: block-table width: every slot can address up to max_ctx tokens
         self.table_width = math.ceil(max_ctx / page_size)
-        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
-                 cfg.head_dim)
-        self.kpool = jnp.zeros(shape, dtype)
-        self.vpool = jnp.zeros(shape, dtype)
         self.n_pages = n_pages
-        self._free: List[int] = list(range(1, n_pages))   # 0 is the dummy
-        self._owned: List[List[int]] = [[] for _ in range(slots)]
-        self.block_tables = np.full((slots, self.table_width), DUMMY_PAGE,
-                                    np.int32)
+        self.groups: List[PagedGroup] = paged_layer_groups(cfg)
+        for g in self.groups:
+            assert g.window is None or g.window >= 1, (g.name, g.window)
+        self._group_pages: Dict[str, int] = {}
+        self.kpool: Dict[str, jax.Array] = {}
+        self.vpool: Dict[str, jax.Array] = {}
+        self._free: Dict[str, List[int]] = {}
+        #: per (group, slot): logical page index -> owned page id
+        self._owned: Dict[str, List[Dict[int, int]]] = {}
+        #: per (group, slot): peak concurrent page demand of the admitted
+        #: request (0 = slot idle) — see "Reservations" above
+        self._reserved: Dict[str, np.ndarray] = {}
+        self.block_tables: Dict[str, np.ndarray] = {}
+        for g in self.groups:
+            cap = self.win_cap(g)
+            n_pg = n_pages if cap is None else min(n_pages, slots * cap + 1)
+            self._group_pages[g.name] = n_pg
+            shape = (len(g.layers), n_pg, page_size, cfg.n_kv_heads,
+                     cfg.head_dim)
+            self.kpool[g.name] = jnp.zeros(shape, dtype)
+            self.vpool[g.name] = jnp.zeros(shape, dtype)
+            self._free[g.name] = list(range(1, n_pg))    # 0 is the dummy
+            self._owned[g.name] = [{} for _ in range(slots)]
+            self._reserved[g.name] = np.zeros((slots,), np.int64)
+            self.block_tables[g.name] = np.full(
+                (slots, self.table_width), DUMMY_PAGE, np.int32)
         self.pos = np.zeros((slots,), np.int32)
+
+    # -- group geometry ------------------------------------------------------
+
+    def win_cap(self, g: PagedGroup) -> Optional[int]:
+        """Max live pages a window group ever needs per slot during plain
+        decode: ``ceil(window/page_size) + 1`` (a window spanning a page
+        boundary touches one extra partial page), clamped to the table."""
+        if g.window is None:
+            return None
+        return min(self.table_width,
+                   math.ceil(g.window / self.page_size) + 1)
+
+    def _win_lo(self, g: PagedGroup, pos: int) -> int:
+        """First logical page any query at position >= ``pos`` can still
+        reach: queries attend slots > pos - window."""
+        return max(0, pos - g.window + 1) // self.page_size
+
+    def peak_pages(self, g: PagedGroup, n_tokens: int,
+                   prefill_chunk: Optional[int] = None) -> int:
+        """Peak concurrent page demand of a request writing ``n_tokens``
+        positions.  Full groups: every page, for the whole lifetime.
+        Window groups: the live set slides — bounded by ``win_cap`` during
+        decode, transiently ``ceil((window + chunk - 1)/page_size) + 1``
+        while a prefill chunk is absorbed (the chunk's own pages plus the
+        in-window prior pages must coexist for the chunk attend)."""
+        need = math.ceil(n_tokens / self.page_size)
+        if g.window is None:
+            return need
+        span = g.window + max(1, prefill_chunk or 1) - 1
+        cap = min(self.table_width,
+                  math.ceil(span / self.page_size) + 1)
+        return min(need, cap)
 
     # -- allocation ----------------------------------------------------------
 
-    def pages_needed(self, n_tokens: int) -> int:
-        return math.ceil(n_tokens / self.page_size)
+    def pages_needed(self, n_tokens: int,
+                     prefill_chunk: Optional[int] = None) -> int:
+        """Total peak page demand across groups (admission feasibility)."""
+        return sum(self.peak_pages(g, n_tokens, prefill_chunk)
+                   for g in self.groups)
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages currently on the free lists, across groups.  Mid-flight
+        window frees show up here the step they happen."""
+        return sum(len(f) for f in self._free.values())
 
-    def can_admit(self, n_tokens: int) -> bool:
+    def available(self, g: PagedGroup) -> int:
+        """Free pages of ``g`` not spoken for by live slots' reservations
+        — what admission may promise to a newcomer."""
+        out = len(self._free[g.name])
+        owned = self._owned[g.name]
+        for s in range(self.slots):
+            out -= max(0, int(self._reserved[g.name][s]) - len(owned[s]))
+        return out
+
+    def fits_pool(self, n_tokens: int,
+                  prefill_chunk: Optional[int] = None) -> bool:
+        """Could this request *ever* be admitted (even into an empty
+        pool)?  False means waiting for retirements would hang forever."""
         return (n_tokens <= self.max_ctx
-                and self.pages_needed(n_tokens) <= self.free_pages)
+                and all(self.peak_pages(g, n_tokens, prefill_chunk)
+                        <= self._group_pages[g.name] - 1
+                        for g in self.groups))
 
-    def alloc(self, slot: int, n_tokens: int) -> List[int]:
-        """Give ``slot`` pages covering ``n_tokens`` logical positions."""
-        need = self.pages_needed(n_tokens)
-        assert not self._owned[slot], f"slot {slot} already allocated"
-        assert need <= len(self._free), (need, len(self._free))
+    def can_admit(self, n_tokens: int,
+                  prefill_chunk: Optional[int] = None) -> bool:
+        return (n_tokens <= self.max_ctx
+                and all(self.peak_pages(g, n_tokens, prefill_chunk)
+                        <= self.available(g) for g in self.groups))
+
+    def _take(self, g: PagedGroup, slot: int, logical: int) -> int:
+        """Pop a free page of ``g`` and map ``slot``'s logical page
+        ``logical`` to it (reservations guarantee the pop succeeds)."""
+        owned = self._owned[g.name][slot]
+        assert logical not in owned, (g.name, slot, logical)
+        assert len(owned) < int(self._reserved[g.name][slot]), \
+            f"{g.name}/slot{slot}: allocation beyond reservation"
+        assert self._free[g.name], \
+            f"{g.name}: free list empty despite reservation"
+        page = self._free[g.name].pop()
+        owned[logical] = page
+        self.block_tables[g.name][slot, logical] = page
+        return page
+
+    def _drop_page(self, g: PagedGroup, slot: int, logical: int) -> int:
+        """Return ``slot``'s logical page to the pool; the table entry
+        parks on the dummy page (window-masked, never attended)."""
+        page = self._owned[g.name][slot].pop(logical)
+        self._free[g.name].append(page)
+        self.block_tables[g.name][slot, logical] = DUMMY_PAGE
+        return page
+
+    def _ensure(self, g: PagedGroup, slot: int, lo: int, hi: int) -> None:
+        """Window groups: make logical pages [lo, hi] live for ``slot``."""
+        owned = self._owned[g.name][slot]
+        for j in range(lo, hi + 1):
+            if j not in owned:
+                self._take(g, slot, j)
+
+    def _trim(self, g: PagedGroup, slot: int, lo: int) -> List[int]:
+        """Window groups: free every logical page below ``lo`` — the
+        mid-flight window free."""
+        owned = self._owned[g.name][slot]
+        dropped = [j for j in owned if j < lo]
+        return [self._drop_page(g, slot, j) for j in sorted(dropped)]
+
+    def alloc(self, slot: int, n_tokens: int,
+              prefill_chunk: Optional[int] = None
+              ) -> List[Tuple[str, int]]:
+        """Admit a request covering ``n_tokens`` logical positions into
+        ``slot``: full groups get every page now; window groups only
+        *reserve* their peak demand — their pages are taken lazily as the
+        write position advances (and freed as it leaves them behind).
+        Returns the (group, page) pairs allocated immediately."""
         assert n_tokens <= self.max_ctx, (n_tokens, self.max_ctx)
-        pages = [self._free.pop() for _ in range(need)]
-        self._owned[slot] = pages
-        self.block_tables[slot, :] = DUMMY_PAGE
-        self.block_tables[slot, :need] = pages
+        taken: List[Tuple[str, int]] = []
+        for g in self.groups:
+            assert not self._owned[g.name][slot], f"slot {slot} allocated"
+            need = self.peak_pages(g, n_tokens, prefill_chunk)
+            assert need <= self.available(g), (g.name, need,
+                                               self.available(g))
+            self._reserved[g.name][slot] = need
+            self.block_tables[g.name][slot, :] = DUMMY_PAGE
+            if g.window is None:
+                for j in range(math.ceil(n_tokens / self.page_size)):
+                    taken.append((g.name, self._take(g, slot, j)))
         self.pos[slot] = 0
-        return list(pages)
+        return taken
 
-    def free(self, slot: int) -> List[int]:
-        """Retire ``slot``: return its pages to the free list immediately."""
-        pages = self._owned[slot]
-        self._free.extend(pages)
-        self._owned[slot] = []
-        self.block_tables[slot, :] = DUMMY_PAGE
+    def free(self, slot: int) -> List[Tuple[str, int]]:
+        """Retire ``slot``: every group's pages return to its free list
+        immediately."""
+        out: List[Tuple[str, int]] = []
+        for g in self.groups:
+            owned = self._owned[g.name][slot]
+            for j in sorted(owned):
+                out.append((g.name, owned[j]))
+            self._free[g.name].extend(owned.values())
+            owned.clear()
+            self._reserved[g.name][slot] = 0
+            self.block_tables[g.name][slot, :] = DUMMY_PAGE
         self.pos[slot] = 0
-        return list(pages)
+        return out
+
+    def live_pages(self, slot: int, group: str) -> int:
+        """Pages ``slot`` currently holds in ``group`` (the quantity the
+        window bound caps)."""
+        return len(self._owned[group][slot])
+
+    # -- position lifecycle --------------------------------------------------
+
+    def prepare_tokens(self, slot: int, n_tokens: int) -> None:
+        """Make the pages for writing (and attending) logical positions
+        ``[pos, pos + n_tokens)`` live in every window group: pages from
+        the window horizon of the first query through the last written
+        position.  Full groups allocated everything at admission."""
+        pos = int(self.pos[slot])
+        hi = (pos + n_tokens - 1) // self.page_size
+        for g in self.groups:
+            if g.window is None:
+                continue
+            self._ensure(g, slot, self._win_lo(g, pos), hi)
+
+    def advance(self, slot: int, n_tokens: int) -> List[Tuple[str, int]]:
+        """Account ``n_tokens`` freshly written positions: advance the
+        slot's position and free every window-group page whose whole
+        extent fell out of the window — the pages are on the free list
+        (and visible in :attr:`free_pages`) before the next engine event.
+        Returns the (group, page) pairs freed."""
+        self.pos[slot] += n_tokens
+        pos = int(self.pos[slot])
+        freed: List[Tuple[str, int]] = []
+        for g in self.groups:
+            if g.window is None:
+                continue
+            freed.extend((g.name, p)
+                         for p in self._trim(g, slot, self._win_lo(g, pos)))
+        return freed
 
     # -- data movement -------------------------------------------------------
 
-    def write_prefill(self, slot: int, k: jax.Array, v: jax.Array) -> None:
+    def write_prefill(self, slot: int, seg_kv: Dict[str, dict]) -> None:
         """Scatter a request's prefill K/V into its pages.
 
-        k/v: (n_layers, S, Hkv, D) — the dense cache ``transformer.prefill``
-        built for this request alone, unpadded."""
-        L, S, H, D = k.shape
+        ``seg_kv``: per group name, {"k","v"} of shape (n_group_layers, S,
+        Hkv, D) — the raw per-position cache ``transformer.prefill(...,
+        raw_kv=True)`` built for this request alone, unpadded (see
+        ``transformer.raw_prefill_group_kv``).  Window groups write only
+        the pages still under the window at the end of the prompt;
+        positions below them are unreachable by every future query and are
+        never materialized."""
         ps = self.page_size
-        n_pg = self.pages_needed(S)
-        pids = np.asarray(self._owned[slot][:n_pg], np.int32)
-        pad = n_pg * ps - S
-        if pad:
-            widths = ((0, 0), (0, pad), (0, 0), (0, 0))
-            k, v = jnp.pad(k, widths), jnp.pad(v, widths)
-        kp = k.reshape(L, n_pg, ps, H, D)
-        vp = v.reshape(L, n_pg, ps, H, D)
-        self.kpool = self.kpool.at[:, pids].set(kp.astype(self.kpool.dtype))
-        self.vpool = self.vpool.at[:, pids].set(vp.astype(self.vpool.dtype))
+        for g in self.groups:
+            k, v = seg_kv[g.name]["k"], seg_kv[g.name]["v"]
+            L, S, H, D = k.shape
+            lo = 0 if g.window is None else self._win_lo(g, S)
+            n_pg = math.ceil(S / ps) - lo
+            if g.window is not None:
+                self._ensure(g, slot, lo, lo + n_pg - 1)
+            pids = np.asarray(
+                [self._owned[g.name][slot][lo + j] for j in range(n_pg)],
+                np.int32)
+            k, v = k[:, lo * ps:], v[:, lo * ps:]
+            pad = lo * ps + n_pg * ps - S
+            if pad:
+                widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+                k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+            kp = k.reshape(L, n_pg, ps, H, D)
+            vp = v.reshape(L, n_pg, ps, H, D)
+            self.kpool[g.name] = self.kpool[g.name].at[:, pids].set(
+                kp.astype(self.kpool[g.name].dtype))
+            self.vpool[g.name] = self.vpool[g.name].at[:, pids].set(
+                vp.astype(self.vpool[g.name].dtype))
         self.pos[slot] = S
 
+    def _live_slots(self) -> List[int]:
+        return [s for s in range(self.slots)
+                if any(int(self._reserved[g.name][s])
+                       for g in self.groups)]
+
     def decode_cache(self, exclude: Tuple[int, ...] = ()) -> dict:
-        """The pytree ``transformer.paged_decode_step`` consumes.
+        """The pytree ``transformer.paged_decode_step`` consumes:
+        ``{"pos": (slots,), "groups": {name: {"kpool", "vpool",
+        "block_tables"}}}``.
 
         ``exclude``: slots whose rows are masked to the dummy page (pos 0)
         for this step — mid-prefill lanes own real pages but must not be
-        written or read by a decode step, exactly like idle lanes.
+        written or read by a decode step, exactly like idle lanes.  For
+        every *included* live lane the write page at its position is made
+        live first (window groups allocate lazily).
 
         The block table / position rows are **copied** before wrapping:
         ``jnp.asarray`` of a numpy array may alias its buffer zero-copy on
@@ -134,29 +356,48 @@ class PagedKVCache:
         ``self.block_tables`` between (asynchronously dispatched) steps —
         handing out the live buffers is a data race once nothing on the
         host forces a sync per step (it used to be masked by host-side
-        sampling materializing the logits every step)."""
-        bt, pos = self.block_tables.copy(), self.pos.copy()
+        sampling forcing a sync every step)."""
+        for s in self._live_slots():
+            if s not in exclude:
+                self.prepare_tokens(s, 1)
+        pos = self.pos.copy()
+        groups = {}
+        for g in self.groups:
+            bt = self.block_tables[g.name].copy()
+            for s in exclude:
+                bt[s, :] = DUMMY_PAGE
+            groups[g.name] = {"kpool": self.kpool[g.name],
+                              "vpool": self.vpool[g.name],
+                              "block_tables": jnp.asarray(bt)}
         for s in exclude:
-            bt[s, :] = DUMMY_PAGE
             pos[s] = 0
-        return {"kpool": self.kpool, "vpool": self.vpool,
-                "block_tables": jnp.asarray(bt), "pos": jnp.asarray(pos)}
+        return {"pos": jnp.asarray(pos), "groups": groups}
 
-    def chunk_cache(self, slot: int) -> dict:
+    def chunk_cache(self, slot: int, chunk_len: int) -> dict:
         """The single-lane pytree ``transformer.prefill_chunk`` consumes:
-        this slot's block table and write position over the shared pools
-        (copied, not aliased — see :meth:`decode_cache`)."""
-        return {"kpool": self.kpool, "vpool": self.vpool,
-                "block_tables":
-                    jnp.asarray(self.block_tables[slot:slot + 1].copy()),
-                "pos": jnp.asarray(self.pos[slot:slot + 1].copy())}
+        this slot's block tables and write position over the shared pools
+        (copied, not aliased — see :meth:`decode_cache`).  Window groups
+        first make every page of the chunk's span live: the chunk's own
+        pages plus the in-window prior pages must coexist for the chunk
+        attend."""
+        self.prepare_tokens(slot, chunk_len)
+        groups = {
+            g.name: {"kpool": self.kpool[g.name],
+                     "vpool": self.vpool[g.name],
+                     "block_tables": jnp.asarray(
+                         self.block_tables[g.name][slot:slot + 1].copy())}
+            for g in self.groups}
+        return {"pos": jnp.asarray(self.pos[slot:slot + 1].copy()),
+                "groups": groups}
 
     def update_from(self, new_cache: dict) -> None:
         """Write back the pools a decode step returned (positions stay
         host-managed: idle lanes must not advance)."""
-        self.kpool = new_cache["kpool"]
-        self.vpool = new_cache["vpool"]
+        for g in self.groups:
+            self.kpool[g.name] = new_cache["groups"][g.name]["kpool"]
+            self.vpool[g.name] = new_cache["groups"][g.name]["vpool"]
 
     def utilization(self) -> float:
         """Fraction of allocatable pages currently owned by live requests."""
-        return 1.0 - self.free_pages / (self.n_pages - 1)
+        total = sum(n - 1 for n in self._group_pages.values())
+        return 1.0 - self.free_pages / total

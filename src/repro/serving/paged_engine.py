@@ -11,11 +11,16 @@ does both at once:
   and every decode step emits real tokens for every occupied lane —
   greedy outputs are token-identical to the wave engine's.
 * **Paged KV cache** (:mod:`~repro.serving.kv_cache`).  Each admitted
-  request gets just enough fixed-size pages from a shared pool; attention
-  gathers through per-lane block tables
+  request gets just enough fixed-size pages from shared per-layer-group
+  pools; attention gathers through per-lane, per-group block tables
   (:func:`repro.models.attention.attn_apply` paged branch).  Pages return
   to the free list the step a request retires, so the next request is
-  admitted *mid-flight of everyone else* — no wave barrier.
+  admitted *mid-flight of everyone else* — no wave barrier.  Sliding-
+  window layer groups (starcoder2-class uniform windows, gemma3-class
+  local:global) hold at most ``ceil(window/page_size) + 1`` live pages
+  per lane and free out-of-window pages back to the pool mid-flight;
+  admission sizes their page demand by the window, not the context, and
+  the clock prices their attention at ``min(context, window)``.
 * **Fixed-lane batching.**  The decode step always runs at ``slots`` lanes;
   idle lanes point at the reserved dummy page and their outputs are
   discarded.  One compiled step serves every occupancy.
@@ -133,11 +138,12 @@ class ContinuousEngine:
         path the kernel replaced: ~3x the KV traffic at the padded
         block-table extent).  Ignored when ``profile`` is passed
         explicitly."""
-        if cfg.arch_type != "dense" or cfg.local_global_ratio \
-                or cfg.sliding_window:
+        if not transformer.paged_supported(cfg):
             raise NotImplementedError(
                 "ContinuousEngine needs the paged decode path, which "
-                f"supports dense uniform stacks only (got {cfg.name})")
+                "supports dense/moe attention stacks (uniform, "
+                f"sliding-window, local:global), not {cfg.name} "
+                f"(arch_type={cfg.arch_type})")
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -164,10 +170,14 @@ class ContinuousEngine:
         # greedy sampling lives *inside* the jit'd steps: only (slots,)-sized
         # int32 token ids cross the device->host boundary per step, never the
         # (slots, vocab) logits the host-side sampler used to materialize.
+        # raw_kv: the paged cache addresses logical positions, so the
+        # prefill must hand back unrotated per-position K/V (the wave
+        # path's windowed ring-buffer layout would scatter wrong slots)
         self._prefill = jax.jit(
             lambda p, b: _sample_first(transformer.prefill(p, cfg, b,
                                                            self.ctx,
-                                                           unroll=unroll)))
+                                                           unroll=unroll,
+                                                           raw_kv=True)))
         self._chunk = jax.jit(
             lambda p, b, c: _sample_first(
                 transformer.prefill_chunk(p, cfg, b, c, self.ctx,
@@ -245,13 +255,16 @@ class ContinuousEngine:
                     self.pending.remove(req)
                     self._drop(req)
                     continue                  # lane still free; try next
-            # page feasibility: prompt + (n_tok - 1) decode writes
-            need = self.cache.pages_needed(S + n_tok - 1)
-            if need > self.cache.n_pages - 1:
+            # page feasibility: prompt + (n_tok - 1) decode writes.  The
+            # demand is *window-bounded* per layer group: a sliding-window
+            # group costs at most its win_cap pages however long the
+            # request runs, so windowed stacks admit far more work per
+            # pool than their total token count suggests.
+            if not self.cache.fits_pool(S + n_tok - 1, self.prefill_chunk):
                 self.pending.remove(req)
                 self._drop(req)               # exceeds the whole pool:
                 continue                      # waiting would hang forever
-            if not self.cache.can_admit(S + n_tok - 1):
+            if not self.cache.can_admit(S + n_tok - 1, self.prefill_chunk):
                 return False                  # wait for pages (EDF head)
             self.pending.remove(req)
             self._start(lane, req, n_tok)
@@ -271,7 +284,7 @@ class ContinuousEngine:
         absorbs it chunk-by-chunk via :meth:`_advance_prefills`, decode
         steps landing in between."""
         S = req.prompt_len
-        pages = self.cache.alloc(lane, S + n_tok - 1)
+        pages = self.cache.alloc(lane, S + n_tok - 1, self.prefill_chunk)
         self.admissions.append((req.rid, pages))
         req.t_admit = self.t
         if self.prefill_chunk is not None:
@@ -280,9 +293,9 @@ class ContinuousEngine:
                                      prompt_toks=self._prompt_for(req))
             return
         toks = jnp.asarray(self._prompt_for(req)[None, :])
-        first_tok, dense_cache = self._prefill(self.params, {"tokens": toks})
-        kv = dense_cache["layers"]
-        self.cache.write_prefill(lane, kv["k"][:, 0], kv["v"][:, 0])
+        first_tok, raw_cache = self._prefill(self.params, {"tokens": toks})
+        self.cache.write_prefill(
+            lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
         self.t += self.profile.prefill_s(S)
         lane_state = _Lane(req, last_token=None, remaining=n_tok,
                            context=S)
@@ -304,9 +317,11 @@ class ContinuousEngine:
             c = min(self.prefill_chunk, S - l.absorbed)
             toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
             first_tok, new_cache = self._chunk(self.params, {"tokens": toks},
-                                               self.cache.chunk_cache(i))
+                                               self.cache.chunk_cache(i, c))
             self.cache.update_from(new_cache)
-            self.cache.pos[i] += c
+            # window groups free the pages this chunk pushed out of the
+            # window — back to the pool mid-flight, before the next event
+            self.cache.advance(i, c)
             self.t += self.profile.prefill_s(c, context=l.absorbed)
             l.absorbed += c
             l.context += c
@@ -387,7 +402,9 @@ class ContinuousEngine:
         self.t += self.profile.step_s(len(active),
                                       max(l.context for _, l in active))
         for i, l in active:
-            self.cache.pos[i] += 1            # the step wrote position pos
+            # the step wrote position pos; window-group pages that fell
+            # out of the window go back to the pool immediately
+            self.cache.advance(i, 1)
             l.context += 1
             tok = int(nxt[i, 0])
             l.produced.append(tok)

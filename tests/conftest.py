@@ -1,4 +1,4 @@
-"""Test-environment compatibility shims.
+"""Test-environment compatibility shims + shared serving-test helpers.
 
 The property tests use `hypothesis`, which not every execution image ships
 (this container bakes in jax but not hypothesis).  Rather than lose those
@@ -7,7 +7,18 @@ stand-in when the real package is absent: strategies become seeded
 samplers and ``@given`` replays ``max_examples`` random draws.  The real
 hypothesis, when present, is always preferred — the shim only fills the
 gap, it does not shadow.
+
+The serving helpers back the cross-path differential harness
+(tests/test_hybrid_paged.py): enumerate every *servable* config in
+``src/repro/configs`` (smallified), run the same greedy requests through
+the contiguous-cache wave path and the paged continuous path, and hand
+both back for token-identity comparison.  ``REPRO_PAGED_MODES`` (env:
+"jnp", "pallas", or "both"/unset) selects which paged-attention
+implementations the harness sweeps — CI runs the suite once per mode so a
+fused-kernel regression cannot hide behind the fallback (or vice versa).
 """
+import functools
+import os
 import random
 import sys
 import types
@@ -66,3 +77,98 @@ try:
     import hypothesis  # noqa: F401
 except ImportError:
     _install_hypothesis_shim()
+
+
+# ---------------------------------------------------------------------------
+# Shared serving-test helpers (the cross-path differential harness)
+# ---------------------------------------------------------------------------
+
+def pallas_modes():
+    """The paged-attention implementations the differential suite sweeps:
+    [False] (jnp gather+SDPA fallback), [True] (fused Pallas kernel in
+    interpret mode), or both.  Controlled by REPRO_PAGED_MODES so ci.yml
+    can run the suite once per isolated mode."""
+    mode = os.environ.get("REPRO_PAGED_MODES", "both").lower()
+    if mode in ("jnp", "fallback", "gather"):
+        return [False]
+    if mode in ("pallas", "fused"):
+        return [True]
+    return [False, True]
+
+
+def servable_smoke_configs():
+    """Every config in ``src/repro/configs`` the paged continuous path can
+    serve, smallified for CPU smoke runs: each assigned architecture is
+    ``reduced()`` and the sim-scale qwen family passes through as-is
+    (the full-scale qwen entries are the same stacks at widths that only
+    matter to the latency model), filtered by
+    ``transformer.paged_supported`` — dense and moe stacks: uniform,
+    uniform-windowed (starcoder2-class) and local:global (gemma3-class).
+    Returns (name, cfg) pairs, deterministic order."""
+    from repro.configs import ASSIGNED, QWEN_SIM
+    from repro.models.transformer import paged_supported
+
+    out = []
+    for name in sorted(ASSIGNED):
+        cfg = ASSIGNED[name].reduced()
+        if paged_supported(cfg):
+            out.append((name, cfg))
+    for name in sorted(QWEN_SIM):
+        cfg = QWEN_SIM[name]
+        if paged_supported(cfg):
+            out.append((name, cfg))
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def smoke_params(name):
+    """Init params once per servable smoke config (shared across the
+    differential sweep's parametrizations)."""
+    import jax
+    from repro.models import transformer
+
+    cfg = dict(servable_smoke_configs())[name]
+    return transformer.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def make_requests(cfg, lens, *, max_new=4, deadline=100.0, seed=1):
+    """Deterministic greedy requests shared by both serving paths."""
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, n)
+                    .astype(np.int32), max_new=max_new, deadline_s=deadline)
+            for i, n in enumerate(lens)]
+
+
+def run_wave_reference(params, cfg, reqs, *, max_ctx=64):
+    """The contiguous-cache oracle: each request served alone through the
+    wave path (batch_slots=1 — left-padding would change what ragged
+    prompts attend to), returning its greedy tokens."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import Scheduler
+
+    sched = Scheduler(ServingEngine(params, cfg, max_ctx=max_ctx),
+                      batch_slots=1)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return reqs
+
+
+def run_paged(params, cfg, reqs, *, page_size=8, max_ctx=64, chunk=None,
+              use_pallas=False, slots=None, policy="serve", **engine_kw):
+    """The same requests through the paged ``ContinuousEngine``."""
+    from repro.models.modules import ExecContext
+    from repro.serving.paged_engine import ContinuousEngine
+
+    eng = ContinuousEngine(params, cfg, slots=slots or len(reqs),
+                           page_size=page_size, max_ctx=max_ctx,
+                           policy=policy, prefill_chunk=chunk,
+                           ctx=ExecContext(use_pallas=use_pallas),
+                           **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return reqs, eng

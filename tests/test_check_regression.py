@@ -1,0 +1,228 @@
+"""Unit tests for the bench regression gate itself.
+
+``benchmarks/check_regression.py`` is the only thing standing between a
+PR and a silent serving regression, and until now it was untested: a
+refactor could break its drift math, its ordering re-checks, or — the
+historical failure mode — crash on a renamed column and surface in CI as
+a traceback instead of a finding.  These tests drive the real
+``main(argv)`` on synthetic fresh/baseline table directories.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import check_regression as cr  # noqa: E402
+
+
+# -- synthetic tables ---------------------------------------------------------
+
+PAGED = (["path", "tokens", "p99_ms", "goodput"],
+         [["wave", "640", "90.0", "10.0"],
+          ["paged", "640", "60.0", "14.0"]])
+CHUNKED = (["path", "class", "tokens", "p99_ms", "goodput"],
+           [["stall", "trading", "100", "50.0", "8.0"],
+            ["stall", "all", "400", "80.0", "20.0"],
+            ["chunked", "trading", "100", "35.0", "9.0"],
+            ["chunked", "all", "400", "85.0", "33.0"]])
+ATTN = (["impl", "context", "lanes", "attn_us", "step_us", "hbm_kb"],
+        [["gather", "1024", "4", "300.0", "900.0", "4000"],
+         ["fused", "1024", "4", "100.0", "700.0", "1000"],
+         ["gather", "4096", "4", "1200.0", "2000.0", "16000"],
+         ["fused", "4096", "4", "400.0", "1100.0", "4000"]])
+HYBRID = (["kind", "name", "context", "window", "attn_us", "step_us",
+           "kv_kib", "goodput", "p99_ms", "tokens"],
+          [["attn", "windowed", "256", "1024", "50.0", "500.0", "100",
+            "", "", ""],
+           ["attn", "dense", "256", "", "50.0", "500.0", "100",
+            "", "", ""],
+           ["attn", "windowed", "4096", "1024", "100.0", "600.0", "200",
+            "", "", ""],
+           ["attn", "dense", "4096", "", "400.0", "900.0", "800",
+            "", "", ""],
+           ["fleet", "hybrid-pool", "", "", "", "", "", "12.0", "800.0",
+            "1900"],
+           ["fleet", "dense-pool", "", "", "", "", "", "9.0", "850.0",
+            "1500"]])
+
+ALL = {"table_paged.csv": PAGED, "table_chunked.csv": CHUNKED,
+       "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID}
+
+
+def write_tables(d, overrides=None):
+    os.makedirs(d, exist_ok=True)
+    for name, (header, rows) in ALL.items():
+        header, rows = list(header), [list(r) for r in rows]
+        if overrides and name in overrides:
+            header, rows = overrides[name](header, rows)
+        with open(os.path.join(d, name), "w") as f:
+            f.write(",".join(header) + "\n")
+            for r in rows:
+                f.write(",".join(str(x) for x in r) + "\n")
+    return d
+
+
+def run_gate(tmp_path, fresh_override=None, base_override=None, tol=5.0):
+    fresh = write_tables(str(tmp_path / "fresh"), fresh_override)
+    base = write_tables(str(tmp_path / "base"), base_override)
+    return cr.main(["--results", fresh, "--baseline-dir", base,
+                    "--tol-pct", str(tol)])
+
+
+def mutate(name, path_key, column, value, key_col="path"):
+    """Build an override that rewrites one cell of one table."""
+    def over(header, rows):
+        ci = header.index(column)
+        ki = header.index(key_col)
+        for r in rows:
+            if r[ki] == path_key:
+                r[ci] = value
+        return header, rows
+    return {name: over}
+
+
+# -- the clean case -----------------------------------------------------------
+
+def test_identical_tables_pass(tmp_path, capsys):
+    assert run_gate(tmp_path) == 0
+    assert "4 tables OK" in capsys.readouterr().out
+
+
+def test_within_tolerance_passes(tmp_path):
+    over = mutate("table_paged.csv", "paged", "goodput", "13.6")  # -2.9%
+    assert run_gate(tmp_path, fresh_override=over) == 0
+
+
+# -- drift detection ----------------------------------------------------------
+
+def test_goodput_drop_fails(tmp_path, capsys):
+    over = mutate("table_paged.csv", "paged", "goodput", "10.5")  # -25%
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "goodput dropped" in capsys.readouterr().err
+
+
+def test_p99_rise_fails(tmp_path, capsys):
+    over = mutate("table_chunked.csv", "chunked", "p99_ms", "45.0")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "p99 rose" in capsys.readouterr().err
+
+
+def test_row_set_change_fails(tmp_path, capsys):
+    def drop_row(header, rows):
+        return header, rows[:-1]
+    assert run_gate(tmp_path,
+                    fresh_override={"table_paged.csv": drop_row}) == 1
+    assert "row set changed" in capsys.readouterr().err
+
+
+def test_attn_time_rise_fails(tmp_path, capsys):
+    over = mutate("table_paged_attn.csv", "fused", "step_us", "900.0",
+                  key_col="impl")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "step_us rose" in capsys.readouterr().err
+
+
+def test_hybrid_kv_rise_fails(tmp_path, capsys):
+    over = mutate("table_hybrid.csv", "windowed", "kv_kib", "1000",
+                  key_col="name")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "kv_kib rose" in capsys.readouterr().err
+
+
+# -- ordering re-checks -------------------------------------------------------
+
+def test_paged_not_beating_wave_fails(tmp_path, capsys):
+    # better-than-baseline p99 (so drift passes) but above wave's: the
+    # structural claim is violated even though nothing "regressed"
+    over = {"table_paged.csv": lambda h, r: (h, [
+        ["wave", "640", "90.0", "10.0"],
+        ["paged", "640", "95.0", "14.0"]])}
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "paged p99 not below wave" in capsys.readouterr().err
+
+
+def test_token_divergence_fails(tmp_path, capsys):
+    over = mutate("table_paged.csv", "paged", "tokens", "641")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "token counts diverged" in capsys.readouterr().err
+
+
+def test_fused_not_dominating_fails(tmp_path, capsys):
+    over = mutate("table_paged_attn.csv", "fused", "attn_us", "1300.0",
+                  key_col="impl")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "not below gather" in capsys.readouterr().err
+
+
+def test_windowed_not_undercutting_dense_fails(tmp_path, capsys):
+    def bloat(header, rows):
+        for r in rows:
+            if r[1] == "windowed" and r[2] == "4096":
+                r[5] = "950.0"               # step_us above dense's 900
+        return header, rows
+    assert run_gate(tmp_path,
+                    fresh_override={"table_hybrid.csv": bloat},
+                    base_override={"table_hybrid.csv": bloat}) == 1
+    err = capsys.readouterr().err
+    assert "windowed step_us" in err and "dense" in err
+
+
+def test_hybrid_pool_goodput_ordering_fails(tmp_path, capsys):
+    over = mutate("table_hybrid.csv", "hybrid-pool", "goodput", "8.0",
+                  key_col="name")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "hybrid-pool goodput" in capsys.readouterr().err
+
+
+# -- malformed tables ---------------------------------------------------------
+
+def test_missing_column_is_a_finding_not_a_crash(tmp_path, capsys):
+    def drop_goodput(header, rows):
+        i = header.index("goodput")
+        return ([c for c in header if c != "goodput"],
+                [[x for j, x in enumerate(r) if j != i] for r in rows])
+    rc = run_gate(tmp_path,
+                  fresh_override={"table_paged.csv": drop_goodput})
+    assert rc == 1
+    assert "missing column 'goodput'" in capsys.readouterr().err
+
+
+def test_missing_key_column_is_a_finding_not_a_crash(tmp_path, capsys):
+    def drop_path(header, rows):
+        i = header.index("path")
+        return ([c for c in header if c != "path"],
+                [[x for j, x in enumerate(r) if j != i] for r in rows])
+    rc = run_gate(tmp_path,
+                  fresh_override={"table_paged.csv": drop_path})
+    assert rc == 1                       # not a KeyError traceback
+    err = capsys.readouterr().err
+    assert "row set changed" in err or "missing" in err
+
+
+def test_non_numeric_cell_is_a_finding(tmp_path, capsys):
+    over = mutate("table_paged.csv", "paged", "p99_ms", "fast!")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "non-numeric" in capsys.readouterr().err
+
+
+def test_empty_table_aborts_with_named_error(tmp_path):
+    write_tables(str(tmp_path / "base"))
+    fresh = write_tables(str(tmp_path / "fresh"))
+    open(os.path.join(fresh, "table_paged.csv"), "w").close()
+    with pytest.raises(SystemExit):
+        cr.main(["--results", fresh, "--baseline-dir",
+                 str(tmp_path / "base")])
+
+
+def test_missing_window_column_in_hybrid_fails(tmp_path, capsys):
+    over = mutate("table_hybrid.csv", "windowed", "window", "",
+                  key_col="name")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "no windowed rows with a window" in capsys.readouterr().err

@@ -81,16 +81,16 @@ def test_prefill_chunk_matches_monolithic_pools(params):
     prompt = _prompts([S])[0]
     mono = PagedKVCache(CFG, slots=1, n_pages=10, page_size=8, max_ctx=64)
     mono.alloc(0, S + 4)
-    logits_m, dense = T.prefill(params, CFG,
-                                {"tokens": jnp.asarray(prompt[None])})
-    kv = dense["layers"]
-    mono.write_prefill(0, kv["k"][:, 0], kv["v"][:, 0])
+    logits_m, raw = T.prefill(params, CFG,
+                              {"tokens": jnp.asarray(prompt[None])},
+                              raw_kv=True)
+    mono.write_prefill(0, T.raw_prefill_group_kv(CFG, raw))
     lm = np.asarray(logits_m)[0, 0]
 
     for chunk in (8, 5, 16, 32):
         ch = PagedKVCache(CFG, slots=1, n_pages=10, page_size=8, max_ctx=64)
-        pages = ch.alloc(0, S + 4)
-        cache = ch.chunk_cache(0)
+        pages = [p for _, p in ch.alloc(0, S + 4)]
+        cache = ch.chunk_cache(0, min(chunk, S))
         logits_c, off = None, 0
         while off < S:
             c = min(chunk, S - off)
@@ -101,12 +101,10 @@ def test_prefill_chunk_matches_monolithic_pools(params):
         assert int(np.asarray(cache["pos"])[0]) == S
         n_pg = ch.pages_needed(S)
         sel = np.asarray(pages[:n_pg])
-        km = np.asarray(mono.kpool)[:, sel].reshape(CFG.n_layers, -1,
-                                                    CFG.n_kv_heads,
-                                                    CFG.head_dim)[:, :S]
-        kc = np.asarray(cache["kpool"])[:, sel].reshape(CFG.n_layers, -1,
-                                                        CFG.n_kv_heads,
-                                                        CFG.head_dim)[:, :S]
+        km = np.asarray(mono.kpool["layers"])[:, sel] \
+            .reshape(CFG.n_layers, -1, CFG.n_kv_heads, CFG.head_dim)[:, :S]
+        kc = np.asarray(cache["groups"]["layers"]["kpool"])[:, sel] \
+            .reshape(CFG.n_layers, -1, CFG.n_kv_heads, CFG.head_dim)[:, :S]
         np.testing.assert_allclose(kc, km, atol=1e-4)
         lc = np.asarray(logits_c)[0, 0]
         np.testing.assert_allclose(lc, lm, atol=1e-4)
@@ -114,9 +112,9 @@ def test_prefill_chunk_matches_monolithic_pools(params):
 
 
 def test_prefill_chunk_rejects_unsupported_arch():
-    gcfg = get_config("gemma3-4b")
-    with pytest.raises(NotImplementedError, match="dense uniform"):
-        T.prefill_chunk({}, gcfg, {"tokens": jnp.zeros((1, 4), jnp.int32)},
+    hcfg = get_config("hymba-1.5b")
+    with pytest.raises(NotImplementedError, match="dense/moe"):
+        T.prefill_chunk({}, hcfg, {"tokens": jnp.zeros((1, 4), jnp.int32)},
                         {})
 
 

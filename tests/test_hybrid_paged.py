@@ -1,0 +1,421 @@
+"""Sliding-window & local:global hybrid stacks on the paged continuous
+path, locked in by a cross-path differential harness.
+
+The contract under test: for *every* servable config in
+``src/repro/configs`` (dense uniform, uniform-windowed starcoder2-class,
+local:global gemma3-class, moe), any page size, any chunk size, and both
+paged-attention implementations (fused Pallas kernel in interpret mode /
+jnp gather+SDPA fallback), the paged ``ContinuousEngine``'s greedy
+outputs are token-identical to the contiguous-cache wave engine's — while
+sliding-window layer groups hold at most ``ceil(window/page_size) + 1``
+live pages regardless of decoded length, freeing out-of-window pages back
+to the pool mid-flight.
+
+Window masking itself is pinned against the direct-softmax oracle
+``kernels.ref.paged_attend_ref`` (no online softmax, no shared code with
+the kernel), and page accounting is property-tested under random
+admit/chunk/decode/retire sequences.
+
+Set ``REPRO_PAGED_MODES=jnp|pallas`` to restrict the sweep to one
+implementation (ci.yml runs the suite once per mode).
+"""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import (make_requests, pallas_modes, run_paged,
+                      run_wave_reference, servable_smoke_configs,
+                      smoke_params)
+from repro.configs import REGISTRY, get_config
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.serving.kv_cache import DUMMY_PAGE, PagedKVCache
+
+SERVABLE = servable_smoke_configs()
+WINDOWED = [(n, c) for n, c in SERVABLE if c.sliding_window]
+#: one representative per windowed class for the expensive page/chunk
+#: sweep: gemma3-4b (local:global) and starcoder2 (uniform window) —
+#: gemma3-12b smallifies to the same 2-layer 1:1 shape as gemma3-4b and
+#: still rides the cheap every-config identity test below
+SWEEP = [(n, c) for n, c in WINDOWED if n != "gemma3-12b"]
+
+#: wave-path result tokens per (config, prompts, budget), computed once
+#: per session — the reference does not depend on page size / chunk size
+#: / kernel impl, which is the point of the differential design
+_WAVE = {}
+
+RAGGED_LENS = (9, 14, 5)
+MAX_NEW = 4
+
+
+def _wave_tokens(name, cfg, lens, max_new):
+    key = (name, lens, max_new)
+    if key not in _WAVE:
+        reqs = make_requests(cfg, lens, max_new=max_new)
+        run_wave_reference(smoke_params(name), cfg, reqs)
+        _WAVE[key] = [r.result_tokens for r in reqs]
+    return _WAVE[key]
+
+
+def _assert_identical(name, cfg, *, page_size, chunk, use_pallas,
+                      lens=RAGGED_LENS, max_new=MAX_NEW):
+    want = _wave_tokens(name, cfg, lens, max_new)
+    reqs, eng = run_paged(smoke_params(name), cfg,
+                          make_requests(cfg, lens, max_new=max_new),
+                          page_size=page_size, chunk=chunk,
+                          use_pallas=use_pallas)
+    for w, r in zip(want, reqs):
+        assert r.result_tokens is not None, (name, r.rid)
+        assert np.array_equal(w, r.result_tokens), \
+            (name, page_size, chunk, use_pallas, r.rid, w, r.result_tokens)
+    # nothing leaked: every allocatable page is back on the free lists
+    assert eng.cache.free_pages == sum(
+        n - 1 for n in eng.cache._group_pages.values())
+
+
+# -- the differential sweep (acceptance) -------------------------------------
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+@pytest.mark.parametrize("name,cfg", SERVABLE, ids=[n for n, _ in SERVABLE])
+def test_token_identity_every_servable_config(name, cfg, use_pallas):
+    """Every servable config in src/repro/configs, paged vs contiguous."""
+    _assert_identical(name, cfg, page_size=8, chunk=None,
+                      use_pallas=use_pallas)
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+@pytest.mark.parametrize("page_size,chunk",
+                         [(4, None), (4, 8), (8, 8), (8, 16)])
+@pytest.mark.parametrize("name,cfg", SWEEP, ids=[n for n, _ in SWEEP])
+def test_windowed_page_and_chunk_size_sweep(name, cfg, page_size, chunk,
+                                            use_pallas):
+    """gemma3-class and starcoder2-class stacks across page sizes and
+    chunk sizes — including windows that do not divide the page size,
+    chunks larger than the window, and ragged prompts longer than the
+    window."""
+    _assert_identical(name, cfg, page_size=page_size, chunk=chunk,
+                      use_pallas=use_pallas, lens=(13, 22, 5), max_new=6)
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_local_global_tail_segment(use_pallas):
+    """A local:global depth that does not divide into whole superblocks
+    leaves a windowed *tail* segment (full-scale gemma3 has one; the
+    smallified configs happen not to) — the tail must route through its
+    own window-group tables like any other segment."""
+    import dataclasses
+
+    import jax
+
+    from repro.models import transformer
+
+    cfg = dataclasses.replace(dict(SERVABLE)["gemma3-4b"], n_layers=3,
+                              name="gemma3-tail-smoke")
+    groups = {g.name: g for g in transformer.paged_layer_groups(cfg)}
+    assert set(groups) == {"local", "global", "tail"}
+    assert groups["tail"].window == cfg.sliding_window
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    lens, max_new = (13, 22, 5), 6
+    wave = make_requests(cfg, lens, max_new=max_new)
+    run_wave_reference(params, cfg, wave)
+    for chunk in (None, 8):
+        reqs, _ = run_paged(params, cfg,
+                            make_requests(cfg, lens, max_new=max_new),
+                            page_size=4, chunk=chunk,
+                            use_pallas=use_pallas)
+        for w, r in zip(wave, reqs):
+            assert np.array_equal(w.result_tokens, r.result_tokens), \
+                (chunk, r.rid)
+
+
+def test_window_live_page_bound_and_midflight_frees():
+    """Acceptance: decoding far past the window keeps every window
+    group's live page count at <= ceil(window/page_size) + 1, and the
+    freed pages are visible on the pool's free list *mid-flight* (not
+    only at retirement)."""
+    name, cfg = WINDOWED[0]
+    ps = 4
+    reqs = make_requests(cfg, (9,), max_new=40)
+    params = smoke_params(name)
+
+    from repro.models.modules import ExecContext
+    from repro.serving.paged_engine import ContinuousEngine
+
+    eng = ContinuousEngine(params, cfg, slots=1, page_size=ps, max_ctx=64,
+                           policy="serve", ctx=ExecContext())
+    for r in reqs:
+        eng.submit(r)
+    seen, free_during = [], []
+    orig = eng._decode_step
+
+    def instrumented():
+        orig()
+        for g in eng.cache.groups:
+            if g.window is not None:
+                seen.append(eng.cache.live_pages(0, g.name))
+        free_during.append(eng.cache.free_pages)
+    eng._decode_step = instrumented
+    eng.run()
+
+    cap = math.ceil(cfg.sliding_window / ps) + 1
+    assert seen and max(seen) <= cap, (max(seen), cap)
+    # pages came back to the pool while the request was still decoding
+    assert max(free_during[:-1]) > min(free_during[:-1])
+
+
+def test_windowed_admission_sized_by_window_not_context():
+    """A pool far too small for the request's total token count still
+    admits it when every layer group is windowed: peak demand is the
+    window cap, not the context."""
+    name, cfg = next((n, c) for n, c in WINDOWED if not c.local_global_ratio)
+    ps = 8
+    cap = math.ceil(cfg.sliding_window / ps) + 1
+    reqs = make_requests(cfg, (9,), max_new=50)          # ~58 positions
+    assert math.ceil(58 / ps) > cap + 1                  # dense could not fit
+    reqs, eng = run_paged(smoke_params(name), cfg, reqs, page_size=ps,
+                          n_pages=cap + 1)               # window demand only
+    assert not reqs[0].dropped and reqs[0].tokens_done == 50
+    # identity vs an ample-pool run of the same engine flavor
+    ample, _ = run_paged(smoke_params(name), cfg,
+                         make_requests(cfg, (9,), max_new=50), page_size=ps)
+    assert np.array_equal(ample[0].result_tokens, reqs[0].result_tokens)
+
+
+# -- window masking vs the direct-softmax oracle -----------------------------
+
+def _oracle_case(rng, *, n_pages, ps, Hkv, G, D, B, P, Sq, pos):
+    H = Hkv * G
+    kpool = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, D))
+                        .astype(np.float32))
+    vpool = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, D))
+                        .astype(np.float32))
+    ids = rng.permutation(np.arange(1, n_pages))[:B * P]
+    if len(ids) < B * P:
+        ids = rng.integers(1, n_pages, B * P)
+    bt = jnp.asarray(np.asarray(ids).reshape(B, P).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)).astype(np.float32))
+    return q, kpool, vpool, bt, jnp.asarray(np.asarray(pos, np.int32))
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_window_masking_matches_oracle(use_pallas):
+    """Decode and chunk shapes across window sizes — including windows
+    smaller than a page, spanning several pages, and larger than the
+    whole context — against the direct-softmax oracle."""
+    rng = np.random.default_rng(0)
+    for Sq, pos in ((1, [5, 13]), (1, [0, 15]), (4, [0, 8]), (6, [2, 9])):
+        q, kp, vp, bt, posj = _oracle_case(rng, n_pages=12, ps=4, Hkv=2,
+                                           G=2, D=8, B=2, P=4, Sq=Sq,
+                                           pos=pos)
+        scale = q.shape[-1] ** -0.5
+        for window in (1, 3, 4, 7, 100):
+            want = np.asarray(kernel_ref.paged_attend_ref(
+                q, kp, vp, bt, posj, scale, window=window))
+            got = np.asarray(kernel_ops.paged_attend(
+                q, kp, vp, bt, posj, scale=scale, use_pallas=use_pallas,
+                window=window))
+            np.testing.assert_allclose(got, want, atol=1e-5,
+                                       err_msg=f"Sq={Sq} W={window}")
+            assert np.isfinite(got).all()
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_window_masking_excludes_stale_pages(use_pallas):
+    """Clobbering a page that lies entirely under the window horizon (the
+    pages kv_cache frees mid-flight) must not change the output — the
+    in-kernel window mask is what makes the mid-flight free safe."""
+    rng = np.random.default_rng(1)
+    ps, P, W = 4, 4, 5
+    q, kp, vp, bt, pos = _oracle_case(rng, n_pages=12, ps=ps, Hkv=2, G=2,
+                                      D=8, B=1, P=P, Sq=1, pos=[14])
+    scale = q.shape[-1] ** -0.5
+    base = np.asarray(kernel_ops.paged_attend(
+        q, kp, vp, bt, pos, scale=scale, use_pallas=use_pallas, window=W))
+    # slots <= 14 - 5 are out of window; page 1 covers slots 4..7 < 10
+    stale_page = int(np.asarray(bt)[0, 1])
+    kp2 = kp.at[stale_page].set(99.0)
+    vp2 = vp.at[stale_page].set(-99.0)
+    pert = np.asarray(kernel_ops.paged_attend(
+        q, kp2, vp2, bt, pos, scale=scale, use_pallas=use_pallas, window=W))
+    np.testing.assert_array_equal(pert, base)
+    # ...and pointing the stale entry at the dummy page (what the cache
+    # actually does when it frees mid-flight) is equally invisible
+    bt2 = np.asarray(bt).copy()
+    bt2[0, 1] = DUMMY_PAGE
+    dummy = np.asarray(kernel_ops.paged_attend(
+        q, kp, vp, jnp.asarray(bt2), pos, scale=scale,
+        use_pallas=use_pallas, window=W))
+    np.testing.assert_allclose(dummy, base, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_scatter_skip_page_suppresses_retired_destinations(use_pallas):
+    """The write-side window mask: chunk pages whose table entries were
+    parked on the dummy page are not written (several lanes' retired
+    entries alias the same physical page — unsuppressed in-place writes
+    would be order-dependent), while real destinations match the
+    oracle."""
+    rng = np.random.default_rng(2)
+    n_pages, ps, H, D, B, C = 10, 4, 2, 8, 2, 12
+    pool = jnp.asarray(rng.normal(size=(n_pages, ps, H, D))
+                       .astype(np.float32))
+    bt = jnp.asarray(np.array([[1, DUMMY_PAGE, 2],
+                               [DUMMY_PAGE, 3, 4]], np.int32))
+    pos = jnp.asarray(np.zeros(2, np.int32))
+    chunk = jnp.asarray(rng.normal(size=(B, C, H, D)).astype(np.float32))
+    got = kernel_ops.scatter_chunk(pool, bt, pos, chunk,
+                                   use_pallas=use_pallas, skip_page=0)
+    want = np.asarray(kernel_ref.scatter_chunk_ref(pool, bt, pos, chunk))
+    got = np.asarray(got)
+    np.testing.assert_array_equal(got[0], np.asarray(pool)[0])  # suppressed
+    for page in (1, 2, 3, 4):                                   # written
+        np.testing.assert_allclose(got[page], want[page])
+
+
+# -- page-accounting property test -------------------------------------------
+
+def _check_invariants(cache):
+    """The pool-soundness invariants after any operation sequence."""
+    for g in cache.groups:
+        n_pg = cache._group_pages[g.name]
+        free = cache._free[g.name]
+        owned_all = [p for s in range(cache.slots)
+                     for p in cache._owned[g.name][s].values()]
+        # no page leaked, none double-freed / double-owned
+        assert len(free) == len(set(free)), g.name
+        assert len(owned_all) == len(set(owned_all)), g.name
+        assert not set(free) & set(owned_all), g.name
+        assert set(free) | set(owned_all) == set(range(1, n_pg)), g.name
+        assert DUMMY_PAGE not in owned_all
+        # live block tables reference only owned pages (or the dummy)
+        for s in range(cache.slots):
+            owned = cache._owned[g.name][s]
+            row = cache.block_tables[g.name][s]
+            live = {j: p for j, p in enumerate(row) if p != DUMMY_PAGE}
+            assert live == owned, (g.name, s, live, owned)
+        # reservations never over-commit the pool
+        assert cache.available(g) >= 0, g.name
+
+
+def _zero_prefill_kv(cfg, cache, S):
+    """A synthetic raw-prefill K/V pytree of the right per-group shapes
+    (the property test exercises page accounting, not numerics)."""
+    return {g.name: {"k": jnp.zeros((len(g.layers), S, cfg.n_kv_heads,
+                                     cfg.head_dim)),
+                     "v": jnp.zeros((len(g.layers), S, cfg.n_kv_heads,
+                                     cfg.head_dim))}
+            for g in cache.groups}
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_page_accounting_property(seed):
+    """Random admit / prefill (monolithic and chunked) / decode / retire
+    sequences — with mid-flight window frees — never leak, double-free,
+    or dangle a page, and window groups respect their live-page cap
+    during decode.  Ops follow the engine's contract: monolithic prompts
+    land via ``write_prefill``, chunk advances never exceed the admitted
+    chunk size, decode advances one position with its write page prepared
+    first (what ``decode_cache`` does for live lanes)."""
+    rng = np.random.default_rng(seed)
+    cfg = get_config(("gemma3-4b", "starcoder2-15b", "gemma3-12b")
+                     [seed % 3]).reduced()
+    ps = int(rng.choice([3, 4, 8]))          # odd page size on purpose
+    max_ctx = 48
+    cache = PagedKVCache(cfg, slots=3, n_pages=int(rng.integers(4, 20)),
+                         page_size=ps, max_ctx=max_ctx)
+    # slot -> [total positions, prompt len, chunk or None, absorbed]
+    live = {}
+    for _ in range(60):
+        op = rng.integers(0, 4)
+        if op == 0 and len(live) < cache.slots:          # admit
+            slot = next(s for s in range(cache.slots) if s not in live)
+            total = int(rng.integers(2, max_ctx + 1))
+            prompt = int(rng.integers(1, total + 1))
+            chunk = None if rng.integers(0, 2) else ps * int(
+                rng.integers(1, 3))
+            if cache.can_admit(total, chunk):
+                cache.alloc(slot, total, chunk)
+                if chunk is None:                        # monolithic
+                    cache.write_prefill(
+                        slot, _zero_prefill_kv(cfg, cache, prompt))
+                    live[slot] = [total, prompt, chunk, prompt]
+                else:
+                    live[slot] = [total, prompt, chunk, 0]
+        elif op == 1 and live:                           # prefill chunk
+            slot = int(rng.choice(list(live)))
+            total, prompt, chunk, done = live[slot]
+            if chunk is not None and done < prompt:
+                c = min(chunk, prompt - done)
+                cache.prepare_tokens(slot, c)
+                cache.advance(slot, c)
+                live[slot][3] += c
+        elif op == 2 and live:                           # decode one token
+            slot = int(rng.choice(list(live)))
+            total, prompt, chunk, done = live[slot]
+            if done >= prompt and done < total:
+                cache.prepare_tokens(slot, 1)
+                cache.advance(slot, 1)
+                live[slot][3] += 1
+                # the decode-steady window bound (acceptance)
+                for g in cache.groups:
+                    cap = cache.win_cap(g)
+                    if cap is not None:
+                        assert cache.live_pages(slot, g.name) <= cap
+        elif op == 3 and live:                           # retire
+            slot = int(rng.choice(list(live)))
+            cache.free(slot)
+            del live[slot]
+        _check_invariants(cache)
+    for slot in list(live):
+        cache.free(slot)
+    _check_invariants(cache)
+    assert cache.free_pages == sum(n - 1
+                                   for n in cache._group_pages.values())
+    assert cache.utilization() == pytest.approx(0.0)
+
+
+# -- reduced() paged invariants (the smallify fix) ---------------------------
+
+def test_reduced_configs_keep_paged_window_invariants():
+    """``ModelConfig.reduced()`` must hand the paged path a sane window:
+    never larger than the original, never below 1 — for every config in
+    the registry — and the window-group page math must hold for page
+    sizes that do not divide the window (there is no divisibility
+    requirement)."""
+    from repro.models.transformer import paged_layer_groups, paged_supported
+
+    for name, cfg in sorted(REGISTRY.items()):
+        red = cfg.reduced()
+        if cfg.sliding_window:
+            assert red.sliding_window is not None
+            assert 1 <= red.sliding_window <= cfg.sliding_window, name
+        if not paged_supported(red):
+            continue
+        for ps in (3, 5, 8, 16):
+            cache = PagedKVCache(red, slots=2, n_pages=8, page_size=ps,
+                                 max_ctx=32)
+            for g in cache.groups:
+                cap = cache.win_cap(g)
+                if g.window is not None:
+                    assert 1 <= cap <= cache.table_width, (name, ps, cap)
+                    # the cap always covers the whole window (clamped to
+                    # the table): no page size strands in-window slots
+                    assert cap >= min(math.ceil(g.window / ps),
+                                      cache.table_width), (name, ps)
+
+
+def test_reduced_never_grows_a_tiny_window():
+    """A config whose real window is already below the smoke default must
+    keep it (growing the window would change what the smoke model
+    attends to vs. its full-scale counterpart)."""
+    import dataclasses
+
+    tiny = dataclasses.replace(get_config("starcoder2-15b"),
+                               sliding_window=3)
+    assert tiny.reduced().sliding_window == 3
+    assert get_config("starcoder2-15b").reduced().sliding_window == 8

@@ -57,11 +57,13 @@ def test_paged_gather_kernel_matches_ref():
 def test_kv_cache_alloc_free_accounting():
     cache = PagedKVCache(CFG, slots=2, n_pages=7, page_size=8, max_ctx=32)
     assert cache.free_pages == 6 and cache.table_width == 4
-    a = cache.alloc(0, 17)                     # 3 pages
-    assert len(a) == 3 and DUMMY_PAGE not in a
+    a = cache.alloc(0, 17)                     # 3 pages, all in "layers"
+    a_ids = [p for _, p in a]
+    assert len(a) == 3 and DUMMY_PAGE not in a_ids
+    assert all(gname == "layers" for gname, _ in a)
     assert cache.free_pages == 3
-    assert list(cache.block_tables[0, :3]) == a
-    assert all(cache.block_tables[0, 3:] == DUMMY_PAGE)
+    assert list(cache.block_tables["layers"][0, :3]) == a_ids
+    assert all(cache.block_tables["layers"][0, 3:] == DUMMY_PAGE)
     assert cache.utilization() == pytest.approx(0.5)
     b = cache.alloc(1, 24)                     # 3 pages
     assert not (set(a) & set(b))               # disjoint ownership
@@ -69,16 +71,17 @@ def test_kv_cache_alloc_free_accounting():
     freed = cache.free(0)
     assert sorted(freed) == sorted(a)
     assert cache.free_pages == 3 and cache.can_admit(24)
-    assert all(cache.block_tables[0] == DUMMY_PAGE) and cache.pos[0] == 0
+    assert all(cache.block_tables["layers"][0] == DUMMY_PAGE)
+    assert cache.pos[0] == 0
 
 
 def test_paged_decode_rejects_unsupported_arch(params):
-    gcfg = get_config("gemma3-4b")
-    with pytest.raises(NotImplementedError, match="dense uniform"):
-        T.paged_decode_step({}, gcfg, {"token": jnp.zeros((1, 1), jnp.int32)},
+    hcfg = get_config("hymba-1.5b")            # hybrid: ssm state per block
+    with pytest.raises(NotImplementedError, match="dense/moe"):
+        T.paged_decode_step({}, hcfg, {"token": jnp.zeros((1, 1), jnp.int32)},
                             {})
     with pytest.raises(NotImplementedError):
-        ContinuousEngine(params, gcfg)
+        ContinuousEngine(params, hcfg)
 
 
 # -- equivalence with the wave scheduler (acceptance) -----------------------
