@@ -31,8 +31,18 @@ Malformed tables (empty, or missing the gated columns) fail the gate
 with a named error rather than a traceback — a refactor that drops a
 column must not slip through as a crash-then-green rerun.
 
+3. **Trace invariants** (``--trace FILE``, repeatable).  Each exported
+   Chrome trace (``table_paged.py --trace`` / the examples' ``--trace``)
+   is replayed through :mod:`repro.obs.check_trace`; any violated serving
+   invariant — page conservation, reservation non-negativity, clock
+   monotonicity, exactly-once retirement — is a gate failure.  Because
+   the analytic clock is deterministic and tracing must not move it, the
+   CSVs regenerated *during a traced run* still have to match the
+   committed baselines byte-for-byte — that comparison doubles as the
+   zero-overhead check on the disabled-path contract.
+
 Usage:  python benchmarks/check_regression.py [--results DIR]
-            [--baseline-dir DIR] [--tol-pct 5]
+            [--baseline-dir DIR] [--tol-pct 5] [--trace FILE ...]
 Exit status 0 = pass, 1 = regression (messages on stderr).
 
 Unit-tested in tests/test_check_regression.py: ``main(argv)`` takes its
@@ -282,6 +292,9 @@ def main(argv=None) -> int:
                          "git show HEAD:results/")
     ap.add_argument("--tol-pct", type=float, default=5.0,
                     help="allowed relative worsening before failing (%%)")
+    ap.add_argument("--trace", action="append", default=[], metavar="FILE",
+                    help="exported Chrome trace(s) to audit with "
+                         "repro.obs.check_trace (repeatable)")
     args = ap.parse_args(argv)
 
     errors: list[str] = []
@@ -303,11 +316,18 @@ def main(argv=None) -> int:
                        args.tol_pct, errors)
     check_hybrid_orderings(hybrid_fresh, errors)
 
+    for trace_path in args.trace:
+        sys.path.insert(0, os.path.join(REPO, "src"))
+        from repro.obs.check_trace import check_file
+        for finding in check_file(trace_path):
+            errors.append(f"{os.path.basename(trace_path)}: {finding}")
+
     if errors:
         for e in errors:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
-    print(f"regression gate: {len(TABLES) + 2} tables OK "
+    traced = f" + {len(args.trace)} trace(s)" if args.trace else ""
+    print(f"regression gate: {len(TABLES) + 2} tables OK{traced} "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

@@ -21,6 +21,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the reward simulations (tables 1/2/fig1)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export the paged serving run as a Chrome trace "
+                         "(forwarded to table_paged)")
     args, _ = ap.parse_known_args()
 
     rows = []
@@ -45,7 +48,7 @@ def main() -> None:
 
     # --- Paged KV-cache vs wave serving on real compute -------------------
     import table_paged
-    tp = table_paged.main(verbose=False)
+    tp = table_paged.main(verbose=False, trace_path=args.trace)
     tp_wave = next(r for r in tp if r[0] == "wave")
     tp_paged = next(r for r in tp if r[0] == "paged")
     rows.append(("table_paged", float(tp_paged[6]) * 1e3,

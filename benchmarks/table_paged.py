@@ -17,11 +17,14 @@ Both serve every request to its full budget (``policy="serve"``), so the
 two paths emit the *same number of real tokens*; the table isolates what
 the barrier costs: higher p99 latency and lower goodput at equal work.
 
-Run:  PYTHONPATH=src python benchmarks/table_paged.py
-Writes results/table_paged.csv.
+Run:  PYTHONPATH=src python benchmarks/table_paged.py [--trace out.json]
+Writes results/table_paged.csv.  With ``--trace``, the paged run also
+exports a Chrome/Perfetto trace (lanes, pool gauges, request lifecycle on
+the analytic clock) that ``python -m repro.obs.check_trace`` audits.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -32,6 +35,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
+from repro.obs import Tracer, write_chrome
 from repro.serving.continuous import LatencyProfile
 from repro.serving.engine import ServingEngine
 from repro.serving.paged_engine import ContinuousEngine
@@ -94,9 +98,10 @@ def run_wave(params, cfg, profile, reqs):
     return reqs
 
 
-def run_paged(params, cfg, profile, reqs):
+def run_paged(params, cfg, profile, reqs, tracer=None):
     pe = ContinuousEngine(params, cfg, slots=SLOTS, page_size=8,
-                          max_ctx=64, policy="serve", profile=profile)
+                          max_ctx=64, policy="serve", profile=profile,
+                          tracer=tracer)
     for r in sorted(reqs, key=lambda r: r.t_arrive):
         pe.submit(r)
     pe.run()
@@ -113,13 +118,15 @@ def summarize(path, reqs):
             f"{np.percentile(lats, 99) * 1e3:.2f}", f"{goodput:.1f}"]
 
 
-def main(verbose: bool = True):
+def main(verbose: bool = True, trace_path: str = None):
     cfg = get_config(SIM_MODEL)
     profile = LatencyProfile(get_config(LAT_MODEL), AVG_BITS)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
 
+    tracer = Tracer() if trace_path else None
     wave = run_wave(params, cfg, profile, make_requests(profile))
-    paged = run_paged(params, cfg, profile, make_requests(profile))
+    paged = run_paged(params, cfg, profile, make_requests(profile),
+                      tracer=tracer)
     # equal-length prompts: the two disciplines must emit *identical*
     # tokens per request — the comparison is purely about time
     wave_toks = {r.rid: r.result_tokens for r in wave}
@@ -136,8 +143,15 @@ def main(verbose: bool = True):
     write_table(os.path.join(RESULTS, "table_paged.csv"),
                 ["path", "offered", "served", "tokens", "hit_rate",
                  "p50_ms", "p99_ms", "goodput"], rows)
+    if trace_path:
+        write_chrome(tracer.events, trace_path)
+        if verbose:
+            print(f"wrote {len(tracer.events)} trace events -> {trace_path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export the paged run as a Chrome/Perfetto trace")
+    main(trace_path=ap.parse_args().trace)

@@ -58,7 +58,7 @@ def main(seed: int = 1, verbose: bool = True):
             name = f"static-{c.model_name.replace('qwen2.5-', '')}-g{c.gamma:g}"
             reports[name] = run_router([c] * len(cands), arrivals, seed=seed)
         for name, rep in reports.items():
-            rows.append([mix, name] + rep.row())
+            rows.append([mix, name] + rep.format_row())
             if verbose:
                 print(f"{mix:8s} {name:18s} n={len(arrivals):4d} "
                       f"hit={rep.hit_rate:.3f} p50={rep.p50_s*1e3:7.1f}ms "

@@ -1,20 +1,33 @@
 """Fleet serving walkthrough: deadline-aware routing over live traffic.
 
-    PYTHONPATH=src python examples/serve_fleet.py
+    PYTHONPATH=src python examples/serve_fleet.py [--trace out.json]
 
 Builds a four-engine pool spanning the FPX grid's speed/quality range,
 replays a bursty mixed workload (HFT-style tick reactions + chat turns)
 through it, and shows where the router sends each traffic class, what the
 drop/degrade admission policy does under bursts, and how the fleet's
 goodput compares with deploying any single operating point everywhere.
+
+``--trace out.json`` exports the routed run as a Chrome/Perfetto trace —
+each engine becomes its own Perfetto process (lanes + queue), with the
+router's dispatch/retire stream on top — and the per-class summary grows
+the slack attribution: how much of each class's latency was queue wait
+vs. prefill vs. decode.
 """
+import argparse
 import sys
 sys.path.insert(0, "src")
 
 from collections import Counter
 
+from repro.obs import Tracer, check, write_chrome
 from repro.serving import FleetRouter, metrics, traffic
 from repro.serving.fleet import demo_pool, demo_quality as quality
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace", metavar="OUT.json", default=None,
+                help="export a Chrome/Perfetto trace of the routed run")
+args = ap.parse_args()
 
 HORIZON = 20.0
 
@@ -30,7 +43,8 @@ n_cls = Counter(r.cls_name for r in arrivals)
 print(f"\n# workload: {len(arrivals)} requests over {HORIZON:.0f}s of "
       f"simulated time ({dict(n_cls)})")
 
-router = FleetRouter(cands, quality=quality, slots=4)
+tracer = Tracer() if args.trace else None
+router = FleetRouter(cands, quality=quality, slots=4, tracer=tracer)
 done = router.run([a.fresh() for a in arrivals])
 
 print("\n# where each traffic class was routed:")
@@ -45,9 +59,14 @@ print(f"\n# fleet SLOs: hit-rate {rep.hit_rate:.3f}, "
       f"p50 {rep.p50_s*1e3:.1f} ms, p99 {rep.p99_s*1e3:.1f} ms, "
       f"dropped {rep.dropped}, degraded {rep.degraded}, "
       f"goodput {rep.goodput:.1f}")
+print(f"#   streaming: ttft p50 {rep.ttft_p50_s*1e3:.1f} ms / "
+      f"p99 {rep.ttft_p99_s*1e3:.1f} ms, itl p50 {rep.itl_p50_s*1e3:.2f} ms")
+print("#   per-class slack attribution (mean ms: queue / prefill / decode):")
 for nm, sub in (rep.per_class or {}).items():
     print(f"    {nm:8s} hit {sub.hit_rate:.3f}  p99 {sub.p99_s*1e3:7.1f} ms  "
-          f"goodput {sub.goodput:.1f}")
+          f"goodput {sub.goodput:7.1f}  "
+          f"slack {sub.queue_s*1e3:6.2f} / {sub.prefill_s*1e3:6.2f} / "
+          f"{sub.decode_s*1e3:6.2f}")
 
 print("\n# versus deploying one operating point fleet-wide (equal capacity):")
 for c in cands:
@@ -57,3 +76,12 @@ for c in cands:
           f"hit {s.hit_rate:.3f}  goodput {s.goodput:7.1f}")
 print(f"  fleet router                        "
       f"hit {rep.hit_rate:.3f}  goodput {rep.goodput:7.1f}")
+
+if args.trace:
+    findings = check(tracer.events)
+    write_chrome(tracer.events, args.trace)
+    print(f"\nwrote {len(tracer.events)} events -> {args.trace} "
+          f"(load at https://ui.perfetto.dev); "
+          f"invariants: {'OK' if not findings else findings}")
+    if findings:
+        sys.exit(1)

@@ -1,6 +1,7 @@
 """Paged continuous serving driver: the no-barrier engine on real compute.
 
-    PYTHONPATH=src python examples/serve_paged.py
+    PYTHONPATH=src python examples/serve_paged.py [--trace out.json]
+                                                  [--pallas]
 
 Streams one seeded arrival trace of greedy requests through both
 real-compute serving disciplines — the padded-wave scheduler and the paged
@@ -9,7 +10,15 @@ per-request timeline.  Watch the paged side admit late arrivals into lanes
 (and pages) freed by earlier retirements while long requests are still
 decoding; the wave side makes everyone in a wave wait for its slowest
 member plus the barrier.
+
+``--trace out.json`` exports the run as a Chrome/Perfetto trace (open at
+https://ui.perfetto.dev — one track per lane plus the pool gauges) and
+prints the slack attribution: where each served request's time actually
+went.  ``--pallas`` runs the fused Pallas kernels instead of the jnp
+fallback (same tokens, same clock — the trace invariants must hold on
+both implementations).
 """
+import argparse
 import sys
 sys.path.insert(0, "src")
 
@@ -18,9 +27,19 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer
+from repro.models.modules import ExecContext
+from repro.obs import Tracer, check, write_chrome
+from repro.serving import metrics
 from repro.serving.continuous import LatencyProfile
 from repro.serving.paged_engine import ContinuousEngine
 from repro.serving.scheduler import Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--trace", metavar="OUT.json", default=None,
+                help="export a Chrome/Perfetto trace of the run")
+ap.add_argument("--pallas", action="store_true",
+                help="use the fused Pallas kernels (default: jnp fallback)")
+args = ap.parse_args()
 
 sim = get_config("qwen-sim-1.5b")
 full = get_config("qwen2.5-1.5b")
@@ -42,8 +61,11 @@ def trace():
             for i, (t, new) in enumerate(spec)]
 
 
+tracer = Tracer() if args.trace else None
 engine = ContinuousEngine(params, sim, slots=2, page_size=8, max_ctx=64,
-                          policy="serve", profile=profile)
+                          policy="serve", profile=profile,
+                          ctx=ExecContext(use_pallas=args.pallas),
+                          tracer=tracer)
 reqs = trace()
 for r in reqs:
     engine.submit(r)
@@ -62,3 +84,20 @@ print(f"\npage reuse across requests: {reused or 'none'} "
 print(f"all {len(reqs)} served, "
       f"{sum(bool(r.met_deadline) for r in reqs)} met their deadline; "
       f"pool fully returned: {engine.cache.free_pages == engine.cache.n_pages - 1}")
+
+rep = metrics.summarize(reqs, max(r.t_finish for r in reqs))
+print(f"\n# streaming SLOs: ttft p50 {rep.ttft_p50_s*1e3:.2f} ms / "
+      f"p99 {rep.ttft_p99_s*1e3:.2f} ms, "
+      f"itl p50 {rep.itl_p50_s*1e3:.3f} ms / p99 {rep.itl_p99_s*1e3:.3f} ms")
+print(f"# slack attribution (mean per served request): "
+      f"queue {rep.queue_s*1e3:.2f} ms, prefill {rep.prefill_s*1e3:.2f} ms, "
+      f"decode {rep.decode_s*1e3:.2f} ms")
+
+if args.trace:
+    findings = check(tracer.events)
+    write_chrome(tracer.events, args.trace)
+    print(f"\nwrote {len(tracer.events)} events -> {args.trace} "
+          f"(load at https://ui.perfetto.dev); "
+          f"invariants: {'OK' if not findings else findings}")
+    if findings:
+        sys.exit(1)

@@ -1,0 +1,42 @@
+"""Observability: clock-native tracing, streaming metrics, trace audits.
+
+The serving stack's load-bearing abstraction is the analytic clock
+(``core.latency`` roofline seconds) — admission, routing, and every
+committed benchmark price against it.  This package makes *where those
+seconds go* observable:
+
+* :mod:`~repro.obs.trace` — typed span/instant/counter events on the
+  analytic clock (wall-clock recorded alongside), a zero-overhead-when-
+  disabled :data:`~repro.obs.trace.NULL` tracer, and per-engine track
+  scoping.  Every serving path emits: request lifecycle (arrive ->
+  queue -> admit -> prefill chunks -> first token -> tokens ->
+  finish/drop/degrade), engine step composition, and the page pool's
+  alloc/free/reserve lifecycle.
+* :mod:`~repro.obs.export` — Chrome ``trace_event`` JSON (open in
+  Perfetto: one process per engine, one thread per lane/pool/queue) and
+  the modeled-vs-wall :func:`~repro.obs.export.drift_report`.
+* :mod:`~repro.obs.sink` — a streaming metrics sink with seeded
+  reservoir percentiles feeding the extended
+  :class:`~repro.serving.metrics.SLOReport` (TTFT / inter-token p50/p99,
+  per-class queue/prefill/decode slack attribution).
+* :mod:`~repro.obs.check_trace` — replays any event stream and asserts
+  the stack's conservation laws (page conservation, reservation
+  non-negativity, per-lane clock monotonicity, exactly-once retire), so
+  every traced run doubles as a correctness audit.
+
+Wiring: pass ``tracer=Tracer()`` to ``ContinuousEngine``,
+``ContinuousBatcher``, ``Scheduler``, or ``FleetRouter`` (the router
+scopes one shared tracer per engine), then ``export.write_chrome
+(tracer.events, path)`` and/or ``check_trace.check(tracer.events)``.
+"""
+from repro.obs.check_trace import check, check_file
+from repro.obs.export import drift_report, from_chrome, to_chrome, \
+    write_chrome
+from repro.obs.sink import MetricsSink, Reservoir
+from repro.obs.trace import NULL, Event, NullTracer, Tracer
+
+__all__ = [
+    "Event", "Tracer", "NullTracer", "NULL", "MetricsSink", "Reservoir",
+    "to_chrome", "from_chrome", "write_chrome", "drift_report",
+    "check", "check_file",
+]

@@ -1,0 +1,214 @@
+"""Trace-driven invariant checker: replay an event stream, prove the laws.
+
+The serving stack's correctness properties used to be re-derived ad hoc
+per test (the PR 4 aliasing race and the PR 5 page-accounting bugs were
+each caught by bespoke harnesses).  This module turns any traced run —
+benchmark, example, CI scenario — into a standing audit by replaying its
+event stream and asserting the conservation laws the stack promises:
+
+1. **Page conservation** (per engine pool, per layer group).  A page is
+   allocated only off the free list and freed only while live; the dummy
+   page (id 0) and out-of-range ids are never allocated; a slot never
+   holds more pages than its reservation.  When every admitted request
+   has retired, no page is live.
+2. **Reservation non-negativity.**  After every pool event,
+   ``free - sum over slots of (reserved - owned)+ >= 0`` — the invariant
+   that makes the sliding window's lazy mid-flight allocation
+   deadlock-free (kv_cache's "Reservations" contract).
+3. **Clock monotonicity per lane/engine track.**  Step, prefill, and
+   token events on one track never move the analytic clock backwards,
+   and spans never have negative duration.
+4. **Exactly-once retire.**  Every admitted request retires exactly once
+   (finish or drop), never both, never twice; a finish implies an
+   admission.  Drops without admission are legal (admission-time policy
+   rejections).
+
+Run it on an exported Chrome trace (``benchmarks/table_paged.py --trace``
+or the examples' ``--trace out.json``):
+
+    PYTHONPATH=src python -m repro.obs.check_trace out.json [...]
+
+Exit 0 = all invariants hold; 1 = findings (one per line on stderr).
+``check(events)`` is the library entry point for in-memory streams.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_FREE,
+                             PAGE_RESERVE, POOL_CONFIG, REQ_ADMIT, REQ_DROP,
+                             REQ_FINISH, REQ_FIRST_TOKEN, REQ_PREFILL,
+                             REQ_PREFILL_CHUNK, REQ_TOKEN, WAVE_STEP)
+
+#: events whose analytic timestamps must be non-decreasing per track
+#: (queue spans and arrivals are excluded by design: EDF admission emits
+#: them out of arrival order on shared tracks)
+_MONOTONIC = {ENGINE_STEP, WAVE_STEP, REQ_PREFILL, REQ_PREFILL_CHUNK,
+              REQ_TOKEN, REQ_FIRST_TOKEN, PAGE_ALLOC, PAGE_FREE,
+              PAGE_RESERVE}
+_EPS = 1e-12
+
+
+class _Pool:
+    """Replayed page-accounting state of one engine's pool track."""
+
+    def __init__(self, track: str, groups: Dict[str, int], slots: int):
+        self.track = track
+        self.slots = slots
+        self.free: Dict[str, Set[int]] = {
+            g: set(range(1, int(n))) for g, n in groups.items()}
+        self.n_pages = {g: int(n) for g, n in groups.items()}
+        #: (group, slot) -> set of live page ids
+        self.owned: Dict[Tuple[str, int], Set[int]] = {}
+        self.reserved: Dict[Tuple[str, int], int] = {}
+
+    def _chk_available(self, errors: List[str], where: str) -> None:
+        for g in self.free:
+            short = sum(max(0, n - len(self.owned.get((gg, s), ())))
+                        for (gg, s), n in self.reserved.items() if gg == g)
+            avail = len(self.free[g]) - short
+            if avail < 0:
+                errors.append(
+                    f"{self.track}: reservation accounting negative for "
+                    f"group {g!r} after {where} (free {len(self.free[g])}, "
+                    f"unmet reservations {short})")
+
+    def apply(self, ev: Event, errors: List[str]) -> None:
+        a = ev.args or {}
+        g = a.get("group")
+        if g not in self.free:
+            errors.append(f"{self.track}: {ev.name} for unknown group {g!r}")
+            return
+        slot = int(a.get("slot", -1))
+        if ev.name == PAGE_RESERVE:
+            pages = int(a.get("pages", 0))
+            if pages:
+                self.reserved[(g, slot)] = pages
+            else:
+                self.reserved.pop((g, slot), None)
+                if self.owned.get((g, slot)):
+                    errors.append(
+                        f"{self.track}: reservation for {g}/slot{slot} "
+                        f"cleared while {len(self.owned[(g, slot)])} pages "
+                        "still live")
+        elif ev.name == PAGE_ALLOC:
+            page = int(a.get("page", -1))
+            if page == 0:
+                errors.append(f"{self.track}: dummy page allocated "
+                              f"({g}/slot{slot})")
+            elif not 0 < page < self.n_pages[g]:
+                errors.append(f"{self.track}: page {page} out of range for "
+                              f"group {g!r} (n_pages {self.n_pages[g]})")
+            elif page not in self.free[g]:
+                errors.append(f"{self.track}: page {g}:{page} allocated "
+                              "while not on the free list (double alloc)")
+            else:
+                self.free[g].discard(page)
+                own = self.owned.setdefault((g, slot), set())
+                own.add(page)
+                if len(own) > self.reserved.get((g, slot), 0):
+                    errors.append(
+                        f"{self.track}: slot {slot} holds {len(own)} pages "
+                        f"of {g!r} beyond its reservation "
+                        f"({self.reserved.get((g, slot), 0)})")
+        elif ev.name == PAGE_FREE:
+            page = int(a.get("page", -1))
+            own = self.owned.get((g, slot), set())
+            if page not in own:
+                errors.append(f"{self.track}: page {g}:{page} freed by slot "
+                              f"{slot} that does not own it (double free?)")
+            else:
+                own.discard(page)
+                self.free[g].add(page)
+        self._chk_available(errors, f"{ev.name} t={ev.t0:.6f}")
+
+    def live_pages(self) -> int:
+        return sum(len(o) for o in self.owned.values())
+
+
+def check(events: Sequence[Event]) -> List[str]:
+    """Replay ``events`` and return every invariant violation found."""
+    errors: List[str] = []
+    pools: Dict[str, _Pool] = {}
+    last_t: Dict[str, float] = {}
+    admitted: Set = set()
+    retired: Dict = {}                    # rid -> "finish" | "drop"
+
+    for ev in events:
+        a = ev.args or {}
+        # -- clock monotonicity ------------------------------------------
+        if ev.name in _MONOTONIC:
+            prev = last_t.get(ev.track)
+            if prev is not None and ev.t0 < prev - _EPS:
+                errors.append(f"{ev.track}: clock moved backwards at "
+                              f"{ev.name} ({prev:.9f} -> {ev.t0:.9f})")
+            last_t[ev.track] = max(prev or ev.t0, ev.t0)
+        if ev.kind == "span" and ev.t1 is not None and ev.t1 < ev.t0 - _EPS:
+            errors.append(f"{ev.track}: negative-duration span {ev.name} "
+                          f"({ev.t0:.9f} -> {ev.t1:.9f})")
+        # -- pool replay -------------------------------------------------
+        if ev.name == POOL_CONFIG:
+            if ev.track in pools:
+                errors.append(f"{ev.track}: duplicate pool.config")
+            pools[ev.track] = _Pool(ev.track, a.get("groups", {}),
+                                    int(a.get("slots", 0)))
+        elif ev.name in (PAGE_ALLOC, PAGE_FREE, PAGE_RESERVE):
+            pool = pools.get(ev.track)
+            if pool is None:
+                errors.append(f"{ev.track}: {ev.name} before pool.config")
+            else:
+                pool.apply(ev, errors)
+        # -- request lifecycle -------------------------------------------
+        elif ev.name == REQ_ADMIT:
+            rid = a.get("rid")
+            if rid in admitted:
+                errors.append(f"request {rid}: admitted twice")
+            admitted.add(rid)
+        elif ev.name in (REQ_FINISH, REQ_DROP):
+            rid = a.get("rid")
+            kind = "finish" if ev.name == REQ_FINISH else "drop"
+            if rid in retired:
+                errors.append(f"request {rid}: retired twice "
+                              f"({retired[rid]} then {kind})")
+            retired[rid] = kind
+            if kind == "finish" and rid not in admitted:
+                errors.append(f"request {rid}: finished without admission")
+
+    for rid in sorted(admitted - set(retired), key=repr):
+        errors.append(f"request {rid}: admitted but never retired")
+    if not (admitted - set(retired)):     # quiescent: no request live
+        for pool in pools.values():
+            if pool.live_pages():
+                errors.append(
+                    f"{pool.track}: {pool.live_pages()} pages still live "
+                    "after every admitted request retired (leak)")
+    return errors
+
+
+def check_file(path: str) -> List[str]:
+    """Audit an exported Chrome trace JSON file."""
+    from repro.obs.export import from_chrome
+    return check(from_chrome(path))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="replay a Chrome trace and assert serving invariants")
+    ap.add_argument("traces", nargs="+", help="exported trace JSON file(s)")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.traces:
+        errors = check_file(path)
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"TRACE INVARIANT [{path}]: {e}", file=sys.stderr)
+        else:
+            print(f"{path}: all trace invariants hold")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,138 @@
+"""Trace exporters: Chrome ``trace_event`` JSON and modeled-vs-wall drift.
+
+:func:`to_chrome` maps the tracer's typed events onto the Chrome trace
+format (the JSON flavor Perfetto and ``chrome://tracing`` both load):
+spans become complete ``"X"`` events, instants ``"i"``, counters ``"C"``.
+Tracks split at their first ``"/"``: the head names the *process* (one
+per engine / router), the tail the *thread* (lane, pool group, queue), so
+a fleet trace opens as one process row per engine with its lanes and
+pools as named threads underneath.  Analytic-clock seconds become
+microseconds — Perfetto's native unit — and every typed arg rides along
+in ``args``, which is what lets :mod:`repro.obs.check_trace` audit an
+exported file as faithfully as the in-memory stream
+(:func:`from_chrome` is the exact inverse).
+
+Wall-clock seconds at emission are preserved as ``args._wall_s``;
+:func:`drift_report` folds them into per-event-name (modeled, wall)
+totals — the measurable modeled-vs-real gap the ROADMAP's calibration
+loop (``core/calibrate.py``) needs as input.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.obs.trace import Event
+
+_US = 1e6                       # analytic seconds -> chrome microseconds
+_PH = {"span": "X", "instant": "i", "counter": "C"}
+_KIND = {v: k for k, v in _PH.items()}
+
+
+def _split_track(track: str) -> Tuple[str, str]:
+    """``"engine0/lane2"`` -> process ``"engine0"``, thread ``"lane2"``."""
+    if not track:
+        return "main", "main"
+    head, _, tail = track.partition("/")
+    return head, tail or "main"
+
+
+def to_chrome(events: Sequence[Event]) -> Dict:
+    """The ``{"traceEvents": [...]}`` dict for one event stream."""
+    pids: Dict[str, int] = {}
+    tids: Dict[Tuple[str, str], int] = {}
+    out: List[Dict] = []
+    meta: List[Dict] = []
+    for ev in events:
+        pname, tname = _split_track(ev.track)
+        pid = pids.get(pname)
+        if pid is None:
+            pid = pids[pname] = len(pids) + 1
+            meta.append({"ph": "M", "name": "process_name", "pid": pid,
+                         "tid": 0, "args": {"name": pname}})
+        tid = tids.get((pname, tname))
+        if tid is None:
+            tid = tids[(pname, tname)] = \
+                sum(p == pname for p, _ in tids) + 1
+            meta.append({"ph": "M", "name": "thread_name", "pid": pid,
+                         "tid": tid, "args": {"name": tname}})
+        args = dict(ev.args or {})
+        args["_wall_s"] = ev.wall
+        rec = {"name": ev.name, "ph": _PH[ev.kind], "ts": ev.t0 * _US,
+               "pid": pid, "tid": tid, "cat": "serving", "args": args}
+        if ev.kind == "span":
+            rec["dur"] = (ev.t1 - ev.t0) * _US
+        elif ev.kind == "instant":
+            rec["s"] = "t"
+        out.append(rec)
+    return {"traceEvents": meta + out, "displayTimeUnit": "ms"}
+
+
+def write_chrome(events: Sequence[Event], path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(to_chrome(events), f)
+
+
+def from_chrome(doc: Union[Dict, str]) -> List[Event]:
+    """Inverse of :func:`to_chrome`: rebuild the typed event stream from a
+    Chrome trace dict or a path to one.  Metadata events are dropped; the
+    track is reassembled from the process/thread names."""
+    if isinstance(doc, str):
+        with open(doc) as f:
+            doc = json.load(f)
+    pname: Dict[int, str] = {}
+    tname: Dict[Tuple[int, int], str] = {}
+    events: List[Event] = []
+    for rec in doc["traceEvents"]:
+        if rec["ph"] == "M":
+            if rec["name"] == "process_name":
+                pname[rec["pid"]] = rec["args"]["name"]
+            elif rec["name"] == "thread_name":
+                tname[(rec["pid"], rec["tid"])] = rec["args"]["name"]
+            continue
+        kind = _KIND.get(rec["ph"])
+        if kind is None:
+            continue
+        p = pname.get(rec["pid"], "main")
+        t = tname.get((rec["pid"], rec["tid"]), "main")
+        track = "" if (p, t) == ("main", "main") else \
+            (p if t == "main" else f"{p}/{t}")
+        args = dict(rec.get("args") or {})
+        wall = args.pop("_wall_s", 0.0)
+        t0 = rec["ts"] / _US
+        t1 = t0 + rec["dur"] / _US if kind == "span" else None
+        events.append(Event(kind, rec["name"], t0, t1, track,
+                            args or None, wall))
+    return events
+
+
+def drift_report(events: Sequence[Event],
+                 names: Optional[Sequence[str]] = None) -> Dict[str, Dict]:
+    """Aggregate modeled vs. measured time per span name.
+
+    For span events carrying a ``wall_s`` arg (the real-compute engines
+    time their jit'd steps), returns per name ``{n, modeled_s, wall_s,
+    ratio}`` — ``ratio`` is wall/modeled, the correction factor a
+    calibration pass would fit.  Spans without ``wall_s`` aggregate
+    modeled time only (``wall_s``/``ratio`` = None)."""
+    agg: Dict[str, Dict] = {}
+    for ev in events:
+        if ev.kind != "span" or (names is not None and ev.name not in names):
+            continue
+        a = agg.setdefault(ev.name, {"n": 0, "modeled_s": 0.0,
+                                     "wall_s": 0.0, "measured": 0})
+        a["n"] += 1
+        a["modeled_s"] += ev.dur
+        w = (ev.args or {}).get("wall_s")
+        if w is not None:
+            a["wall_s"] += w
+            a["measured"] += 1
+    for a in agg.values():
+        if a["measured"]:
+            a["ratio"] = a["wall_s"] / a["modeled_s"] if a["modeled_s"] \
+                else float("inf")
+        else:
+            a["wall_s"] = None
+            a["ratio"] = None
+        del a["measured"]
+    return agg

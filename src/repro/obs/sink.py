@@ -1,0 +1,159 @@
+"""Streaming metrics over the trace stream: reservoir percentiles -> SLOs.
+
+:class:`MetricsSink` is a tracer sink (``Tracer(sinks=[sink])`` or
+``tracer.add_sink(sink)``) that folds retirement events into bounded-size
+state as they are emitted — no post-hoc pass over retired request lists,
+so it scales to streams far longer than memory would allow if every
+request were kept.  Latency, TTFT, and inter-token percentiles come from
+seeded reservoir samples (:class:`Reservoir`, algorithm R: a uniform
+k-sample over an unbounded stream); counts, goodput, and the slack
+attribution (queue / prefill / decode seconds) are exact running sums.
+
+``report()`` produces the same extended :class:`~repro.serving.metrics.
+SLOReport` that :func:`repro.serving.metrics.summarize` builds from
+retired request lists — one report type, two feeders — so benchmark
+tables and live traced runs read identically.  Goodput needs realized
+rewards, which only the router knows (``ROUTE_RETIRE``); engine-only
+traces report goodput 0 and everything else fully.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.obs.trace import Event, REQ_ARRIVE, REQ_DROP, REQ_FINISH, \
+    ROUTE_RETIRE
+from repro.serving.metrics import SLOReport
+
+
+class Reservoir:
+    """Seeded uniform k-sample over a stream (Vitter's algorithm R)."""
+
+    def __init__(self, k: int = 1024, seed: int = 0):
+        assert k >= 1, k
+        self.k = k
+        self.n = 0                       # stream length seen
+        self.sample: List[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, x: float) -> None:
+        self.n += 1
+        if len(self.sample) < self.k:
+            self.sample.append(float(x))
+            return
+        j = int(self._rng.integers(0, self.n))
+        if j < self.k:
+            self.sample[j] = float(x)
+
+    def percentile(self, q: float) -> float:
+        if not self.sample:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.sample), q))
+
+
+class _ClassState:
+    def __init__(self, k: int, seed: int):
+        self.offered = 0
+        self.served = 0
+        self.dropped = 0
+        self.degraded = 0
+        self.hits = 0
+        self.goodput = 0.0
+        self.lat = Reservoir(k, seed)
+        self.ttft = Reservoir(k, seed + 1)
+        self.itl = Reservoir(k, seed + 2)
+        self.queue_s = 0.0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.attributed = 0              # finishes carrying the attribution
+
+    def report(self, horizon_s: float) -> SLOReport:
+        n_attr = max(1, self.attributed)
+        return SLOReport(
+            n=self.offered, served=self.served, dropped=self.dropped,
+            degraded=self.degraded,
+            hit_rate=self.hits / self.offered if self.offered else 0.0,
+            p50_s=self.lat.percentile(50), p99_s=self.lat.percentile(99),
+            goodput=self.goodput,
+            goodput_rate=self.goodput / horizon_s if horizon_s else 0.0,
+            ttft_p50_s=self.ttft.percentile(50),
+            ttft_p99_s=self.ttft.percentile(99),
+            itl_p50_s=self.itl.percentile(50),
+            itl_p99_s=self.itl.percentile(99),
+            queue_s=self.queue_s / n_attr if self.attributed
+            else float("nan"),
+            prefill_s=self.prefill_s / n_attr if self.attributed
+            else float("nan"),
+            decode_s=self.decode_s / n_attr if self.attributed
+            else float("nan"))
+
+
+class MetricsSink:
+    """Consume ``REQ_ARRIVE / REQ_FINISH / REQ_DROP / ROUTE_RETIRE``
+    events into per-class streaming SLO state."""
+
+    def __init__(self, *, reservoir_k: int = 1024, seed: int = 0):
+        self.k = reservoir_k
+        self.seed = seed
+        self._cls: Dict[str, _ClassState] = {}
+
+    def _state(self, cls: Optional[str]) -> _ClassState:
+        name = cls or "default"
+        st = self._cls.get(name)
+        if st is None:
+            st = self._cls[name] = _ClassState(
+                self.k, self.seed + 10007 * len(self._cls))
+        return st
+
+    def __call__(self, ev: Event) -> None:
+        if ev.kind != "instant":
+            return
+        args = ev.args or {}
+        if ev.name == REQ_ARRIVE:
+            self._state(args.get("cls")).offered += 1
+        elif ev.name == REQ_DROP:
+            self._state(args.get("cls")).dropped += 1
+        elif ev.name == REQ_FINISH:
+            st = self._state(args.get("cls"))
+            st.served += 1
+            st.hits += bool(args.get("met_deadline"))
+            st.degraded += bool(args.get("degraded"))
+            if args.get("latency_s") is not None:
+                st.lat.add(args["latency_s"])
+            if args.get("ttft_s") is not None:
+                st.ttft.add(args["ttft_s"])
+            if args.get("itl_s") is not None:
+                st.itl.add(args["itl_s"])
+            if args.get("queue_s") is not None:
+                st.queue_s += args["queue_s"]
+                st.prefill_s += args.get("prefill_s") or 0.0
+                st.decode_s += args.get("decode_s") or 0.0
+                st.attributed += 1
+        elif ev.name == ROUTE_RETIRE:
+            self._state(args.get("cls")).goodput += args.get("reward") or 0.0
+
+    def report(self, horizon_s: float = 1.0) -> SLOReport:
+        """The fleet-wide extended SLO report, with ``per_class`` splits
+        when more than one traffic class was seen."""
+        total = _ClassState(self.k, self.seed + 3)
+        for st in self._cls.values():
+            total.offered += st.offered
+            total.served += st.served
+            total.dropped += st.dropped
+            total.degraded += st.degraded
+            total.hits += st.hits
+            total.goodput += st.goodput
+            total.queue_s += st.queue_s
+            total.prefill_s += st.prefill_s
+            total.decode_s += st.decode_s
+            total.attributed += st.attributed
+            for res, sub in ((total.lat, st.lat), (total.ttft, st.ttft),
+                             (total.itl, st.itl)):
+                for x in sub.sample:
+                    res.add(x)
+        rep = total.report(horizon_s)
+        if len(self._cls) > 1:
+            rep.per_class = {nm: st.report(horizon_s)
+                             for nm, st in sorted(self._cls.items())}
+        return rep

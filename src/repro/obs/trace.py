@@ -1,0 +1,216 @@
+"""Clock-native tracing: typed span/instant/counter events on the analytic clock.
+
+Every serving engine in this repo advances the same ``core.latency``
+analytic-clock seconds; the tracer is denominated in that clock too, so a
+trace of a simulated run *is* the run — queue waits, prefill charges,
+decode steps, and page lifecycle all land on one comparable timeline.
+Host wall-clock is recorded alongside each event (``Event.wall``), so the
+modeled-vs-real gap is itself a measurable signal
+(:func:`repro.obs.export.drift_report` aggregates it for
+``core/calibrate.py``-style fitting).
+
+Design constraints, in order:
+
+1. **Zero overhead when disabled.**  Engines hold
+   ``self.tr = tracer or NULL`` and guard every emission site with
+   ``if self.tr:`` — :class:`NullTracer` is falsy, so the disabled path
+   costs one truthiness check and never builds an args dict.  The bench
+   regression gate holds the committed tables to this: the default
+   (untraced) benchmark runs must regenerate bit-identically.
+2. **Typed events.**  Emission sites use the ``REQ_* / ENGINE_* / PAGE_*``
+   name constants below; :mod:`repro.obs.check_trace` replays them and
+   asserts the serving stack's conservation laws, so names and required
+   args are a contract, not a convention (see each constant's comment).
+3. **Streaming.**  Sinks (e.g. :class:`repro.obs.sink.MetricsSink`)
+   observe every event at emission; the in-memory list exists for the
+   exporters and tests, not as the only consumption path.
+
+Tracks are ``"/"``-separated paths (``engine0/lane2``, ``pool/local``);
+:meth:`Tracer.scope` returns a facade that prefixes tracks, which is how
+one tracer observes a whole fleet with per-engine tracks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Typed event names.  Args listed per name are the contract check_trace and
+# the metrics sink rely on; emitters may add more.
+# ---------------------------------------------------------------------------
+
+#: instant — a request entered the system.  args: rid, cls, prompt_len,
+#: max_new, deadline_abs
+REQ_ARRIVE = "req.arrive"
+#: span arrive->admit — time spent waiting for a lane/pages.  args: rid
+REQ_QUEUE = "req.queue"
+#: instant — admitted into a lane.  args: rid, n_tok (granted decode
+#: budget; may already be degraded below max_new)
+REQ_ADMIT = "req.admit"
+#: span — one monolithic prefill charge.  args: rid, tokens
+REQ_PREFILL = "req.prefill"
+#: span — one chunk of a chunked prefill.  args: rid, chunk, absorbed
+REQ_PREFILL_CHUNK = "req.prefill.chunk"
+#: instant — first output token exists.  args: rid, ttft_s
+REQ_FIRST_TOKEN = "req.first_token"
+#: instant — one decode token landed.  args: rid
+REQ_TOKEN = "req.token"
+#: instant — budget trimmed by the degrade policy.  args: rid, from_tok,
+#: to_tok
+REQ_DEGRADE = "req.degrade"
+#: instant — retired successfully.  args: rid, cls, latency_s, tokens,
+#: met_deadline, plus the slack attribution queue_s/prefill_s/decode_s
+#: and ttft_s/itl_s when known
+REQ_FINISH = "req.finish"
+#: instant — retired by the drop policy (possibly before admission).
+#: args: rid, cls
+REQ_DROP = "req.drop"
+
+#: span — one batched decode step.  args: n_active, context, lanes
+#: (rids), wall_s (measured host seconds for the real-compute engines)
+ENGINE_STEP = "engine.step"
+#: span — one padded wave of the wave scheduler.  args: n, rids
+WAVE_STEP = "wave.step"
+#: instant — router chose an engine.  args: rid, cls, engine_idx
+ROUTE_DISPATCH = "route.dispatch"
+#: instant — router saw the retirement + realized reward.  args: rid,
+#: cls, engine_idx, reward
+ROUTE_RETIRE = "route.retire"
+
+#: instant at bind time — pool geometry the invariant checker needs.
+#: args: groups ({name: n_pages}), page_size, slots.  track: "pool"
+POOL_CONFIG = "pool.config"
+#: instant — a page left the free list.  args: group, page, slot.
+#: track: "pool"
+PAGE_ALLOC = "page.alloc"
+#: instant — a page returned to the free list.  args: group, page, slot,
+#: mid_flight (True = freed by the sliding window while the request is
+#: still decoding).  track: "pool"
+PAGE_FREE = "page.free"
+#: instant — a slot's reservation set (admission) or cleared (retire,
+#: pages=0).  args: group, slot, pages.  track: "pool"
+PAGE_RESERVE = "page.reserve"
+
+#: counters (gauges): one ``value`` float each
+CTR_LANES = "lanes.active"
+CTR_QUEUE = "queue.depth"
+CTR_FREE_PAGES = "pool.free_pages"
+CTR_UTIL = "pool.utilization"
+
+
+@dataclasses.dataclass
+class Event:
+    """One trace event.  ``t0``/``t1`` are analytic-clock seconds (``t1``
+    is None for instants/counters); ``wall`` is host wall-clock seconds at
+    emission."""
+    kind: str                 # "span" | "instant" | "counter"
+    name: str
+    t0: float
+    t1: Optional[float]
+    track: str
+    args: Optional[Dict]
+    wall: float
+
+    @property
+    def dur(self) -> float:
+        return 0.0 if self.t1 is None else self.t1 - self.t0
+
+
+class Tracer:
+    """Collects :class:`Event` s and fans them out to sinks."""
+
+    enabled = True
+
+    def __init__(self, *, wall_clock: Callable[[], float] = time.perf_counter,
+                 sinks: Sequence[Callable[[Event], None]] = ()):
+        self.events: List[Event] = []
+        self.sinks: List[Callable[[Event], None]] = list(sinks)
+        self._wall = wall_clock
+
+    def __bool__(self) -> bool:          # `if tracer:` guards the hot paths
+        return True
+
+    def add_sink(self, sink: Callable[[Event], None]) -> None:
+        self.sinks.append(sink)
+
+    def _emit(self, ev: Event) -> None:
+        self.events.append(ev)
+        for s in self.sinks:
+            s(ev)
+
+    def instant(self, name: str, t: float, track: str = "", **args) -> None:
+        self._emit(Event("instant", name, t, None, track, args or None,
+                         self._wall()))
+
+    def span(self, name: str, t0: float, t1: float, track: str = "",
+             **args) -> None:
+        self._emit(Event("span", name, t0, t1, track, args or None,
+                         self._wall()))
+
+    def counter(self, name: str, t: float, value: float,
+                track: str = "") -> None:
+        self._emit(Event("counter", name, t, None, track,
+                         {"value": float(value)}, self._wall()))
+
+    def scope(self, prefix: str) -> "Tracer":
+        """A facade emitting into this tracer with ``prefix/`` prepended to
+        every track — per-engine tracks over one shared event stream."""
+        return _ScopedTracer(self, prefix)
+
+
+class _ScopedTracer(Tracer):
+    """Track-prefixing view onto a parent tracer (shares its event list)."""
+
+    def __init__(self, parent: Tracer, prefix: str):
+        self._parent = parent
+        self._prefix = prefix.rstrip("/")
+        self.events = parent.events          # shared stream
+
+    def _emit(self, ev: Event) -> None:      # pragma: no cover - via helpers
+        self._parent._emit(ev)
+
+    def _track(self, track: str) -> str:
+        return f"{self._prefix}/{track}" if track else self._prefix
+
+    def instant(self, name, t, track="", **args):
+        self._parent.instant(name, t, self._track(track), **args)
+
+    def span(self, name, t0, t1, track="", **args):
+        self._parent.span(name, t0, t1, self._track(track), **args)
+
+    def counter(self, name, t, value, track=""):
+        self._parent.counter(name, t, value, self._track(track))
+
+    def scope(self, prefix: str) -> "Tracer":
+        return _ScopedTracer(self._parent, self._track(prefix))
+
+
+class NullTracer:
+    """The do-nothing tracer.  Falsy, so ``if self.tr:`` skips every
+    emission site without building args; the methods exist anyway so an
+    unguarded call is still safe."""
+
+    enabled = False
+
+    def __bool__(self) -> bool:
+        return False
+
+    def instant(self, *a, **k) -> None:
+        pass
+
+    def span(self, *a, **k) -> None:
+        pass
+
+    def counter(self, *a, **k) -> None:
+        pass
+
+    def add_sink(self, *a, **k) -> None:
+        pass
+
+    def scope(self, prefix: str) -> "NullTracer":
+        return self
+
+
+#: the shared disabled tracer — engines default to this
+NULL = NullTracer()

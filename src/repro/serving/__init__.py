@@ -94,8 +94,27 @@ lifecycle fields the engines fill in):
     batchers *or* live paged engines (``FleetRouter(engines=...)``): the
     router is agnostic because both speak the same interface.
   - **Metrics** (:mod:`metrics`) reduces retired requests to SLO numbers:
-    deadline hit-rate, p50/p99 modeled latency, and goodput (reward from
-    on-time actions only).
+    deadline hit-rate, p50/p99 modeled latency, goodput (reward from
+    on-time actions only), TTFT / inter-token percentiles, and the slack
+    attribution (queue vs. prefill vs. decode seconds per request).
+
+**Observability** (:mod:`repro.obs`) cuts across all three paths.  Every
+engine flavor takes a ``tracer=`` — the wave :class:`Scheduler`, the
+analytic :class:`ContinuousBatcher`, the live :class:`ContinuousEngine`,
+and :class:`FleetRouter` (which scopes one sub-tracer per engine) — and
+emits typed request-lifecycle / engine-step / page-pool events denominated
+in the same ``core.latency`` analytic clock, with host wall time recorded
+alongside on real-compute spans (``repro.obs.drift_report`` compares the
+two).  The default is the falsy ``NullTracer``: every emission site is
+behind ``if self.tr:``, so the untraced hot path does no formatting, no
+allocation, and stays token- and clock-identical to a tracerless build.
+Exporters turn an event stream into a Perfetto-loadable Chrome trace
+(``repro.obs.write_chrome`` — one track per lane / queue / pool / engine)
+and into streaming SLO reports (``repro.obs.MetricsSink`` — reservoir
+percentiles feeding the same extended ``SLOReport``).  The trace is also
+an audit surface: ``repro.obs.check_trace`` replays any exported trace
+and proves page conservation, reservation non-negativity, per-track clock
+monotonicity, and exactly-once retirement of every admitted request.
 
 The paths meet at the operating point: the same ``fpx.Candidate`` that
 parameterizes a simulated engine can be applied to a live engine via its

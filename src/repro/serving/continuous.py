@@ -42,6 +42,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.configs.base import ModelConfig
 from repro.core import latency as lat_mod
 from repro.core.latency import Hardware, V5E
+from repro.obs import trace as tr_mod
 
 from repro.serving.traffic import SimRequest
 
@@ -268,14 +269,17 @@ class ContinuousBatcher:
     def __init__(self, profile: LatencyProfile, *, slots: int = 4,
                  policy: str = "degrade",
                  on_retire: Optional[Callable[[SimRequest], None]] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 tracer=None):
         """``on_retire`` fires once per request leaving the system — on
         completion *and* on drop — so a learner sees the reward (or lack
         of one) for every routing decision.  ``prefill_chunk``: absorb
         admitted prompts this many tokens at a time, interleaved with
         decode steps for the other slots, instead of stalling the engine
         for the whole prompt (None = monolithic, the historical
-        behavior)."""
+        behavior).  ``tracer``: a :class:`repro.obs.Tracer` (or a scoped
+        view) receiving the full request/step event stream; None = the
+        zero-overhead null tracer."""
         assert policy in ("drop", "degrade", "serve"), policy
         assert prefill_chunk is None or prefill_chunk >= 1, prefill_chunk
         self.profile = profile
@@ -283,6 +287,7 @@ class ContinuousBatcher:
         self.policy = policy
         self.on_retire = on_retire
         self.prefill_chunk = prefill_chunk
+        self.tr = tracer or tr_mod.NULL
         self.t = 0.0                      # engine-local simulated clock
         self.pending: List[SimRequest] = []
         self.active: List[_Running] = []
@@ -293,6 +298,8 @@ class ContinuousBatcher:
 
     def submit(self, req: SimRequest) -> None:
         self.pending.append(req)
+        if self.tr:
+            emit_arrive(self.tr, req)
 
     # -- admission ----------------------------------------------------------
 
@@ -322,11 +329,22 @@ class ContinuousBatcher:
                 if n_tok < 1:
                     retire_dropped(self, req)
                     continue                     # slot still free; try next
+                if self.tr and n_tok < req.max_new:
+                    self.tr.instant(tr_mod.REQ_DEGRADE, self.t, track="steps",
+                                    rid=req.rid, from_tok=req.max_new,
+                                    to_tok=n_tok)
             req.t_admit = self.t
+            if self.tr:
+                emit_admit(self.tr, req, self.t, n_tok, track="steps")
             if self.prefill_chunk is None:
                 # monolithic: the whole prompt is charged as one stall
+                t0 = self.t
                 self.t += self.profile.prefill_s(req.prompt_len)
                 req.t_prefill_done = self.t
+                if self.tr:
+                    self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
+                                 track="steps", rid=req.rid,
+                                 tokens=req.prompt_len)
                 self.active.append(_Running(req, remaining=n_tok,
                                             context=req.prompt_len))
             else:
@@ -354,8 +372,13 @@ class ContinuousBatcher:
                 continue
             c = min(self.prefill_chunk, run.prefill_left)
             absorbed = run.req.prompt_len - run.prefill_left
+            t0 = self.t
             self.t += self.profile.prefill_s(c, context=absorbed)
             run.prefill_left -= c
+            if self.tr:
+                self.tr.span(tr_mod.REQ_PREFILL_CHUNK, t0, self.t,
+                             track="steps", rid=run.req.rid, chunk=c,
+                             absorbed=absorbed + c)
             if run.prefill_left > 0:
                 continue
             run.req.t_prefill_done = self.t
@@ -367,6 +390,10 @@ class ContinuousBatcher:
             if fit == run.remaining:
                 continue
             if self.policy == "degrade" and fit >= 1:
+                if self.tr:
+                    self.tr.instant(tr_mod.REQ_DEGRADE, self.t, track="steps",
+                                    rid=run.req.rid, from_tok=run.remaining,
+                                    to_tok=fit)
                 run.remaining = fit
             else:
                 # drop policy, past deadline, or not even one token fits
@@ -382,13 +409,29 @@ class ContinuousBatcher:
             return                        # every occupied slot still prefilling
         n = len(decoding)
         ctx = max(r.context for r in decoding)
+        t0 = self.t
         self.t += self.profile.step_s(n, ctx)
+        if self.tr:
+            self.tr.span(tr_mod.ENGINE_STEP, t0, self.t, track="steps",
+                         n_active=n, context=ctx,
+                         lanes=[r.req.rid for r in decoding])
         still: List[_Running] = [r for r in self.active
                                  if r.prefill_left > 0]
         for run in decoding:
             run.remaining -= 1
             run.context += 1
             run.req.tokens_done += 1
+            if run.req.tokens_done == 1:
+                # the analytic clock models no prefill-logits token: the
+                # first token lands after the first decode step
+                run.req.t_first_token = self.t
+                if self.tr:
+                    self.tr.instant(tr_mod.REQ_FIRST_TOKEN, self.t,
+                                    track="steps", rid=run.req.rid,
+                                    ttft_s=self.t - run.req.t_arrive)
+            elif self.tr:
+                self.tr.instant(tr_mod.REQ_TOKEN, self.t, track="steps",
+                                rid=run.req.rid)
             if run.remaining > 0:
                 still.append(run)
                 continue
@@ -399,9 +442,16 @@ class ContinuousBatcher:
             # (deadline_s=None) projects to +inf and always meets it
             req.met_deadline = req.t_finish <= req.deadline_abs
             self.completed.append(req)
+            if self.tr:
+                emit_finish(self.tr, req, track="steps")
             if self.on_retire is not None:
                 self.on_retire(req)
         self.active = still
+        if self.tr:
+            self.tr.counter(tr_mod.CTR_LANES, self.t, len(self.active),
+                            track="steps")
+            self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),
+                            track="queue")
 
     def _n_active(self) -> int:
         return len(self.active)
@@ -434,6 +484,39 @@ class ContinuousBatcher:
                                     for r in self.active])
 
 
+# ---------------------------------------------------------------------------
+# Shared trace emission, used by the analytic batcher and the live paged
+# engine so the two event streams carry identical lifecycle args (and the
+# invariant checker / metrics sink never special-case a path).
+# ---------------------------------------------------------------------------
+
+def _finite(x: float) -> Optional[float]:
+    return x if x == x and abs(x) != float("inf") else None
+
+
+def emit_arrive(tr, req) -> None:
+    tr.instant(tr_mod.REQ_ARRIVE, req.t_arrive, track="queue",
+               rid=req.rid, cls=getattr(req, "cls_name", "default"),
+               prompt_len=req.prompt_len, max_new=req.max_new,
+               deadline_abs=_finite(req.deadline_abs))
+
+
+def emit_admit(tr, req, t: float, n_tok: int, track: str) -> None:
+    tr.span(tr_mod.REQ_QUEUE, req.t_arrive, t, track="queue", rid=req.rid)
+    tr.instant(tr_mod.REQ_ADMIT, t, track=track, rid=req.rid, n_tok=n_tok,
+               max_new=req.max_new)
+
+
+def emit_finish(tr, req, track: str) -> None:
+    from repro.serving.metrics import request_slack
+    tr.instant(tr_mod.REQ_FINISH, req.t_finish, track=track,
+               rid=req.rid, cls=getattr(req, "cls_name", "default"),
+               latency_s=req.latency_s, tokens=req.tokens_done,
+               met_deadline=bool(req.met_deadline),
+               degraded=req.tokens_done < req.max_new,
+               **request_slack(req))
+
+
 def retire_dropped(eng, req) -> None:
     """Shared drop bookkeeping: mark ``req`` rejected at ``eng``'s current
     clock, record it, and fire the retirement callback (drops retire
@@ -442,6 +525,11 @@ def retire_dropped(eng, req) -> None:
     req.t_finish = eng.t
     req.met_deadline = False
     eng.dropped.append(req)
+    tr = getattr(eng, "tr", None)
+    if tr:
+        tr.instant(tr_mod.REQ_DROP, eng.t, track="queue", rid=req.rid,
+                   cls=getattr(req, "cls_name", "default"),
+                   admitted=req.t_admit is not None)
     if eng.on_retire is not None:
         eng.on_retire(req)
 

@@ -37,6 +37,7 @@ from repro.core.fpx import Candidate, OnlineSelector
 from repro.core.latency import Hardware, V5E
 from repro.core import latency as lat_mod
 
+from repro.obs import trace as tr_mod
 from repro.serving.continuous import ContinuousBatcher, LatencyProfile
 from repro.serving.traffic import SimRequest
 
@@ -109,24 +110,37 @@ class FleetRouter:
                  quality: Callable[[Candidate], float],
                  slots: int = 4, policy: str = "degrade",
                  mode: str = "fpx", epsilon: float = 0.1, seed: int = 0,
-                 hw: Hardware = V5E, engines: Optional[Sequence] = None):
+                 hw: Hardware = V5E, engines: Optional[Sequence] = None,
+                 tracer=None):
         """``engines``: optional pre-built engine per candidate — anything
         speaking the batcher interface (``submit / drain / backlog_s /
         profile / on_retire``), e.g. live paged
         :class:`~repro.serving.paged_engine.ContinuousEngine` instances.
-        Default: one analytic ``ContinuousBatcher`` per operating point."""
+        Default: one analytic ``ContinuousBatcher`` per operating point.
+
+        ``tracer``: a :class:`repro.obs.Tracer`; routing decisions and
+        retirements land on the ``router`` track, and each internally
+        built engine gets a :meth:`~repro.obs.Tracer.scope` named
+        ``eng<i>:<model>-g<gamma>`` so one fleet trace carries every
+        engine's lanes and pool as its own Perfetto process.  Pre-built
+        ``engines`` keep whatever tracer they were constructed with.
+        None = the zero-overhead null tracer."""
         assert mode in ("fpx", "bandit"), mode
         self.cands = list(candidates)
         self.quality = quality
         self.mode = mode
         self.epsilon = epsilon
         self.seed = seed
+        self.tr = tracer or tr_mod.NULL
         if engines is None:
             self.engines = [
                 ContinuousBatcher(LatencyProfile(c.cfg, c.avg_bits, hw=hw),
                                   slots=slots, policy=policy,
-                                  on_retire=self._retire)
-                for c in self.cands]
+                                  on_retire=self._retire,
+                                  tracer=self.tr.scope(
+                                      f"eng{i}:{c.model_name}-g{c.gamma:g}")
+                                  if self.tr else None)
+                for i, c in enumerate(self.cands)]
         else:
             assert len(engines) == len(self.cands), \
                 (len(engines), len(self.cands))
@@ -157,6 +171,11 @@ class FleetRouter:
             req.reward = 0.0
         self._selector(req.cls_name).update(req.engine_idx, req.reward)
         self.retired.append(req)
+        if self.tr:
+            self.tr.instant(tr_mod.ROUTE_RETIRE, req.t_finish,
+                            track="router", rid=req.rid, cls=req.cls_name,
+                            engine_idx=req.engine_idx, reward=req.reward,
+                            dropped=req.dropped)
 
     # -- dispatch -----------------------------------------------------------
 
@@ -171,6 +190,10 @@ class FleetRouter:
             idx = fpx.select_for_slack(cands, req.deadline_s, waits,
                                        self.quality)
         req.engine_idx = idx
+        if self.tr:
+            self.tr.instant(tr_mod.ROUTE_DISPATCH, req.t_arrive,
+                            track="router", rid=req.rid, cls=req.cls_name,
+                            engine_idx=idx)
         self.engines[idx].submit(req)
         return idx
 

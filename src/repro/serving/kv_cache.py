@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import PagedGroup, paged_layer_groups
+from repro.obs import trace as tr_mod
 
 #: id of the page idle lanes (and retired window entries) point at; never
 #: allocated to a request.  One per group pool.
@@ -118,6 +119,30 @@ class PagedKVCache:
             self.block_tables[g.name] = np.full(
                 (slots, self.table_width), DUMMY_PAGE, np.int32)
         self.pos = np.zeros((slots,), np.int32)
+        #: observability: every page transition is emitted through here
+        #: once an engine binds its tracer + clock (NULL = no overhead)
+        self.tr = tr_mod.NULL
+        self._clock = lambda: 0.0
+
+    # -- observability -------------------------------------------------------
+
+    def bind_tracer(self, tracer, clock) -> None:
+        """Attach a tracer and the owning engine's analytic clock
+        (``clock()`` -> current engine seconds).  Emits the pool geometry
+        (``pool.config``) the trace-driven invariant checker replays
+        against; all subsequent page transitions (alloc / free /
+        mid-flight window free / reservation set+clear) are emitted on
+        the ``pool`` track."""
+        self.tr = tracer or tr_mod.NULL
+        self._clock = clock
+        if self.tr:
+            self.tr.instant(tr_mod.POOL_CONFIG, clock(), track="pool",
+                            groups=dict(self._group_pages),
+                            page_size=self.page_size, slots=self.slots)
+
+    def free_by_group(self) -> Dict[str, int]:
+        """Current free-list sizes per group (the pool gauges)."""
+        return {g: len(f) for g, f in self._free.items()}
 
     # -- group geometry ------------------------------------------------------
 
@@ -201,6 +226,9 @@ class PagedKVCache:
         page = self._free[g.name].pop()
         owned[logical] = page
         self.block_tables[g.name][slot, logical] = page
+        if self.tr:
+            self.tr.instant(tr_mod.PAGE_ALLOC, self._clock(), track="pool",
+                            group=g.name, page=page, slot=slot)
         return page
 
     def _drop_page(self, g: PagedGroup, slot: int, logical: int) -> int:
@@ -209,6 +237,10 @@ class PagedKVCache:
         page = self._owned[g.name][slot].pop(logical)
         self._free[g.name].append(page)
         self.block_tables[g.name][slot, logical] = DUMMY_PAGE
+        if self.tr:
+            self.tr.instant(tr_mod.PAGE_FREE, self._clock(), track="pool",
+                            group=g.name, page=page, slot=slot,
+                            mid_flight=True)
         return page
 
     def _ensure(self, g: PagedGroup, slot: int, lo: int, hi: int) -> None:
@@ -241,6 +273,10 @@ class PagedKVCache:
             assert need <= self.available(g), (g.name, need,
                                                self.available(g))
             self._reserved[g.name][slot] = need
+            if self.tr:
+                self.tr.instant(tr_mod.PAGE_RESERVE, self._clock(),
+                                track="pool", group=g.name, slot=slot,
+                                pages=need)
             self.block_tables[g.name][slot, :] = DUMMY_PAGE
             if g.window is None:
                 for j in range(math.ceil(n_tokens / self.page_size)):
@@ -257,7 +293,17 @@ class PagedKVCache:
             for j in sorted(owned):
                 out.append((g.name, owned[j]))
             self._free[g.name].extend(owned.values())
+            if self.tr:
+                t = self._clock()
+                for j in sorted(owned):
+                    self.tr.instant(tr_mod.PAGE_FREE, t, track="pool",
+                                    group=g.name, page=owned[j], slot=slot,
+                                    mid_flight=False)
             owned.clear()
+            if self.tr and int(self._reserved[g.name][slot]):
+                self.tr.instant(tr_mod.PAGE_RESERVE, self._clock(),
+                                track="pool", group=g.name, slot=slot,
+                                pages=0)
             self._reserved[g.name][slot] = 0
             self.block_tables[g.name][slot, :] = DUMMY_PAGE
         self.pos[slot] = 0

@@ -4,6 +4,20 @@
 realized rewards, which by construction (fleet._retire) only on-time
 actions earn.  Throughput counts everything served; goodput is what the
 deployment was actually worth.
+
+Streaming SLOs (the million-user workload is conversational, and
+streaming agents win on time-to-first-token, not completion time — see
+ROADMAP): reports carry TTFT and inter-token-latency percentiles, both
+derived from ``t_first_token`` (set by the analytic batcher and the paged
+engine alike), plus the *slack attribution* — where a served request's
+deadline slack actually went, split into queue wait (arrive -> admit),
+prefill (admit -> prompt absorbed), and decode (first token -> finish).
+``per_class`` recursion gives every traffic class its own attribution.
+
+Presentation is split from data: :meth:`SLOReport.row` returns plain
+numbers (consumers — ``check_regression.py``, the obs metrics sink, new
+tables — never re-parse floats out of strings) and
+:meth:`SLOReport.format_row` renders the historical human/CSV strings.
 """
 from __future__ import annotations
 
@@ -26,22 +40,75 @@ class SLOReport:
     p99_s: float
     goodput: float             # sum of realized on-time reward
     goodput_rate: float        # goodput / horizon (reward per simulated s)
+    # -- streaming SLOs (nan when the path records no first token) --------
+    ttft_p50_s: float = float("nan")   # time to first token percentiles
+    ttft_p99_s: float = float("nan")
+    itl_p50_s: float = float("nan")    # per-request mean inter-token latency
+    itl_p99_s: float = float("nan")
+    # -- slack attribution: mean seconds per served request ---------------
+    queue_s: float = float("nan")      # arrive -> admit
+    prefill_s: float = float("nan")    # admit -> prompt absorbed
+    decode_s: float = float("nan")     # prompt absorbed -> finish
     per_class: Optional[Dict[str, "SLOReport"]] = None
 
     def row(self) -> List:
-        return [self.n, self.served, self.dropped,
-                f"{self.hit_rate:.3f}", f"{self.p50_s * 1e3:.1f}",
-                f"{self.p99_s * 1e3:.1f}", f"{self.goodput:.1f}"]
+        """The table row as *numbers* (n, served, dropped, hit_rate,
+        p50_ms, p99_ms, goodput) — format with :meth:`format_row`."""
+        return [self.n, self.served, self.dropped, self.hit_rate,
+                self.p50_s * 1e3, self.p99_s * 1e3, self.goodput]
+
+    def format_row(self) -> List:
+        """The historical presentation of :meth:`row`: counts stay ints,
+        rates/latencies/goodput become fixed-precision strings."""
+        n, served, dropped, hit, p50_ms, p99_ms, goodput = self.row()
+        return [n, served, dropped, f"{hit:.3f}", f"{p50_ms:.1f}",
+                f"{p99_ms:.1f}", f"{goodput:.1f}"]
+
+    def streaming_row(self) -> List:
+        """Numeric streaming-SLO columns: ttft p50/p99 ms, itl p50/p99 ms,
+        then the queue/prefill/decode attribution in ms."""
+        return [self.ttft_p50_s * 1e3, self.ttft_p99_s * 1e3,
+                self.itl_p50_s * 1e3, self.itl_p99_s * 1e3,
+                self.queue_s * 1e3, self.prefill_s * 1e3,
+                self.decode_s * 1e3]
 
 
 def _percentile(xs: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
+def _mean(xs: Sequence[float]) -> float:
+    return float(np.mean(np.asarray(xs))) if len(xs) else float("nan")
+
+
+def request_slack(r) -> Dict[str, Optional[float]]:
+    """Per-request streaming timings from lifecycle fields (None where the
+    path did not record the boundary): ttft_s, itl_s (mean inter-token),
+    queue_s, prefill_s, decode_s.  Shared by :func:`summarize` and the
+    engines' trace emission so the two feeders cannot diverge."""
+    t_first = getattr(r, "t_first_token", None)
+    ttft = t_first - r.t_arrive if t_first is not None else None
+    itl = None
+    if t_first is not None and r.t_finish is not None and r.tokens_done > 1:
+        itl = (r.t_finish - t_first) / (r.tokens_done - 1)
+    queue = r.t_admit - r.t_arrive if r.t_admit is not None else None
+    prefill = None
+    if r.t_prefill_done is not None and r.t_admit is not None:
+        prefill = r.t_prefill_done - r.t_admit
+    decode = None
+    if r.t_finish is not None and r.t_prefill_done is not None:
+        decode = r.t_finish - r.t_prefill_done
+    return {"ttft_s": ttft, "itl_s": itl, "queue_s": queue,
+            "prefill_s": prefill, "decode_s": decode}
+
+
 def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
               split_classes: bool = True) -> SLOReport:
     done = [r for r in reqs if not r.dropped and r.t_finish is not None]
     lats = [r.latency_s for r in done]
+    slacks = [request_slack(r) for r in done]
+    pick = lambda key: [s[key] for s in slacks if s[key] is not None]
+    ttfts, itls = pick("ttft_s"), pick("itl_s")
     rep = SLOReport(
         n=len(reqs),
         served=len(done),
@@ -52,6 +119,10 @@ def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
         p50_s=_percentile(lats, 50), p99_s=_percentile(lats, 99),
         goodput=sum(r.reward for r in reqs),
         goodput_rate=sum(r.reward for r in reqs) / horizon_s,
+        ttft_p50_s=_percentile(ttfts, 50), ttft_p99_s=_percentile(ttfts, 99),
+        itl_p50_s=_percentile(itls, 50), itl_p99_s=_percentile(itls, 99),
+        queue_s=_mean(pick("queue_s")), prefill_s=_mean(pick("prefill_s")),
+        decode_s=_mean(pick("decode_s")),
     )
     if split_classes:
         names = sorted({r.cls_name for r in reqs})

@@ -55,6 +55,7 @@ engines with the same traffic streams it feeds the analytic fleet.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -65,8 +66,10 @@ from repro.configs.base import ModelConfig
 from repro.core.latency import Hardware, V5E
 from repro.models import transformer
 from repro.models.modules import ExecContext
+from repro.obs import trace as tr_mod
 from repro.serving import sampler as sampler_mod
 from repro.serving.continuous import (LatencyProfile, degraded_budget,
+                                      emit_admit, emit_arrive, emit_finish,
                                       estimate_backlog, post_prefill_fit,
                                       projected_finish, retire_dropped)
 from repro.serving.continuous import drive as continuous_drive
@@ -111,7 +114,7 @@ class ContinuousEngine:
                  on_retire: Optional[Callable] = None,
                  prompt_seed: int = 0, unroll: bool = True,
                  prefill_chunk: Optional[int] = None,
-                 attn_impl: str = "fused"):
+                 attn_impl: str = "fused", tracer=None):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
@@ -137,7 +140,13 @@ class ContinuousEngine:
         the historical clock) or ``"gather"`` (the materialize-then-SDPA
         path the kernel replaced: ~3x the KV traffic at the padded
         block-table extent).  Ignored when ``profile`` is passed
-        explicitly."""
+        explicitly.
+
+        ``tracer``: a :class:`repro.obs.Tracer` (or a scoped view)
+        receiving the full lifecycle/step/page event stream — spans carry
+        the host wall time of the real compute alongside the analytic
+        clock (``drift_report`` compares the two).  None = the
+        zero-overhead null tracer."""
         if not transformer.paged_supported(cfg):
             raise NotImplementedError(
                 "ContinuousEngine needs the paged decode path, which "
@@ -187,6 +196,8 @@ class ContinuousEngine:
                 transformer.paged_decode_step(p, cfg, b, c, self.ctx,
                                               unroll=unroll)))
         self.t = 0.0                      # engine-local analytic clock
+        self.tr = tracer or tr_mod.NULL
+        self.cache.bind_tracer(self.tr, lambda: self.t)
         self.lanes: List[Optional[_Lane]] = [None] * slots
         self.pending: List = []
         self.completed: List = []
@@ -198,6 +209,8 @@ class ContinuousEngine:
 
     def submit(self, req) -> None:
         self.pending.append(req)
+        if self.tr:
+            emit_arrive(self.tr, req)
 
     def _prompt_for(self, req) -> np.ndarray:
         p = getattr(req, "prompt", None)
@@ -255,6 +268,10 @@ class ContinuousEngine:
                     self.pending.remove(req)
                     self._drop(req)
                     continue                  # lane still free; try next
+                if self.tr and n_tok < req.max_new:
+                    self.tr.instant(tr_mod.REQ_DEGRADE, self.t,
+                                    track="queue", rid=req.rid,
+                                    from_tok=req.max_new, to_tok=n_tok)
             # page feasibility: prompt + (n_tok - 1) decode writes.  The
             # demand is *window-bounded* per layer group: a sliding-window
             # group costs at most its win_cap pages however long the
@@ -287,16 +304,24 @@ class ContinuousEngine:
         pages = self.cache.alloc(lane, S + n_tok - 1, self.prefill_chunk)
         self.admissions.append((req.rid, pages))
         req.t_admit = self.t
+        if self.tr:
+            emit_admit(self.tr, req, self.t, n_tok, track=f"lane{lane}")
         if self.prefill_chunk is not None:
             self.lanes[lane] = _Lane(req, last_token=None, remaining=n_tok,
                                      context=0,
                                      prompt_toks=self._prompt_for(req))
             return
         toks = jnp.asarray(self._prompt_for(req)[None, :])
+        w0 = time.perf_counter()
         first_tok, raw_cache = self._prefill(self.params, {"tokens": toks})
         self.cache.write_prefill(
             lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
+        t0 = self.t
         self.t += self.profile.prefill_s(S)
+        if self.tr:
+            self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
+                         track=f"lane{lane}", rid=req.rid, tokens=S,
+                         wall_s=time.perf_counter() - w0)
         lane_state = _Lane(req, last_token=None, remaining=n_tok,
                            context=S)
         self.lanes[lane] = lane_state
@@ -316,13 +341,20 @@ class ContinuousEngine:
             S = len(l.prompt_toks)
             c = min(self.prefill_chunk, S - l.absorbed)
             toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
+            w0 = time.perf_counter()
             first_tok, new_cache = self._chunk(self.params, {"tokens": toks},
                                                self.cache.chunk_cache(i, c))
             self.cache.update_from(new_cache)
             # window groups free the pages this chunk pushed out of the
             # window — back to the pool mid-flight, before the next event
             self.cache.advance(i, c)
+            t0 = self.t
             self.t += self.profile.prefill_s(c, context=l.absorbed)
+            if self.tr:
+                self.tr.span(tr_mod.REQ_PREFILL_CHUNK, t0, self.t,
+                             track=f"lane{i}", rid=l.req.rid, chunk=c,
+                             absorbed=l.absorbed + c,
+                             wall_s=time.perf_counter() - w0)
             l.absorbed += c
             l.context += c
             if l.absorbed == S:
@@ -339,11 +371,18 @@ class ContinuousEngine:
         such a request was served late)."""
         req = l.req
         req.t_prefill_done = self.t
+        # the first output token is sampled from the prefill logits, so it
+        # exists the instant the prompt is absorbed: TTFT == prefill done
+        req.t_first_token = self.t
         t0 = int(np.asarray(first_tok)[0, 0])
         l.last_token = t0
         l.produced = [t0]
         req.tokens_done = 1
         l.remaining -= 1
+        if self.tr:
+            self.tr.instant(tr_mod.REQ_FIRST_TOKEN, self.t,
+                            track=f"lane{lane}", rid=req.rid,
+                            ttft_s=self.t - req.t_arrive)
         if self.policy != "serve" and not self._post_prefill_check(lane, l):
             return
         if l.remaining == 0:
@@ -362,6 +401,10 @@ class ContinuousEngine:
         if fit == l.remaining:
             return True
         if self.policy == "degrade" and fit >= 0:
+            if self.tr:
+                self.tr.instant(tr_mod.REQ_DEGRADE, self.t,
+                                track=f"lane{lane}", rid=req.rid,
+                                from_tok=l.remaining, to_tok=fit)
             l.remaining = fit
             if l.remaining > 0:
                 return True
@@ -393,14 +436,21 @@ class ContinuousEngine:
         toks = np.zeros((self.slots, 1), np.int32)
         for i, l in active:
             toks[i, 0] = l.last_token
+        w0 = time.perf_counter()
         next_toks, new_cache = self._decode(self.params,
                                             {"token": jnp.asarray(toks)},
                                             self.cache.decode_cache(
                                                 exclude=prefilling))
         self.cache.update_from(new_cache)
         nxt = np.asarray(next_toks)                  # (slots, 1) int32 only
-        self.t += self.profile.step_s(len(active),
-                                      max(l.context for _, l in active))
+        t0 = self.t
+        ctx = max(l.context for _, l in active)
+        self.t += self.profile.step_s(len(active), ctx)
+        if self.tr:
+            self.tr.span(tr_mod.ENGINE_STEP, t0, self.t, track="steps",
+                         n_active=len(active), context=ctx,
+                         lanes=[l.req.rid for _, l in active],
+                         wall_s=time.perf_counter() - w0)
         for i, l in active:
             # the step wrote position pos; window-group pages that fell
             # out of the window go back to the pool immediately
@@ -411,9 +461,22 @@ class ContinuousEngine:
             l.last_token = tok
             l.remaining -= 1
             l.req.tokens_done += 1
+            if self.tr:
+                self.tr.instant(tr_mod.REQ_TOKEN, self.t, track=f"lane{i}",
+                                rid=l.req.rid)
             if l.remaining == 0:
                 self.lanes[i] = None
                 self._finish(l.req, l, lane_allocated=i)
+        if self.tr:
+            self.tr.counter(tr_mod.CTR_LANES, self.t, self._n_active(),
+                            track="steps")
+            self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),
+                            track="queue")
+            self.tr.counter(tr_mod.CTR_UTIL, self.t,
+                            self.cache.utilization(), track="pool")
+            for g, free in self.cache.free_by_group().items():
+                self.tr.counter(f"{tr_mod.CTR_FREE_PAGES}.{g}", self.t,
+                                free, track="pool")
 
     def _finish(self, req, lane_state: _Lane, *, lane_allocated: int) -> None:
         self.cache.free(lane_allocated)       # pages reusable immediately
@@ -422,6 +485,8 @@ class ContinuousEngine:
         req.met_deadline = req.t_finish <= req.deadline_abs
         req.result_tokens = np.asarray(lane_state.produced, np.int32)
         self.completed.append(req)
+        if self.tr:
+            emit_finish(self.tr, req, track=f"lane{lane_allocated}")
         if self.on_retire is not None:
             self.on_retire(req)
 

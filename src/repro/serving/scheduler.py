@@ -16,6 +16,7 @@ from typing import Deque, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as tr_mod
 from repro.serving.engine import ServingEngine
 
 
@@ -49,6 +50,8 @@ class Request:
     #: prompt fully absorbed (chunked prefill sets this later than t_admit
     #: plus the bare prefill cost — decode steps interleave with chunks)
     t_prefill_done: Optional[float] = None
+    #: first output token existed (TTFT anchor; see SimRequest)
+    t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     tokens_done: int = 0
     dropped: bool = False
@@ -67,15 +70,24 @@ class Request:
 
 class Scheduler:
     def __init__(self, engine: ServingEngine, *, batch_slots: int = 8,
-                 pad_id: int = 0):
+                 pad_id: int = 0, tracer=None):
+        """``tracer``: a :class:`repro.obs.Tracer` receiving wave spans and
+        per-request lifecycle events on the modeled clock (waves execute
+        back-to-back: each wave starts where the previous one's makespan
+        ended).  None = the zero-overhead null tracer."""
         self.engine = engine
         self.slots = batch_slots
         self.pad_id = pad_id
+        self.tr = tracer or tr_mod.NULL
+        self.t = 0.0                      # modeled clock, advances per wave
         self.queue: Deque[Request] = deque()
         self.done: List[Request] = []
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        if self.tr:
+            from repro.serving.continuous import emit_arrive
+            emit_arrive(self.tr, req)
 
     @staticmethod
     def _extra_sig(req: Request) -> frozenset:
@@ -117,12 +129,29 @@ class Scheduler:
         max_new = max(r.max_new for r in wave)
         res = self.engine.generate(self._make_batch(wave), max_new=max_new)
         new = np.asarray(res.new_tokens)
+        t0 = self.t
         for i, r in enumerate(wave):
             r.result_tokens = new[i, :r.max_new]
             # each request is charged its own shape, not the padded wave's
             r.latency_s = self.engine.modeled_latency(len(r.prompt), r.max_new)
             if r.deadline_s is not None:
                 r.met_deadline = r.latency_s <= r.deadline_s
+            r.t_admit = t0
+            r.t_finish = t0 + r.latency_s
+        # the wave's makespan is its slowest member; waves run back-to-back
+        self.t = t0 + max(r.latency_s for r in wave)
+        if self.tr:
+            self.tr.span(tr_mod.WAVE_STEP, t0, self.t, track="waves",
+                         n=len(wave), lanes=[r.rid for r in wave])
+            for r in wave:
+                self.tr.instant(tr_mod.REQ_ADMIT, t0, track="waves",
+                                rid=r.rid, n_tok=r.max_new,
+                                max_new=r.max_new)
+                self.tr.instant(tr_mod.REQ_FINISH, r.t_finish, track="waves",
+                                rid=r.rid, cls=r.cls_name,
+                                latency_s=r.latency_s, tokens=r.max_new,
+                                met_deadline=r.met_deadline is not False,
+                                degraded=False)
         self.done.extend(wave)
         return wave
 

@@ -42,6 +42,11 @@ class SimRequest:
     #: monolithic path; later under chunked prefill, which interleaves
     #: decode steps for other lanes between chunks)
     t_prefill_done: Optional[float] = None
+    #: when the first output token existed — TTFT = t_first_token -
+    #: t_arrive, the streaming SLO.  The paged engine samples it from the
+    #: prefill logits (== t_prefill_done); the analytic batcher models no
+    #: prefill token, so it lands after the first decode step
+    t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     latency_s: Optional[float] = None
     met_deadline: Optional[bool] = None

@@ -1,0 +1,24 @@
+"""Regenerate tests/data/golden_trace.json from the pinned event stream.
+
+    PYTHONPATH=src:tests python tests/data/make_golden_trace.py
+
+The golden file pins the Chrome ``trace_event`` export format
+(test_obs.test_chrome_export_matches_golden_file).  Re-run this after an
+*intentional* format change so the diff is reviewable.
+"""
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))
+
+from repro.obs import to_chrome  # noqa: E402
+from test_obs import _tiny_stream  # noqa: E402
+
+out = os.path.join(_HERE, "golden_trace.json")
+with open(out, "w") as f:
+    json.dump(to_chrome(_tiny_stream()), f, indent=1, sort_keys=False)
+    f.write("\n")
+print(f"wrote {out}")
