@@ -14,7 +14,8 @@ turns the tables into a gate:
    way: per-(impl, context, lanes) attention/step microseconds must not
    rise beyond tolerance.  ``results/table_hybrid.csv`` gates the
    sliding-window paged path: per-context windowed step/KV costs and the
-   hybrid-pool fleet goodput.
+   hybrid-pool fleet goodput.  ``results/table_spec.csv`` gates the
+   speculative-decoding fleet the same way, per (mix, arm).
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
@@ -25,7 +26,11 @@ turns the tables into a gate:
    gemma3-class stack strictly undercuts its dense-uniform equivalent on
    step time and KV bytes beyond the window, and a fleet pool holding a
    windowed gemma3-class engine earns at least the goodput of the same
-   pool priced dense.
+   pool priced dense; the learned-draft-depth fleet keeps its goodput at
+   or above always-dense on the slack-rich class and above dense and
+   every fixed-k deployment on the mixed workload, while its p99 on the
+   deadline-tight class never exceeds dense (speculative rounds collapse
+   to dense steps under deadline pressure).
 
 Malformed tables (empty, or missing the gated columns) fail the gate
 with a named error rather than a traceback — a refactor that drops a
@@ -66,6 +71,8 @@ TABLES = ("table_paged.csv", "table_chunked.csv")
 ATTN_TABLE = "table_paged_attn.csv"
 #: the sliding-window paged path: windowed-vs-dense costs + fleet goodput
 HYBRID_TABLE = "table_hybrid.csv"
+#: speculative decoding: learned per-class draft depth vs dense/fixed-k
+SPEC_TABLE = "table_spec.csv"
 
 
 def read_rows(text: str):
@@ -283,6 +290,72 @@ def check_hybrid_orderings(rows, errors):
                       f"dense-pool {dv}")
 
 
+def check_spec_drift(fresh, base, tol_pct: float, errors):
+    """The speculation table: per-(mix, arm) goodput must not drop and
+    p99 must not rise beyond tolerance."""
+    key = lambda r: (r.get("mix"), r.get("arm"))
+    fresh_by, base_by = ({key(r): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{SPEC_TABLE}: row set changed; commit the "
+                      "regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        bv, fv = (col(r, "goodput", SPEC_TABLE, errors) for r in (b, f))
+        if None not in (bv, fv) and fv < bv * (1 - tol):
+            errors.append(f"{SPEC_TABLE} {k}: goodput dropped "
+                          f"{bv} -> {fv} (tol {tol_pct}%)")
+        bv, fv = (col(r, "p99_ms", SPEC_TABLE, errors) for r in (b, f))
+        if None not in (bv, fv) and fv > bv * (1 + tol):
+            errors.append(f"{SPEC_TABLE} {k}: p99 rose "
+                          f"{bv}ms -> {fv}ms (tol {tol_pct}%)")
+
+
+def check_spec_orderings(rows, errors):
+    """The claims the speculation table exists to prove: on the
+    slack-rich class the learned arm converts draft depth into goodput
+    (>= always-dense); on the deadline-tight class its p99 is never
+    worse than dense (rounds collapse under pressure); and on the mixed
+    workload learned per-class depth beats always-dense AND every
+    fleet-wide fixed-k deployment at equal capacity."""
+    by = {(r.get("mix"), r.get("arm")): r for r in rows}
+
+    def need(mix, arm):
+        row = by.get((mix, arm))
+        if row is None:
+            errors.append(f"{SPEC_TABLE}: missing row ({mix}, {arm})")
+        return row
+
+    chat_l, chat_d = need("chat", "spec-learned"), need("chat", "dense")
+    if chat_l and chat_d:
+        lv, dv = (col(r, "goodput", SPEC_TABLE, errors)
+                  for r in (chat_l, chat_d))
+        if None not in (lv, dv) and lv < dv:
+            errors.append(f"{SPEC_TABLE} chat: spec-learned goodput {lv} "
+                          f"below dense {dv}")
+    trd_l, trd_d = need("trading", "spec-learned"), need("trading", "dense")
+    if trd_l and trd_d:
+        lv, dv = (col(r, "p99_ms", SPEC_TABLE, errors)
+                  for r in (trd_l, trd_d))
+        if None not in (lv, dv) and lv > dv:
+            errors.append(f"{SPEC_TABLE} trading: spec-learned p99 {lv}ms "
+                          f"above dense {dv}ms")
+    mix_l = need("mixed", "spec-learned")
+    if mix_l:
+        lv = col(mix_l, "goodput", SPEC_TABLE, errors)
+        rivals = [a for m, a in by
+                  if m == "mixed" and (a == "dense" or a.startswith("fixed-"))]
+        if not rivals:
+            errors.append(f"{SPEC_TABLE}: no dense/fixed-k rows in mixed")
+        for arm in sorted(rivals):
+            rv = col(by[("mixed", arm)], "goodput", SPEC_TABLE, errors)
+            if None not in (lv, rv) and lv < rv:
+                errors.append(f"{SPEC_TABLE} mixed: spec-learned goodput "
+                              f"{lv} below {arm} {rv}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
@@ -315,6 +388,11 @@ def main(argv=None) -> int:
                                                    args.baseline_dir),
                        args.tol_pct, errors)
     check_hybrid_orderings(hybrid_fresh, errors)
+    spec_fresh = load_fresh(args.results, SPEC_TABLE)
+    check_spec_drift(spec_fresh, load_baseline(SPEC_TABLE,
+                                               args.baseline_dir),
+                     args.tol_pct, errors)
+    check_spec_orderings(spec_fresh, errors)
 
     for trace_path in args.trace:
         sys.path.insert(0, os.path.join(REPO, "src"))
@@ -327,7 +405,7 @@ def main(argv=None) -> int:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
     traced = f" + {len(args.trace)} trace(s)" if args.trace else ""
-    print(f"regression gate: {len(TABLES) + 2} tables OK{traced} "
+    print(f"regression gate: {len(TABLES) + 3} tables OK{traced} "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

@@ -90,6 +90,20 @@ def main() -> None:
                  f":goodput={th_good['hybrid-pool']:.1f}"
                  f"_vs_{th_good['dense-pool']:.1f}"))
 
+    # --- Speculative decoding: learned draft depth vs dense/fixed-k -------
+    import table_spec
+    tsp = table_spec.main(verbose=False)
+    tsp_by = {(r[0], r[1]): r for r in tsp}
+    sp_l = tsp_by[("mixed", "spec-learned")]
+    sp_d = tsp_by[("mixed", "dense")]
+    sp_best_fixed = max((r for (m, a), r in tsp_by.items()
+                         if m == "mixed" and a.startswith("fixed-")),
+                        key=lambda r: float(r[8]))
+    rows.append(("table_spec", float(sp_l[7]) * 1e3,
+                 f"goodput={sp_l[8]}_vs_dense{sp_d[8]}"
+                 f"_vs_{sp_best_fixed[1]}{sp_best_fixed[8]}"
+                 f":itl={sp_l[9]}ms"))
+
     # --- Roofline table (from dry-run artifacts) --------------------------
     import roofline
     rl = roofline.main()

@@ -27,9 +27,37 @@ from repro.core.latency import Hardware, V5E
 GAMMA_GRID = tuple(round(0.1 * i, 1) for i in range(11))   # paper Sec. 5.1
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecPoint:
+    """The speculation axis of the FPX grid: fast-draft / slow-verify
+    decoding at draft depth ``k``.
+
+    A candidate with a ``SpecPoint`` decodes in rounds: a cheap draft
+    (the same weights at ``draft_bits``, or a smaller model named by
+    ``draft_name`` in the analytic fleet) proposes ``k`` tokens, the
+    candidate verifies them in one chunked forward, and an accept/reject
+    sampler keeps the leading run that matches the verifier — so quality
+    is the *verifier's* (greedy output is token-identical to dense
+    decode), while throughput scales with the modeled per-token
+    acceptance probability ``accept``.  ``core.latency.speculate_s``
+    prices a round; expected emitted tokens per round is
+    ``sum_{i=0..k} accept^i`` (every round emits at least the verifier's
+    own token, at most ``k + 1`` with the bonus draw).
+    """
+    k: int
+    accept: float = 0.8
+    draft_bits: float = 4.0
+    draft_name: Optional[str] = None   # analytic cross-model draft point
+
+    def expected_tokens(self) -> float:
+        return lat_mod.spec_expected_tokens(self.k, self.accept)
+
+
 @dataclasses.dataclass
 class Candidate:
-    """One point on the FPX grid: a model at a compression ratio gamma."""
+    """One point on the FPX grid: a model at a compression ratio gamma,
+    optionally decoding speculatively (``spec`` — the third grid axis,
+    learned per traffic class by the router's ``OnlineSelector``)."""
     model_name: str
     cfg: ModelConfig                   # latency-model config (full scale)
     gamma: float
@@ -37,6 +65,7 @@ class Candidate:
     avg_bits: float
     latency_s: float                  # predicted action latency
     quality: Optional[float] = None   # e.g. -PPL or eval score (higher=better)
+    spec: Optional[SpecPoint] = None  # None = dense decode
 
     @property
     def policy(self) -> Dict[str, int]:
@@ -112,20 +141,54 @@ class OnlineSelector:
     (model size, gamma) to "real-time demands" (paper abstract)."""
 
     def __init__(self, grid: Sequence[Candidate], *, epsilon: float = 0.15,
-                 seed: int = 0, prior_quality: Optional[Callable] = None):
+                 seed: int = 0, prior_quality: Optional[Callable] = None,
+                 prior_weight: int = 1):
         self.grid = list(grid)
         self.eps = epsilon
         self.rng = random.Random(seed)
         self.counts = [0] * len(self.grid)
         self.means = [0.0] * len(self.grid)
         if prior_quality is not None:
-            # warm-start with the latency-model + PPL prior
+            # warm-start with the latency-model + PPL prior; the prior
+            # counts as ``prior_weight`` pseudo-observations so early
+            # unlucky draws temper it instead of erasing it
             self.means = [prior_quality(c) for c in self.grid]
+            self.counts = [int(prior_weight)] * len(self.grid)
 
-    def choose(self) -> int:
+    def choose(self, waits_s: Optional[Sequence[float]] = None, *,
+               feasible: Optional[Sequence[bool]] = None,
+               tol: float = 0.05) -> int:
+        """Epsilon-greedy draw.  ``waits_s`` (one queue wait per candidate,
+        e.g. engine backlogs) makes exploitation *load-aware*: among arms
+        whose learned mean is within ``tol`` (relative) of the best, pick
+        the least loaded.  Statistically equivalent arms — replicas of one
+        operating point, or adjacent draft depths of the same verifier —
+        then share load instead of the favorite saturating while its
+        equals idle.
+
+        ``feasible`` (one flag per arm) restricts the draw to arms whose
+        predicted ``wait + service`` still meets the request's deadline:
+        the bandit learns *quality*, but feasibility is known from the
+        latency model, so a saturated favorite spills to the next-best
+        arm instead of collecting guaranteed-zero rewards.  When no arm
+        is feasible the draw falls back to the least-loaded arm — the
+        paper's "win fast" regime."""
+        idxs = list(range(len(self.grid)))
+        if feasible is not None:
+            idxs = [i for i in idxs if feasible[i]]
+            if not idxs:
+                if waits_s is not None:
+                    return min(range(len(self.grid)),
+                               key=lambda i: (waits_s[i], i))
+                idxs = list(range(len(self.grid)))
         if self.rng.random() < self.eps:
-            return self.rng.randrange(len(self.grid))
-        return max(range(len(self.grid)), key=lambda i: self.means[i])
+            return self.rng.choice(idxs)
+        best = max(self.means[i] for i in idxs)
+        if waits_s is None:
+            return next(i for i in idxs if self.means[i] == best)
+        near = [i for i in idxs
+                if self.means[i] >= best - tol * abs(best) - 1e-12]
+        return min(near, key=lambda i: (waits_s[i], i))
 
     def update(self, idx: int, reward: float) -> None:
         self.counts[idx] += 1

@@ -295,6 +295,59 @@ def chunk_attn_s(cfg: ModelConfig, *, chunk: int, context: int,
     return total
 
 
+def spec_expected_tokens(k: int, accept: float) -> float:
+    """Expected tokens emitted by one fast-draft / slow-verify round at
+    draft depth ``k`` and per-token acceptance probability ``accept``:
+    the verifier's own token always lands, plus the leading run of
+    accepted drafts — ``sum_{i=0..k} accept^i``, between 1 (nothing
+    accepted) and ``k + 1`` (full accept + bonus)."""
+    a = min(max(accept, 0.0), 1.0)
+    return sum(a ** i for i in range(k + 1))
+
+
+def speculate_round_s(cfg: ModelConfig, *, k: int, n_lanes: int = 1,
+                      context: int = 0, w_bits: float = 16,
+                      draft_bits: float = 4.0,
+                      draft_cfg: Optional[ModelConfig] = None,
+                      hw: Hardware = V5E) -> float:
+    """One speculative round: ``k`` draft decode steps (the draft
+    operating point — same weights at ``draft_bits``, or a smaller
+    ``draft_cfg`` in the cross-model fleet form) followed by the
+    verifier's single chunked forward over ``[t0, d1..dk]``.
+
+    The verify pays one weight read for ``n_lanes * (k + 1)`` tokens of
+    linears — this is the speculation dividend: in the memory-bound
+    decode regime the verifier prices ``k + 1`` tokens at roughly one
+    dense step — plus flash chunk attention over each lane's written
+    context (:func:`chunk_attn_s`, fused-kernel semantics)."""
+    dcfg = draft_cfg or cfg
+    t = 0.0
+    for j in range(k):
+        t += step_latency(dcfg, n_tokens=n_lanes, context=context + j,
+                          w_bits=draft_bits, hw=hw)
+    t += step_latency(cfg, n_tokens=n_lanes * (k + 1), w_bits=w_bits, hw=hw)
+    t += n_lanes * chunk_attn_s(cfg, chunk=k + 1, context=context, hw=hw)
+    return t
+
+
+def speculate_s(cfg: ModelConfig, *, k: int, accept: float,
+                n_lanes: int = 1, context: int = 0, w_bits: float = 16,
+                draft_bits: float = 4.0,
+                draft_cfg: Optional[ModelConfig] = None,
+                hw: Hardware = V5E) -> float:
+    """Effective per-token decode time under speculation — the
+    :func:`step_latency` analog admission projections hold against
+    deadlines: one round advances every lane ``spec_expected_tokens``
+    tokens, so the effective inter-token time is ``round /
+    E[tokens]``.  Above the break-even acceptance rate this is *below*
+    the dense step time; below it, speculation is priced honestly as a
+    loss (the deadline-aware policy then collapses to dense)."""
+    return speculate_round_s(cfg, k=k, n_lanes=n_lanes, context=context,
+                             w_bits=w_bits, draft_bits=draft_bits,
+                             draft_cfg=draft_cfg, hw=hw) \
+        / spec_expected_tokens(k, accept)
+
+
 def decision_latency(cfg: ModelConfig, *, prompt_len: int = 512,
                      gen_tokens: int = 16, w_bits: float = 16,
                      hw: Hardware = V5E, dequant_to_16: bool = False) -> float:

@@ -206,11 +206,16 @@ def _paged_prefill_attend(q: jax.Array, k: jax.Array, v: jax.Array,
     # scatter deterministic.  The serving engine keeps every page of the
     # chunk's own span live, so this only fires for stale tables.
     skip = None if window is None else 0
+    # The Pallas scatter requires page-aligned chunk starts; verify
+    # chunks (speculative decode) begin mid-page, so their ExecContext
+    # sets ``unaligned_scatter`` to route the scatter through the jnp
+    # path while the attend below stays fused.
+    scatter_pallas = ctx.use_pallas and not ctx.unaligned_scatter
     kpool = kernel_ops.scatter_chunk(kpool, bt, pos, k,
-                                     use_pallas=ctx.use_pallas,
+                                     use_pallas=scatter_pallas,
                                      skip_page=skip)
     vpool = kernel_ops.scatter_chunk(vpool, bt, pos, v,
-                                     use_pallas=ctx.use_pallas,
+                                     use_pallas=scatter_pallas,
                                      skip_page=skip)
 
     out = kernel_ops.paged_attend(q, kpool, vpool, bt, pos, scale=scale,

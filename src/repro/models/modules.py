@@ -57,6 +57,12 @@ class ExecContext:
     #: shard_map path instead of the gather formulation (§Perf MoE iter).
     moe_mesh: Any = None
     moe_data_axes: Any = ("data",)
+    #: Chunked paged writes may start mid-page (speculative verify chunks
+    #: begin wherever the lane's write position sits).  The Pallas chunk
+    #: scatter requires page-aligned positions, so this flag keeps the
+    #: fused attend while forcing the jnp scatter for the (tiny, <= k+1
+    #: token) unaligned chunk.
+    unaligned_scatter: bool = False
 
     def full_name(self, name: str) -> str:
         return join(self.name_prefix, name)

@@ -589,6 +589,35 @@ def prefill_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
     return unembed(params, cfg, h[:, -1:], ctx), new_cache
 
 
+def verify_chunk(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                 cache: Dict[str, jax.Array],
+                 ctx: ExecContext = modules.DEFAULT_CTX, *,
+                 unroll: bool = True) -> Tuple[jax.Array, Any]:
+    """Verify a speculative draft: one paged chunk call, *all* logits.
+
+    ``batch["tokens"]``: (B, C) — each lane's last committed token
+    followed by its k draft tokens (C = k + 1), occupying global
+    positions ``pos[b] .. pos[b] + C - 1``.  The same machinery as
+    :func:`prefill_chunk` — the chunk's K/V are scattered into the
+    lanes' block-table pages *before* the fused attend (so the verifier
+    overwrites whatever the draft pass wrote at those positions), and
+    each position attends causally over the lane's written context plus
+    the chunk prefix.  The only contract difference: logits for *every*
+    chunk position come back, ``(B, C, V)`` — l_0..l_k for the
+    accept/reject sampler — instead of just the last.
+
+    Verify chunks start wherever the lane's write position sits, which
+    is rarely page-aligned: callers pass a ctx with
+    ``unaligned_scatter=True`` so the chunk scatter takes the jnp path
+    (the attend stays fused).  Rejected positions need no undo — the
+    host simply advances ``pos`` by the number of emitted tokens, and
+    the next chunk's scatter-before-attend overwrites the stale slots.
+    """
+    h, new_cache = _paged_step(params, cfg, batch, cache, ctx,
+                               unroll=unroll)
+    return unembed(params, cfg, h, ctx), new_cache
+
+
 def raw_prefill_group_kv(cfg: ModelConfig, raw_cache: Dict[str, Any],
                          lane: int = 0) -> Dict[str, Dict[str, jax.Array]]:
     """Flatten the per-segment raw prefill K/V (``prefill(...,

@@ -22,6 +22,11 @@ event stream and asserting the conservation laws the stack promises:
    (finish or drop), never both, never twice; a finish implies an
    admission.  Drops without admission are legal (admission-time policy
    rejections).
+5. **Speculation commit discipline** (per track).  Every ``spec.draft``
+   is committed by exactly one ``spec.accept`` before the next round on
+   that track begins, with ``0 <= accepted <= drafted`` — a draft token
+   can be emitted at most once, and a round is never silently dropped or
+   double-committed; at quiescence no round is left dangling.
 
 Run it on an exported Chrome trace (``benchmarks/table_paged.py --trace``
 or the examples' ``--trace out.json``):
@@ -40,14 +45,15 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_FREE,
                              PAGE_RESERVE, POOL_CONFIG, REQ_ADMIT, REQ_DROP,
                              REQ_FINISH, REQ_FIRST_TOKEN, REQ_PREFILL,
-                             REQ_PREFILL_CHUNK, REQ_TOKEN, WAVE_STEP)
+                             REQ_PREFILL_CHUNK, REQ_TOKEN, SPEC_ACCEPT,
+                             SPEC_DRAFT, SPEC_VERIFY, WAVE_STEP)
 
 #: events whose analytic timestamps must be non-decreasing per track
 #: (queue spans and arrivals are excluded by design: EDF admission emits
 #: them out of arrival order on shared tracks)
 _MONOTONIC = {ENGINE_STEP, WAVE_STEP, REQ_PREFILL, REQ_PREFILL_CHUNK,
               REQ_TOKEN, REQ_FIRST_TOKEN, PAGE_ALLOC, PAGE_FREE,
-              PAGE_RESERVE}
+              PAGE_RESERVE, SPEC_DRAFT, SPEC_VERIFY, SPEC_ACCEPT}
 _EPS = 1e-12
 
 
@@ -135,6 +141,7 @@ def check(events: Sequence[Event]) -> List[str]:
     last_t: Dict[str, float] = {}
     admitted: Set = set()
     retired: Dict = {}                    # rid -> "finish" | "drop"
+    spec_pending: Dict[str, int] = {}     # track -> uncommitted drafted
 
     for ev in events:
         a = ev.args or {}
@@ -160,6 +167,25 @@ def check(events: Sequence[Event]) -> List[str]:
                 errors.append(f"{ev.track}: {ev.name} before pool.config")
             else:
                 pool.apply(ev, errors)
+        # -- speculation commit discipline -------------------------------
+        elif ev.name == SPEC_DRAFT:
+            if ev.track in spec_pending:
+                errors.append(
+                    f"{ev.track}: spec.draft at t={ev.t0:.6f} while the "
+                    "previous round is uncommitted (missing spec.accept)")
+            spec_pending[ev.track] = int(a.get("drafted", 0))
+        elif ev.name == SPEC_ACCEPT:
+            drafted = spec_pending.pop(ev.track, None)
+            accepted = int(a.get("accepted", 0))
+            if drafted is None:
+                errors.append(f"{ev.track}: spec.accept at t={ev.t0:.6f} "
+                              "without a pending spec.draft "
+                              "(double commit?)")
+            elif not 0 <= accepted <= drafted:
+                errors.append(
+                    f"{ev.track}: spec round committed {accepted} draft "
+                    f"tokens but only {drafted} were drafted "
+                    f"(t={ev.t0:.6f})")
         # -- request lifecycle -------------------------------------------
         elif ev.name == REQ_ADMIT:
             rid = a.get("rid")
@@ -178,6 +204,9 @@ def check(events: Sequence[Event]) -> List[str]:
 
     for rid in sorted(admitted - set(retired), key=repr):
         errors.append(f"request {rid}: admitted but never retired")
+    for track in sorted(spec_pending):
+        errors.append(f"{track}: spec.draft never committed "
+                      "(dangling round at end of trace)")
     if not (admitted - set(retired)):     # quiescent: no request live
         for pool in pools.values():
             if pool.live_pages():

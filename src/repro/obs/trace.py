@@ -70,6 +70,19 @@ REQ_DROP = "req.drop"
 #: span — one batched decode step.  args: n_active, context, lanes
 #: (rids), wall_s (measured host seconds for the real-compute engines)
 ENGINE_STEP = "engine.step"
+#: instant — a speculative round drafted k tokens per decoding lane.
+#: args: k, lanes (rids), drafted (k * len(lanes))
+SPEC_DRAFT = "spec.draft"
+#: instant — the verifier scored a drafted round in one chunk call.
+#: args: lanes (rids), chunk (k + 1)
+SPEC_VERIFY = "spec.verify"
+#: instant — a drafted round committed.  args: lanes (rids), accepted
+#: (draft tokens kept, summed over lanes — at most ``drafted`` of the
+#: round's SPEC_DRAFT, the invariant check_trace replays), emitted
+#: (tokens written including the verifier's correction/bonus).  Exactly
+#: one SPEC_ACCEPT follows each SPEC_DRAFT on its track (exactly-once
+#: commit).
+SPEC_ACCEPT = "spec.accept"
 #: span — one padded wave of the wave scheduler.  args: n, rids
 WAVE_STEP = "wave.step"
 #: instant — router chose an engine.  args: rid, cls, engine_idx

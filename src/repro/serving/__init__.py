@@ -69,6 +69,41 @@ lifecycle fields the engines fill in):
   land during the chunked prefill.  Greedy outputs are token-identical
   to the monolithic path for any chunk size.
 
+  **Jit'd sampling layer** (:mod:`sampler`).  Token selection is a
+  first-class policy, not engine code: every path — wave prefill and
+  decode, paged prefill/chunk/decode, speculative draft and
+  accept/reject — ends its jit'd step in ``sampler.sample(policy,
+  logits, rids, positions)``, so only ``(slots,)`` int32 token ids ever
+  cross to host.  :class:`~repro.serving.sampler.SamplerPolicy`
+  (temperature, top-k via ``jax.lax.top_k``, seed; ``temp=0`` is exact
+  argmax greedy) draws from lane-keyed counter-style PRNG streams —
+  ``fold_in(fold_in(fold_in(key(seed), stream), rid), position)`` — so a
+  request's draws are independent of its batch slot and engine, and any
+  run is replayable per request.
+
+  **Fast-draft / slow-verify speculative decoding** (fused path only).
+  ``ContinuousEngine(speculate=SpecPoint(k, ...))`` turns a decode step
+  into a round: the engine self-drafts ``k`` tokens cheaply (same
+  weights at ``SpecPoint.draft_bits``, chained paged decode steps), the
+  full-precision verifier scores all ``k + 1`` positions in one fused
+  chunk call (``transformer.verify_chunk``; its unaligned scatter
+  overwrites the draft's K/V, so the cache holds verifier state), and
+  the jit'd ``sampler.spec_accept`` keeps the leading
+  verifier-consistent run — greedy output is token-identical to dense
+  decode for any draft depth and accept pattern (cross-path harness,
+  both kernel modes), temperature output preserves the verifier's
+  distribution.  Speculation is an FPX axis: ``core.latency.
+  speculate_s`` prices a round, admission reserves ``k`` extra cache
+  positions and sizes page demand for the verify chunk, and
+  ``spec_round_fits`` collapses rounds to dense steps whenever the
+  tightest co-resident deadline cannot absorb one — win fast under
+  pressure, draft deep under slack.  The analytic batcher mirrors the
+  same round math, so :class:`FleetRouter`'s per-class
+  ``OnlineSelector`` learns draft depth per traffic class
+  (``fleet.spec_variants`` widens a pool along the axis;
+  ``benchmarks/table_spec.py`` shows the learned arm beating
+  always-dense and every fixed-k deployment on goodput).
+
 * **Traffic-scale path** — the fleet simulator.  Its contract, end to end:
 
   - **Clock.**  One global notion of simulated time, denominated in the
@@ -114,7 +149,9 @@ and into streaming SLO reports (``repro.obs.MetricsSink`` — reservoir
 percentiles feeding the same extended ``SLOReport``).  The trace is also
 an audit surface: ``repro.obs.check_trace`` replays any exported trace
 and proves page conservation, reservation non-negativity, per-track clock
-monotonicity, and exactly-once retirement of every admitted request.
+monotonicity, exactly-once retirement of every admitted request, and
+speculation commit discipline (every ``spec.draft`` committed by exactly
+one ``spec.accept`` with ``accepted <= drafted`` before the next round).
 
 The paths meet at the operating point: the same ``fpx.Candidate`` that
 parameterizes a simulated engine can be applied to a live engine via its
@@ -129,6 +166,7 @@ from repro.serving.fleet import FleetRouter, pool_candidates
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.metrics import SLOReport, summarize
 from repro.serving.paged_engine import ContinuousEngine
+from repro.serving.sampler import GREEDY, SamplerPolicy
 from repro.serving.scheduler import Request, Scheduler
 from repro.serving.traffic import (SCENARIOS, SimRequest, TrafficClass,
                                    generate, scenario)
@@ -138,5 +176,5 @@ __all__ = [
     "GenerationResult", "ServingEngine", "FleetRouter", "PagedKVCache",
     "pool_candidates", "SLOReport", "summarize", "Request", "Scheduler",
     "SCENARIOS", "SimRequest", "TrafficClass", "generate", "scenario",
-    "degraded_budget", "projected_finish",
+    "degraded_budget", "projected_finish", "GREEDY", "SamplerPolicy",
 ]

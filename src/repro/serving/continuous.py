@@ -63,12 +63,27 @@ class LatencyProfile:
     KV traffic at the *padded* block-table extent (``padded_ctx``), added
     on top.  Engines built on a gather profile project slower steps, so
     admission, degrade budgets and routing all see the difference — the
-    kernel's win flows into goodput, not just microbenchmarks."""
+    kernel's win flows into goodput, not just microbenchmarks.
+
+    ``spec`` (a :class:`repro.core.fpx.SpecPoint`) prices fast-draft /
+    slow-verify decoding: :meth:`spec_round_s` is one k-token round
+    (draft steps + the verifier's fused chunk call), and :meth:`tok_s`
+    becomes the *effective* per-token time ``round / E[tokens]`` — the
+    single lever through which admission projections, the analytic
+    batcher, and the fleet router all see speculation's throughput.
+    ``draft_cfg``: the analytic cross-model form (e.g. 1.5b drafts for
+    14b); ``None`` drafts with the same config at ``spec.draft_bits``
+    (self-speculation, what the live engine runs).  Speculation pricing
+    assumes the fused chunk-attend semantics, so it requires
+    ``attn_impl="fused"``."""
 
     def __init__(self, cfg: ModelConfig, avg_bits: float, *,
                  hw: Hardware = V5E, attn_impl: str = "fused",
-                 padded_ctx: Optional[int] = None):
+                 padded_ctx: Optional[int] = None, spec=None,
+                 draft_cfg: Optional[ModelConfig] = None):
         assert attn_impl in ("fused", "gather"), attn_impl
+        assert spec is None or attn_impl == "fused", \
+            "speculation is priced with fused chunk-attend semantics"
         if attn_impl == "gather" and cfg.arch_type not in ("dense", "moe"):
             # the gather adjustment in step_s cancels step_latency's
             # built-in attention term; both now price per attention layer
@@ -84,9 +99,12 @@ class LatencyProfile:
         self.hw = hw
         self.attn_impl = attn_impl
         self.padded_ctx = padded_ctx
+        self.spec = spec
+        self.draft_cfg = draft_cfg
         self._prefill: Dict[Tuple[int, int], float] = {}
         self._step: Dict[Tuple[int, int], float] = {}
         self._service: Dict[Tuple[int, int], float] = {}
+        self._spec_round: Dict[Tuple[int, int], float] = {}
 
     def prefill_s(self, prompt_len: int, context: int = 0) -> float:
         """Cost of absorbing ``prompt_len`` prompt tokens with ``context``
@@ -132,15 +150,49 @@ class LatencyProfile:
             self._step[key] = t
         return t
 
+    def spec_round_s(self, n_active: int, context: int) -> float:
+        """One speculative round at this occupancy: ``spec.k`` draft steps
+        plus the verifier's fused chunk call (memoized per context bucket,
+        same discipline as :meth:`step_s`)."""
+        assert self.spec is not None
+        bucket = max(1, context // _CTX_BUCKET)
+        key = (n_active, bucket)
+        t = self._spec_round.get(key)
+        if t is None:
+            t = lat_mod.speculate_round_s(
+                self.cfg, k=self.spec.k, n_lanes=n_active,
+                context=bucket * _CTX_BUCKET, w_bits=self.avg_bits,
+                draft_bits=self.spec.draft_bits, draft_cfg=self.draft_cfg,
+                hw=self.hw)
+            self._spec_round[key] = t
+        return t
+
+    def tok_s(self, n_active: int, context: int) -> float:
+        """Effective per-token decode time — what projections hold against
+        deadlines.  Dense profiles: exactly :meth:`step_s`.  Speculative
+        profiles: one round's cost amortized over its expected emission,
+        ``spec_round_s / spec_expected_tokens`` — cheaper than a dense
+        step above the break-even acceptance rate, honestly worse below
+        it."""
+        if self.spec is None:
+            return self.step_s(n_active, context)
+        return self.spec_round_s(n_active, context) \
+            / self.spec.expected_tokens()
+
     def service_s(self, prompt_len: int, gen_tokens: int) -> float:
         """Uncontended end-to-end action latency (the planning estimate the
-        router holds against a request's deadline slack)."""
+        router holds against a request's deadline slack).  Speculative
+        profiles decode at the effective :meth:`tok_s` rate."""
         key = (prompt_len, gen_tokens)
         t = self._service.get(key)
         if t is None:
-            t = lat_mod.decision_latency(self.cfg, prompt_len=prompt_len,
-                                         gen_tokens=gen_tokens,
-                                         w_bits=self.avg_bits, hw=self.hw)
+            if self.spec is None:
+                t = lat_mod.decision_latency(self.cfg, prompt_len=prompt_len,
+                                             gen_tokens=gen_tokens,
+                                             w_bits=self.avg_bits, hw=self.hw)
+            else:
+                t = self.prefill_s(prompt_len) + gen_tokens * self.tok_s(
+                    1, prompt_len + gen_tokens // 2)
             self._service[key] = t
         return t
 
@@ -178,6 +230,12 @@ class _Running:
     context: int
     #: prompt tokens not yet absorbed (chunked prefill; 0 = decoding)
     prefill_left: int = 0
+    #: speculative decoding: fractional expected-emission credit carried
+    #: between rounds so the deterministic mirror lands
+    #: ``spec_expected_tokens`` tokens per round *on average* with
+    #: integer emissions (credit += E; emit = floor(credit); credit -=
+    #: emit)
+    credit: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -198,7 +256,7 @@ def _prefill_charge(profile: LatencyProfile, prompt_len: int,
     total = profile.prefill_chunked_s(prompt_len, prefill_chunk)
     n_chunks = len(prompt_chunks(prompt_len, prefill_chunk))
     if n_active_after > 1:
-        total += (n_chunks - 1) * profile.step_s(n_active_after, prompt_len)
+        total += (n_chunks - 1) * profile.tok_s(n_active_after, prompt_len)
     return total
 
 
@@ -210,7 +268,7 @@ def projected_finish(profile: LatencyProfile, t_now: float,
     steps — see :func:`_prefill_charge`), then ``n_tokens`` steps at the
     post-admission occupancy (context taken at the request's mid-decode
     point)."""
-    step = profile.step_s(n_active_after, req.prompt_len + n_tokens // 2)
+    step = profile.tok_s(n_active_after, req.prompt_len + n_tokens // 2)
     prefill = _prefill_charge(profile, req.prompt_len, n_active_after,
                               prefill_chunk)
     return t_now + prefill + n_tokens * step
@@ -234,7 +292,7 @@ def degraded_budget(profile: LatencyProfile, t_now: float,
         return 0
     n = req.max_new
     while n >= 1:
-        step = profile.step_s(n_active_after, req.prompt_len + n // 2)
+        step = profile.tok_s(n_active_after, req.prompt_len + n // 2)
         if step <= 0:
             return n
         fit = min(n, int(slack / step))
@@ -242,6 +300,19 @@ def degraded_budget(profile: LatencyProfile, t_now: float,
             return n
         n = fit
     return 0
+
+
+def spec_round_fits(profile: LatencyProfile, t_now: float,
+                    deadlines_abs, n_active: int, context: int) -> bool:
+    """The deadline-aware collapse rule, shared verbatim by the analytic
+    batcher and the live paged engine: run a speculative round only when
+    the *whole* round (draft + verify) lands before every decoding
+    lane's deadline; otherwise collapse to a dense step.  Under deadline
+    pressure a round that might emit one token must not cost k-draft +
+    verify time — a dense step is the safe floor.  Deterministic, so the
+    two engine flavors collapse at the same clock instants."""
+    return t_now + profile.spec_round_s(n_active, context) \
+        <= min(deadlines_abs)
 
 
 def post_prefill_fit(profile: LatencyProfile, t_now: float, n_active: int,
@@ -259,7 +330,7 @@ def post_prefill_fit(profile: LatencyProfile, t_now: float, n_active: int,
     drops."""
     if t_now > deadline_abs:
         return -1
-    step = profile.step_s(max(1, n_active), context + remaining // 2)
+    step = profile.tok_s(max(1, n_active), context + remaining // 2)
     if step <= 0:
         return remaining
     return min(remaining, int((deadline_abs - t_now) / step))
@@ -409,6 +480,11 @@ class ContinuousBatcher:
             return                        # every occupied slot still prefilling
         n = len(decoding)
         ctx = max(r.context for r in decoding)
+        if self.profile.spec is not None and spec_round_fits(
+                self.profile, self.t,
+                [r.req.deadline_abs for r in decoding], n, ctx):
+            self._spec_round(decoding, n, ctx)
+            return
         t0 = self.t
         self.t += self.profile.step_s(n, ctx)
         if self.tr:
@@ -448,6 +524,70 @@ class ContinuousBatcher:
                 self.on_retire(req)
         self.active = still
         if self.tr:
+            self.tr.counter(tr_mod.CTR_LANES, self.t, len(self.active),
+                            track="steps")
+            self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),
+                            track="queue")
+
+    def _spec_round(self, decoding: List[_Running], n: int,
+                    ctx: int) -> None:
+        """The analytic mirror of one fast-draft / slow-verify round: one
+        ``spec_round_s`` charge advances every decoding lane by its
+        integer share of ``spec_expected_tokens`` (per-lane fractional
+        credit keeps the long-run rate exact and the replay
+        deterministic), capped by the lane's remaining budget and the
+        round's ``k + 1`` ceiling.  Every round lands at least one token
+        per lane — the verifier's own — exactly like the live engine."""
+        spec = self.profile.spec
+        t0 = self.t
+        self.t += self.profile.spec_round_s(n, ctx)
+        if self.tr:
+            rids = [r.req.rid for r in decoding]
+            self.tr.instant(tr_mod.SPEC_DRAFT, t0, track="steps", k=spec.k,
+                            lanes=rids, drafted=spec.k * n)
+            self.tr.instant(tr_mod.SPEC_VERIFY, self.t, track="steps",
+                            lanes=rids, chunk=spec.k + 1)
+        e = spec.expected_tokens()
+        still: List[_Running] = [r for r in self.active
+                                 if r.prefill_left > 0]
+        accepted = emitted = 0
+        for run in decoding:
+            run.credit += e
+            emit = min(int(run.credit), run.remaining, spec.k + 1)
+            run.credit -= emit
+            accepted += emit - 1          # verifier's token is never a draft
+            emitted += emit
+            first = run.req.tokens_done == 0
+            run.remaining -= emit
+            run.context += emit
+            run.req.tokens_done += emit
+            if first:
+                run.req.t_first_token = self.t
+                if self.tr:
+                    self.tr.instant(tr_mod.REQ_FIRST_TOKEN, self.t,
+                                    track="steps", rid=run.req.rid,
+                                    ttft_s=self.t - run.req.t_arrive)
+            if self.tr:
+                for _ in range(emit - (1 if first else 0)):
+                    self.tr.instant(tr_mod.REQ_TOKEN, self.t, track="steps",
+                                    rid=run.req.rid)
+            if run.remaining > 0:
+                still.append(run)
+                continue
+            req = run.req
+            req.t_finish = self.t
+            req.latency_s = self.t - req.t_arrive
+            req.met_deadline = req.t_finish <= req.deadline_abs
+            self.completed.append(req)
+            if self.tr:
+                emit_finish(self.tr, req, track="steps")
+            if self.on_retire is not None:
+                self.on_retire(req)
+        self.active = still
+        if self.tr:
+            self.tr.instant(tr_mod.SPEC_ACCEPT, self.t, track="steps",
+                            lanes=[r.req.rid for r in decoding],
+                            accepted=accepted, emitted=emitted)
             self.tr.counter(tr_mod.CTR_LANES, self.t, len(self.active),
                             track="steps")
             self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),
@@ -581,7 +721,7 @@ def estimate_backlog(profile: LatencyProfile, t: float, now: float,
     so under the length-aware clock a prefill near the end of a long
     prompt is priced at its true (high) per-chunk cost, not as a fresh
     start."""
-    step1 = profile.step_s(max(1, len(active_remaining)), _CTX_BUCKET * 4)
+    step1 = profile.tok_s(max(1, len(active_remaining)), _CTX_BUCKET * 4)
     work = sum(active_remaining) * step1
 
     def prefill_cost(n_tokens: int, start_ctx: int = 0) -> float:

@@ -17,12 +17,14 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import latency as lat_mod
 from repro.models import transformer
 from repro.models.modules import ExecContext
 from repro.serving import sampler as sampler_mod
+from repro.serving.sampler import SamplerPolicy
 
 
 @dataclasses.dataclass
@@ -39,12 +41,14 @@ class ServingEngine:
                  max_ctx: int = 4096,
                  latency_cfg: Optional[ModelConfig] = None,
                  avg_bits: float = 16.0,
-                 unroll: bool = True):
+                 unroll: bool = True,
+                 sampler: Optional[SamplerPolicy] = None):
         """``latency_cfg``: config used for the latency model (the full-scale
         model that this sim-scale model represents); defaults to ``cfg``.
         ``unroll=True`` executes layer loops in python — right for the small
         models served on CPU, and it makes per-name precision policies apply
-        directly."""
+        directly.  ``sampler``: token-selection policy fused into the jit'd
+        steps (default greedy; swap with :meth:`set_sampler`)."""
         self.params = params
         self.cfg = cfg
         self.ctx = ctx or ExecContext()
@@ -52,13 +56,31 @@ class ServingEngine:
         self.latency_cfg = latency_cfg or cfg
         self.avg_bits = avg_bits
         self.unroll = unroll
-        self._prefill = jax.jit(
-            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
-                                             unroll=unroll,
-                                             cache_len=max_ctx))
-        self._decode = jax.jit(
-            lambda p, b, c: transformer.decode_step(p, cfg, b, c, self.ctx,
-                                                    unroll=unroll))
+        self.sampler = sampler or sampler_mod.GREEDY
+        self._base_sampler = self.sampler
+        self._jit_steps()
+
+    def _jit_steps(self) -> None:
+        """(Re-)jit prefill/decode with sampling fused in: each step takes
+        (params, batch, [cache,] rids, positions) and returns the sampled
+        (B, 1) int32 ids alongside logits + cache — token selection runs
+        device-side under the current :class:`SamplerPolicy`."""
+        cfg, max_ctx, unroll = self.cfg, self.max_ctx, self.unroll
+        pol = self.sampler
+
+        def pre(p, b, rids, pos):
+            logits, cache = transformer.prefill(p, cfg, b, self.ctx,
+                                                unroll=unroll,
+                                                cache_len=max_ctx)
+            return sampler_mod.sample(pol, logits, rids, pos), logits, cache
+
+        def dec(p, b, c, rids, pos):
+            logits, cache = transformer.decode_step(p, cfg, b, c, self.ctx,
+                                                    unroll=unroll)
+            return sampler_mod.sample(pol, logits, rids, pos), logits, cache
+
+        self._prefill = jax.jit(pre)
+        self._decode = jax.jit(dec)
 
     def set_policy(self, policy: Dict[str, int], default_bits: int = 8,
                    avg_bits: Optional[float] = None) -> None:
@@ -67,13 +89,18 @@ class ServingEngine:
                                        default_bits=default_bits)
         if avg_bits is not None:
             self.avg_bits = avg_bits
-        cfg, max_ctx, unroll = self.cfg, self.max_ctx, self.unroll
-        self._prefill = jax.jit(
-            lambda p, b: transformer.prefill(p, cfg, b, self.ctx,
-                                             unroll=unroll, cache_len=max_ctx))
-        self._decode = jax.jit(
-            lambda p, b, c: transformer.decode_step(p, cfg, b, c, self.ctx,
-                                                    unroll=unroll))
+        self._jit_steps()
+
+    def set_sampler(self, sampler: SamplerPolicy) -> None:
+        """Swap the standing token-selection policy (re-jits on change) —
+        the sampling-layer twin of :meth:`set_policy`."""
+        self._base_sampler = sampler
+        self._apply_sampler(sampler)
+
+    def _apply_sampler(self, sampler: SamplerPolicy) -> None:
+        if sampler != self.sampler:
+            self.sampler = sampler
+            self._jit_steps()
 
     def modeled_latency(self, prompt_len: int, gen_tokens: int) -> float:
         """Modeled action latency for one request's own shape under the
@@ -85,28 +112,38 @@ class ServingEngine:
                                         w_bits=self.avg_bits)
 
     def generate(self, batch: Dict[str, jax.Array], *, max_new: int = 16,
-                 key=None, temp: float = 0.0) -> GenerationResult:
+                 key=None, temp: float = 0.0, top_k: int = 0,
+                 rids=None) -> GenerationResult:
         """batch: {"tokens": (B, S)} (+ vision/audio for those archs).
 
-        ``temp > 0`` samples; ``key=None`` then falls back to a fixed seed
-        (``PRNGKey(0)``) instead of crashing inside ``jax.random.split`` —
-        pass a key explicitly for independent draws across calls."""
-        if temp > 0.0 and key is None:
-            key = jax.random.PRNGKey(0)
+        ``temp > 0`` samples under a per-call :class:`SamplerPolicy`
+        (re-jits only when the policy actually changes); ``temp == 0``
+        uses the engine's standing policy (default greedy).  Sampling is
+        device-side with lane-indexed keys: row ``b`` draws under
+        (seed, rids[b], output position), so a request's tokens are
+        reproducible and independent of its batch slot.  ``key`` is
+        accepted for backward compatibility — its trailing word seeds the
+        policy (``key=None`` keeps seed 0, the historical ``PRNGKey(0)``
+        fallback); ``rids`` defaults to ``arange(B)``."""
+        if temp > 0.0:
+            seed = 0 if key is None else int(np.asarray(key).ravel()[-1])
+            self._apply_sampler(SamplerPolicy(temp=temp, top_k=top_k,
+                                              seed=seed))
+        else:
+            self._apply_sampler(self._base_sampler)
         tokens = jnp.asarray(batch["tokens"])
         B, S = tokens.shape
         assert S + max_new <= self.max_ctx, (S, max_new, self.max_ctx)
-        logits, cache = self._prefill(self.params, batch)
-        outs = []
-        for i in range(max_new):
-            if temp <= 0.0:
-                nxt = sampler_mod.greedy(logits)
-            else:
-                key, sub = jax.random.split(key)
-                nxt = sampler_mod.temperature(logits, sub, temp)
+        rids = jnp.arange(B, dtype=jnp.int32) if rids is None \
+            else jnp.asarray(rids, dtype=jnp.int32)
+        pos = jnp.zeros((B,), jnp.int32)
+        nxt, logits, cache = self._prefill(self.params, batch, rids, pos)
+        outs = [nxt]
+        for i in range(1, max_new):
+            nxt, logits, cache = self._decode(
+                self.params, {"token": nxt}, cache, rids,
+                jnp.full((B,), i, jnp.int32))
             outs.append(nxt)
-            if i + 1 < max_new:
-                logits, cache = self._decode(self.params, {"token": nxt}, cache)
         new = jnp.concatenate(outs, axis=1)
         t = self.modeled_latency(S, max_new)
         return GenerationResult(tokens=jnp.concatenate([tokens, new], axis=1),

@@ -33,7 +33,7 @@ from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.core import assign as assign_mod
 from repro.core import fpx
-from repro.core.fpx import Candidate, OnlineSelector
+from repro.core.fpx import Candidate, OnlineSelector, SpecPoint
 from repro.core.latency import Hardware, V5E
 from repro.core import latency as lat_mod
 
@@ -103,6 +103,42 @@ def demo_pool(*, hw: Hardware = V5E) -> List[Candidate]:
          for name, g in DEMO_POINTS], hw=hw)
 
 
+def spec_variants(pool: Sequence[Candidate], *,
+                  models: Sequence[str] = ("qwen2.5-7b", "qwen2.5-14b"),
+                  ks: Sequence[int] = (2, 4), accept: float = 0.8,
+                  draft_name: Optional[str] = "qwen2.5-1.5b",
+                  ) -> List[Candidate]:
+    """Widen an operating-point pool along the speculation axis: for each
+    candidate of the named (large) models, add a fast-draft / slow-verify
+    variant per draft depth in ``ks``.  Quality is unchanged — the
+    verifier's output distribution is exactly the dense candidate's — so
+    the variants differ only in *priced* throughput: cheaper per token
+    above the break-even acceptance rate, honestly slower below it, and
+    they collapse to dense steps under deadline pressure.  The per-class
+    :class:`~repro.core.fpx.OnlineSelector` then learns draft depth per
+    traffic class exactly as it learns (model, gamma): draft aggressively
+    where slack is rich, stay dense where deadlines are tight.
+
+    ``draft_name``: the small FPX point doing the drafting in the
+    analytic fleet (cross-model pricing); ``None`` prices self-drafting
+    at ``SpecPoint.draft_bits``."""
+    out = list(pool)
+    for c in pool:
+        if c.model_name in models and c.spec is None:
+            out.extend(dataclasses.replace(
+                c, spec=SpecPoint(k=k, accept=accept,
+                                  draft_name=draft_name)) for k in ks)
+    return out
+
+
+def demo_spec_pool(*, hw: Hardware = V5E, ks: Sequence[int] = (2, 4),
+                   accept: float = 0.8) -> List[Candidate]:
+    """The demo pool widened along the speculation axis: the two large
+    verifiers (7b, 14b) each gain draft-depth variants drafted by the
+    1.5b point."""
+    return spec_variants(demo_pool(hw=hw), ks=ks, accept=accept)
+
+
 class FleetRouter:
     """Dispatch + feedback loop over a pool of continuous batchers."""
 
@@ -134,12 +170,17 @@ class FleetRouter:
         self.tr = tracer or tr_mod.NULL
         if engines is None:
             self.engines = [
-                ContinuousBatcher(LatencyProfile(c.cfg, c.avg_bits, hw=hw),
-                                  slots=slots, policy=policy,
-                                  on_retire=self._retire,
-                                  tracer=self.tr.scope(
-                                      f"eng{i}:{c.model_name}-g{c.gamma:g}")
-                                  if self.tr else None)
+                ContinuousBatcher(
+                    LatencyProfile(
+                        c.cfg, c.avg_bits, hw=hw, spec=c.spec,
+                        draft_cfg=get_config(c.spec.draft_name)
+                        if c.spec is not None and c.spec.draft_name
+                        else None),
+                    slots=slots, policy=policy, on_retire=self._retire,
+                    tracer=self.tr.scope(
+                        f"eng{i}:{c.model_name}-g{c.gamma:g}"
+                        + (f"-k{c.spec.k}" if c.spec else ""))
+                    if self.tr else None)
                 for i, c in enumerate(self.cands)]
         else:
             assert len(engines) == len(self.cands), \
@@ -156,7 +197,8 @@ class FleetRouter:
         sel = self.selectors.get(cls_name)
         if sel is None:
             sel = OnlineSelector(self.cands, epsilon=self.epsilon,
-                                 seed=self.seed + len(self.selectors))
+                                 seed=self.seed + len(self.selectors),
+                                 prior_quality=self.quality)
             self.selectors[cls_name] = sel
         return sel
 
@@ -181,7 +223,11 @@ class FleetRouter:
 
     def dispatch(self, req: SimRequest) -> int:
         if self.mode == "bandit":
-            idx = self._selector(req.cls_name).choose()
+            waits = [e.backlog_s(req.t_arrive) for e in self.engines]
+            fits = [w + e.profile.service_s(req.prompt_len, req.max_new)
+                    <= req.deadline_s
+                    for w, e in zip(waits, self.engines)]
+            idx = self._selector(req.cls_name).choose(waits, feasible=fits)
         else:
             waits = [e.backlog_s(req.t_arrive) for e in self.engines]
             cands = [dataclasses.replace(

@@ -385,7 +385,8 @@ class PagedKVCache:
                 if any(int(self._reserved[g.name][s])
                        for g in self.groups)]
 
-    def decode_cache(self, exclude: Tuple[int, ...] = ()) -> dict:
+    def decode_cache(self, exclude: Tuple[int, ...] = (),
+                     lookahead: int = 1) -> dict:
         """The pytree ``transformer.paged_decode_step`` consumes:
         ``{"pos": (slots,), "groups": {name: {"kpool", "vpool",
         "block_tables"}}}``.
@@ -393,8 +394,12 @@ class PagedKVCache:
         ``exclude``: slots whose rows are masked to the dummy page (pos 0)
         for this step — mid-prefill lanes own real pages but must not be
         written or read by a decode step, exactly like idle lanes.  For
-        every *included* live lane the write page at its position is made
-        live first (window groups allocate lazily).
+        every *included* live lane the write pages for the next
+        ``lookahead`` positions are made live first (window groups
+        allocate lazily) — 1 for a dense step; a speculative round passes
+        ``k + 1`` so the draft steps and the verify chunk can write the
+        whole span ``[pos, pos + k]`` before the host learns how much of
+        it was accepted.
 
         The block table / position rows are **copied** before wrapping:
         ``jnp.asarray`` of a numpy array may alias its buffer zero-copy on
@@ -405,7 +410,7 @@ class PagedKVCache:
         sampling forcing a sync every step)."""
         for s in self._live_slots():
             if s not in exclude:
-                self.prepare_tokens(s, 1)
+                self.prepare_tokens(s, lookahead)
         pos = self.pos.copy()
         groups = {}
         for g in self.groups:

@@ -38,6 +38,15 @@ does both at once:
   _post_prefill_check`) — interleaved decode charges landed since the
   admission projection, so "fits the deadline" must be re-proved before
   the decode budget is spent.
+* **Jit'd sampling, optional speculation.**  Token selection is closed
+  over from a :class:`~repro.serving.sampler.SamplerPolicy` inside every
+  jit'd step — greedy and temperature/top-k both run device-side, with
+  only ``(slots,)`` int32 ids crossing to host.  A
+  :class:`~repro.core.fpx.SpecPoint` (``speculate=``) switches decode to
+  fast-draft / slow-verify rounds: draft ``k`` tokens cheaply (same
+  weights at ``draft_bits``), verify in one fused chunk, accept/reject
+  on device — greedy output stays token-identical to dense decode, and
+  rounds collapse to dense steps under deadline pressure.
 * **The analytic clock.**  Between real steps the engine advances the same
   ``core.latency`` roofline clock the traffic simulator and the FPX
   controller use (CPU wall time is meaningless here), and reuses the
@@ -63,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.fpx import SpecPoint
 from repro.core.latency import Hardware, V5E
 from repro.models import transformer
 from repro.models.modules import ExecContext
@@ -71,17 +81,10 @@ from repro.serving import sampler as sampler_mod
 from repro.serving.continuous import (LatencyProfile, degraded_budget,
                                       emit_admit, emit_arrive, emit_finish,
                                       estimate_backlog, post_prefill_fit,
-                                      projected_finish, retire_dropped)
+                                      projected_finish, retire_dropped,
+                                      spec_round_fits)
 from repro.serving.continuous import drive as continuous_drive
 from repro.serving.kv_cache import PagedKVCache
-
-
-def _sample_first(step_out):
-    """Fold greedy sampling into a jit'd prefill/chunk/decode step: map the
-    (logits, cache) a transformer entry point returns to (token ids, cache)
-    so the logits never leave the device."""
-    logits, cache = step_out
-    return sampler_mod.greedy(logits), cache
 
 
 @dataclasses.dataclass
@@ -114,7 +117,9 @@ class ContinuousEngine:
                  on_retire: Optional[Callable] = None,
                  prompt_seed: int = 0, unroll: bool = True,
                  prefill_chunk: Optional[int] = None,
-                 attn_impl: str = "fused", tracer=None):
+                 attn_impl: str = "fused", tracer=None,
+                 sampler: Optional[sampler_mod.SamplerPolicy] = None,
+                 speculate: Optional[SpecPoint] = None):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
@@ -146,7 +151,25 @@ class ContinuousEngine:
         receiving the full lifecycle/step/page event stream — spans carry
         the host wall time of the real compute alongside the analytic
         clock (``drift_report`` compares the two).  None = the
-        zero-overhead null tracer."""
+        zero-overhead null tracer.
+
+        ``sampler``: the :class:`~repro.serving.sampler.SamplerPolicy`
+        the jit'd steps close over (None = greedy).  Stochastic policies
+        run device-side too, keyed per (rid, output position) — a
+        request's tokens are reproducible regardless of lane placement.
+
+        ``speculate``: a :class:`~repro.core.fpx.SpecPoint` switches
+        decode to fast-draft / slow-verify rounds: one jit'd call drafts
+        ``k`` tokens per decoding lane with the *same* weights at
+        ``draft_bits``, verifies them through one fused
+        ``transformer.verify_chunk``, and accept/rejects on device
+        (:func:`~repro.serving.sampler.spec_accept`) — greedy output is
+        token-identical to dense decode for any draft quality.  Rounds
+        collapse to dense steps whenever the round would blow the
+        earliest lane deadline (:func:`~repro.serving.continuous.
+        spec_round_fits`).  Admission reserves ``k`` extra positions of
+        page headroom (a round writes up to ``pos + k`` before the host
+        learns the accepted count); requires the fused attention path."""
         if not transformer.paged_supported(cfg):
             raise NotImplementedError(
                 "ContinuousEngine needs the paged decode path, which "
@@ -164,11 +187,25 @@ class ContinuousEngine:
                 f"prefill_chunk ({prefill_chunk}) must be a positive "
                 f"multiple of page_size ({page_size})")
         self.prefill_chunk = prefill_chunk
+        self.speculate = speculate
+        if speculate is not None and attn_impl != "fused":
+            raise ValueError("speculative decoding rides the fused paged "
+                             "attention path (attn_impl='fused')")
+        #: extra block-table positions a speculative round may write past
+        #: the committed pos before the host clamps the accepted count
+        self._spec_k = 0 if speculate is None else speculate.k
+        #: chunk extent that sizes transient window-group page demand:
+        #: the larger of a prefill chunk and a speculative write span
+        self._page_chunk = (prefill_chunk if speculate is None
+                            else max(prefill_chunk or 1, speculate.k + 1))
         width = -(-max_ctx // page_size)
         self.profile = profile or LatencyProfile(latency_cfg or cfg,
                                                  avg_bits, hw=hw,
                                                  attn_impl=attn_impl,
-                                                 padded_ctx=width * page_size)
+                                                 padded_ctx=width * page_size,
+                                                 spec=speculate)
+        assert self.profile.spec == speculate, \
+            "engine speculate and profile.spec must agree (one clock)"
         self.ctx = ctx or ExecContext()
         self.on_retire = on_retire
         self.prompt_seed = prompt_seed
@@ -176,25 +213,9 @@ class ContinuousEngine:
             n_pages = slots * width + 1
         self.cache = PagedKVCache(cfg, slots=slots, n_pages=n_pages,
                                   page_size=page_size, max_ctx=max_ctx)
-        # greedy sampling lives *inside* the jit'd steps: only (slots,)-sized
-        # int32 token ids cross the device->host boundary per step, never the
-        # (slots, vocab) logits the host-side sampler used to materialize.
-        # raw_kv: the paged cache addresses logical positions, so the
-        # prefill must hand back unrotated per-position K/V (the wave
-        # path's windowed ring-buffer layout would scatter wrong slots)
-        self._prefill = jax.jit(
-            lambda p, b: _sample_first(transformer.prefill(p, cfg, b,
-                                                           self.ctx,
-                                                           unroll=unroll,
-                                                           raw_kv=True)))
-        self._chunk = jax.jit(
-            lambda p, b, c: _sample_first(
-                transformer.prefill_chunk(p, cfg, b, c, self.ctx,
-                                          unroll=unroll)))
-        self._decode = jax.jit(
-            lambda p, b, c: _sample_first(
-                transformer.paged_decode_step(p, cfg, b, c, self.ctx,
-                                              unroll=unroll)))
+        self.sampler = sampler or sampler_mod.GREEDY
+        self._unroll = unroll
+        self._jit_steps()
         self.t = 0.0                      # engine-local analytic clock
         self.tr = tracer or tr_mod.NULL
         self.cache.bind_tracer(self.tr, lambda: self.t)
@@ -204,6 +225,97 @@ class ContinuousEngine:
         self.dropped: List = []
         #: (rid, page ids) per admission — observability for tests/benchmarks
         self.admissions: List[Tuple[int, List[int]]] = []
+
+    # -- jit'd model steps ---------------------------------------------------
+
+    def _jit_steps(self) -> None:
+        """(Re)compile the model steps, closing over the current sampling
+        policy: token selection runs *inside* each jit'd step (greedy and
+        temperature/top-k alike), so only (slots,)-sized int32 ids cross
+        the device->host boundary — never the (slots, vocab) logits.
+        ``rids``/``pos`` feed the lane-keyed PRNG streams
+        (:func:`~repro.serving.sampler.lane_keys`); the greedy policy
+        ignores them, so the greedy steps compile to exactly the
+        historical argmax-in-jit graphs.
+
+        raw_kv on the prefill: the paged cache addresses logical
+        positions, so the prefill must hand back unrotated per-position
+        K/V (the wave path's windowed ring-buffer layout would scatter
+        wrong slots)."""
+        pol, cfg, unroll = self.sampler, self.cfg, self._unroll
+
+        def pre(p, b, rids, pos):
+            logits, cache = transformer.prefill(p, cfg, b, self.ctx,
+                                                unroll=unroll, raw_kv=True)
+            return sampler_mod.sample(pol, logits, rids, pos), cache
+
+        def chk(p, b, c, rids, pos):
+            logits, cache = transformer.prefill_chunk(p, cfg, b, c,
+                                                      self.ctx,
+                                                      unroll=unroll)
+            return sampler_mod.sample(pol, logits, rids, pos), cache
+
+        def dec(p, b, c, rids, pos):
+            logits, cache = transformer.paged_decode_step(p, cfg, b, c,
+                                                          self.ctx,
+                                                          unroll=unroll)
+            return sampler_mod.sample(pol, logits, rids, pos), cache
+
+        self._prefill = jax.jit(pre)
+        self._chunk = jax.jit(chk)
+        self._decode = jax.jit(dec)
+        if self.speculate is not None:
+            k = self.speculate.k
+            # same weights, cheap point: a flat low-bit policy for the
+            # draft passes; the verify chunk runs at the engine's own ctx
+            # (plus the unaligned-scatter escape — verify chunks start
+            # wherever the lane's write position sits, rarely on a page
+            # boundary)
+            draft_ctx = dataclasses.replace(
+                self.ctx, policy=None,
+                default_bits=int(round(self.speculate.draft_bits)))
+            verify_ctx = dataclasses.replace(self.ctx,
+                                             unaligned_scatter=True)
+
+            def spec(p, toks, c, rids, pos_out):
+                """One fast-draft / slow-verify round, entirely on device.
+
+                toks (slots, 1): last committed token per lane; c: decode
+                cache prepared with ``lookahead=k+1``; pos_out (slots,):
+                output position of the round's first emitted token.
+                Returns (tokens (slots, k+1), n_emit (slots,), cache) —
+                the *verify* pass's cache: its chunk scatter overwrites
+                every draft-written K/V slot, so the draft cache is
+                simply dropped and rejection needs no rollback beyond
+                the host advancing pos by the emitted count."""
+                cur, dc = toks, c
+                d_toks, d_logits = [], []
+                for j in range(k):
+                    logits, dc = transformer.paged_decode_step(
+                        p, cfg, {"token": cur}, dc, draft_ctx,
+                        unroll=unroll)
+                    cur = sampler_mod.sample(
+                        pol, logits, rids, pos_out + j,
+                        stream=sampler_mod.STREAM_DRAFT)
+                    d_toks.append(cur)
+                    d_logits.append(logits)
+                drafts = jnp.concatenate(d_toks, axis=1)       # (slots, k)
+                dlg = jnp.concatenate(d_logits, axis=1)        # (slots,k,V)
+                chunk = jnp.concatenate([toks, drafts], axis=1)
+                vlg, vcache = transformer.verify_chunk(
+                    p, cfg, {"tokens": chunk}, c, verify_ctx,
+                    unroll=unroll)
+                tokens, n_emit = sampler_mod.spec_accept(
+                    pol, drafts, dlg, vlg, rids, pos_out)
+                return tokens, n_emit, vcache
+
+            self._spec = jax.jit(spec)
+
+    def set_sampler(self, sampler: sampler_mod.SamplerPolicy) -> None:
+        """Swap the sampling policy (re-jits the steps on change)."""
+        if sampler != self.sampler:
+            self.sampler = sampler
+            self._jit_steps()
 
     # -- submission ----------------------------------------------------------
 
@@ -247,8 +359,11 @@ class ContinuousEngine:
                 return False
             req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
             S = req.prompt_len
-            # hard capability cap: the block table addresses max_ctx tokens
-            cap = self.cache.max_ctx - S + 1
+            # hard capability cap: the block table addresses max_ctx
+            # tokens, and a speculative round needs k positions of
+            # headroom past the last committed token (the verify chunk
+            # writes them before the host clamps the accepted count)
+            cap = self.cache.max_ctx - S + 1 - self._spec_k
             if cap < 1:
                 self.pending.remove(req)
                 self._drop(req)               # prompt alone can never fit
@@ -272,16 +387,18 @@ class ContinuousEngine:
                     self.tr.instant(tr_mod.REQ_DEGRADE, self.t,
                                     track="queue", rid=req.rid,
                                     from_tok=req.max_new, to_tok=n_tok)
-            # page feasibility: prompt + (n_tok - 1) decode writes.  The
-            # demand is *window-bounded* per layer group: a sliding-window
-            # group costs at most its win_cap pages however long the
-            # request runs, so windowed stacks admit far more work per
-            # pool than their total token count suggests.
-            if not self.cache.fits_pool(S + n_tok - 1, self.prefill_chunk):
+            # page feasibility: prompt + (n_tok - 1) decode writes, plus
+            # the speculative write headroom.  The demand is
+            # *window-bounded* per layer group: a sliding-window group
+            # costs at most its win_cap pages however long the request
+            # runs, so windowed stacks admit far more work per pool than
+            # their total token count suggests.
+            span = S + n_tok - 1 + self._spec_k
+            if not self.cache.fits_pool(span, self._page_chunk):
                 self.pending.remove(req)
                 self._drop(req)               # exceeds the whole pool:
                 continue                      # waiting would hang forever
-            if not self.cache.can_admit(S + n_tok - 1, self.prefill_chunk):
+            if not self.cache.can_admit(span, self._page_chunk):
                 return False                  # wait for pages (EDF head)
             self.pending.remove(req)
             self._start(lane, req, n_tok)
@@ -301,7 +418,8 @@ class ContinuousEngine:
         absorbs it chunk-by-chunk via :meth:`_advance_prefills`, decode
         steps landing in between."""
         S = req.prompt_len
-        pages = self.cache.alloc(lane, S + n_tok - 1, self.prefill_chunk)
+        pages = self.cache.alloc(lane, S + n_tok - 1 + self._spec_k,
+                                 self._page_chunk)
         self.admissions.append((req.rid, pages))
         req.t_admit = self.t
         if self.tr:
@@ -313,7 +431,9 @@ class ContinuousEngine:
             return
         toks = jnp.asarray(self._prompt_for(req)[None, :])
         w0 = time.perf_counter()
-        first_tok, raw_cache = self._prefill(self.params, {"tokens": toks})
+        first_tok, raw_cache = self._prefill(
+            self.params, {"tokens": toks},
+            jnp.asarray([req.rid], jnp.int32), jnp.zeros((1,), jnp.int32))
         self.cache.write_prefill(
             lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
         t0 = self.t
@@ -342,8 +462,12 @@ class ContinuousEngine:
             c = min(self.prefill_chunk, S - l.absorbed)
             toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
             w0 = time.perf_counter()
-            first_tok, new_cache = self._chunk(self.params, {"tokens": toks},
-                                               self.cache.chunk_cache(i, c))
+            # pos 0: only the final chunk's sample is consumed, and it
+            # selects the request's output position 0
+            first_tok, new_cache = self._chunk(
+                self.params, {"tokens": toks}, self.cache.chunk_cache(i, c),
+                jnp.asarray([l.req.rid], jnp.int32),
+                jnp.zeros((1,), jnp.int32))
             self.cache.update_from(new_cache)
             # window groups free the pages this chunk pushed out of the
             # window — back to the pool mid-flight, before the next event
@@ -433,14 +557,26 @@ class ContinuousEngine:
             return                        # every occupied lane mid-prefill
         prefilling = tuple(i for i, l in enumerate(self.lanes)
                            if l is not None and l.prefilling)
+        if self.speculate is not None and spec_round_fits(
+                self.profile, self.t,
+                [l.req.deadline_abs for _, l in active],
+                len(active), max(l.context for _, l in active)):
+            self._spec_step(active, prefilling)
+            return
         toks = np.zeros((self.slots, 1), np.int32)
+        rids = np.zeros((self.slots,), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
         for i, l in active:
             toks[i, 0] = l.last_token
+            rids[i] = l.req.rid
+            pos[i] = l.req.tokens_done     # output position being decoded
         w0 = time.perf_counter()
         next_toks, new_cache = self._decode(self.params,
                                             {"token": jnp.asarray(toks)},
                                             self.cache.decode_cache(
-                                                exclude=prefilling))
+                                                exclude=prefilling),
+                                            jnp.asarray(rids),
+                                            jnp.asarray(pos))
         self.cache.update_from(new_cache)
         nxt = np.asarray(next_toks)                  # (slots, 1) int32 only
         t0 = self.t
@@ -468,6 +604,80 @@ class ContinuousEngine:
                 self.lanes[i] = None
                 self._finish(l.req, l, lane_allocated=i)
         if self.tr:
+            self.tr.counter(tr_mod.CTR_LANES, self.t, self._n_active(),
+                            track="steps")
+            self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),
+                            track="queue")
+            self.tr.counter(tr_mod.CTR_UTIL, self.t,
+                            self.cache.utilization(), track="pool")
+            for g, free in self.cache.free_by_group().items():
+                self.tr.counter(f"{tr_mod.CTR_FREE_PAGES}.{g}", self.t,
+                                free, track="pool")
+
+    def _spec_step(self, active, prefilling) -> None:
+        """One fast-draft / slow-verify round for every decoding lane:
+        one jit'd call drafts ``k`` tokens per lane, verifies them in a
+        single fused chunk, and accept/rejects on device — the host sees
+        only the (slots, k+1) committed-token matrix and the per-lane
+        emit counts.  Page rollback is implicit: the cache pools already
+        hold the verifier's K/V for every chunk position, so a lane that
+        emits ``n`` tokens just advances its pos by ``n`` and the stale
+        positions beyond are overwritten by the next round's
+        scatter-before-attend.  The round is charged
+        ``profile.spec_round_s`` — the same price the analytic mirror
+        and the admission projections use."""
+        k = self.speculate.k
+        toks = np.zeros((self.slots, 1), np.int32)
+        rids = np.zeros((self.slots,), np.int32)
+        pos = np.zeros((self.slots,), np.int32)
+        for i, l in active:
+            toks[i, 0] = l.last_token
+            rids[i] = l.req.rid
+            pos[i] = l.req.tokens_done     # round's first output position
+        w0 = time.perf_counter()
+        tokens, n_emit, new_cache = self._spec(
+            self.params, jnp.asarray(toks),
+            self.cache.decode_cache(exclude=prefilling, lookahead=k + 1),
+            jnp.asarray(rids), jnp.asarray(pos))
+        self.cache.update_from(new_cache)
+        tokens = np.asarray(tokens)                  # (slots, k+1) int32
+        n_emit = np.asarray(n_emit)                  # (slots,) int32
+        t0 = self.t
+        ctx = max(l.context for _, l in active)
+        self.t += self.profile.spec_round_s(len(active), ctx)
+        lane_rids = [l.req.rid for _, l in active]
+        if self.tr:
+            self.tr.instant(tr_mod.SPEC_DRAFT, t0, track="steps", k=k,
+                            lanes=lane_rids, drafted=k * len(active))
+            self.tr.instant(tr_mod.SPEC_VERIFY, self.t, track="steps",
+                            lanes=lane_rids, chunk=k + 1,
+                            wall_s=time.perf_counter() - w0)
+        accepted = emitted = 0
+        for i, l in active:
+            # clamp to the lane's decode budget: a deep round near the
+            # tail may propose more tokens than the request has left
+            n = min(int(n_emit[i]), l.remaining)
+            # of the n emitted, the last is the verifier's correction /
+            # bonus token iff the round wasn't budget-clamped
+            accepted += n - 1 if n == int(n_emit[i]) else n
+            emitted += n
+            self.cache.advance(i, n)
+            l.context += n
+            for tok in tokens[i, :n]:
+                l.produced.append(int(tok))
+                l.req.tokens_done += 1
+                if self.tr:
+                    self.tr.instant(tr_mod.REQ_TOKEN, self.t,
+                                    track=f"lane{i}", rid=l.req.rid)
+            l.last_token = int(tokens[i, n - 1])
+            l.remaining -= n
+            if l.remaining == 0:
+                self.lanes[i] = None
+                self._finish(l.req, l, lane_allocated=i)
+        if self.tr:
+            self.tr.instant(tr_mod.SPEC_ACCEPT, self.t, track="steps",
+                            lanes=lane_rids, accepted=accepted,
+                            emitted=emitted)
             self.tr.counter(tr_mod.CTR_LANES, self.t, self._n_active(),
                             track="steps")
             self.tr.counter(tr_mod.CTR_QUEUE, self.t, len(self.pending),

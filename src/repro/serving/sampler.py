@@ -1,8 +1,66 @@
-"""Token samplers for the serving engine."""
+"""Token samplers + the jit'd sampling policy shared by every engine.
+
+Historically each engine fused greedy argmax ad hoc into its jit'd step
+and pushed stochastic sampling to the host (``ServingEngine.generate``
+split a single PRNG key per *wave*, silently defaulting to
+``PRNGKey(0)`` for every request).  This module lifts token selection
+into a first-class policy layer:
+
+* :class:`SamplerPolicy` — a frozen, hashable (temp, top_k, seed)
+  triple.  Engines close over it in their jit'd step functions (the
+  ``set_policy`` re-jit pattern), so greedy *and* temperature/top-k run
+  device-side on every path with only ``(slots,)`` int32 ids crossing to
+  host, exactly as greedy does today.  ``temp == 0`` reduces *exactly*
+  to ``argmax`` — the policy layer is bit-identical to the historical
+  greedy path.
+* Lane-indexed keys — every draw is keyed by
+  ``fold_in(fold_in(fold_in(PRNGKey(seed), stream), rid), position)``,
+  derived inside jit.  A request's tokens depend only on (seed, rid,
+  its own output positions): reproducible across runs and independent
+  of which lane or wave slot the request lands in.
+* :func:`spec_accept` — the jit'd accept/reject sampler for fast-draft /
+  slow-verify speculative decoding.  Greedy: cumulative argmax match
+  (token-identical to dense decode by construction).  Temperature:
+  standard speculative sampling — accept draft ``d`` w.p.
+  ``min(1, p_v(d)/p_d(d))``, resample rejections from the normalized
+  residual ``(p_v - p_d)+`` — which preserves the verifier's
+  distribution for any draft proposal.
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+# Independent PRNG streams per draw kind, folded into every lane key so
+# e.g. a draft draw at position p can never correlate with the accept
+# coin or residual draw at the same position.
+STREAM_POLICY = 0     # dense sampling + the bonus token on full accept
+STREAM_DRAFT = 1      # draft-model proposals inside a speculative round
+STREAM_ACCEPT = 2     # accept/reject uniforms
+STREAM_RESIDUAL = 3   # residual resampling on rejection
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerPolicy:
+    """Token-selection policy carried through jit'd engine steps.
+
+    Frozen + hashable so jit'd lambdas can close over it; changing the
+    policy re-jits (cheap, and explicit — the same contract as the FPX
+    precision-policy swap).  ``temp == 0`` is exact greedy regardless of
+    ``top_k``/``seed``.
+    """
+    temp: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def stochastic(self) -> bool:
+        return self.temp > 0.0
+
+
+GREEDY = SamplerPolicy()
 
 
 def greedy(logits: jax.Array, key=None) -> jax.Array:
@@ -10,13 +68,138 @@ def greedy(logits: jax.Array, key=None) -> jax.Array:
     return logits.argmax(axis=-1).astype(jnp.int32)
 
 
+def _mask_top_k(lg: jax.Array, top_k: int) -> jax.Array:
+    """Mask all but the top-k logits to -inf (O(V) via lax.top_k, not a
+    full O(V log V) sort)."""
+    if top_k:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return lg
+
+
 def temperature(logits: jax.Array, key, temp: float = 1.0,
                 top_k: int = 0) -> jax.Array:
-    lg = logits.astype(jnp.float32) / max(temp, 1e-4)
-    if top_k:
-        kth = jnp.sort(lg, axis=-1)[..., -top_k][..., None]
-        lg = jnp.where(lg < kth, -1e30, lg)
+    """Host-keyed sampling (one key for the whole batch).  Kept as the
+    simple entry point; engines use :func:`sample` with lane keys."""
+    lg = _mask_top_k(logits.astype(jnp.float32) / max(temp, 1e-4), top_k)
     B = lg.shape[0]
     flat = lg.reshape(B, -1)
     toks = jax.random.categorical(key, flat, axis=-1)
     return toks.reshape(B, 1).astype(jnp.int32)
+
+
+def lane_keys(seed: int, stream: int, rids: jax.Array,
+              positions: jax.Array) -> jax.Array:
+    """(B,) rids x (B,) positions -> (B,) per-lane PRNG keys, derived
+    entirely inside jit.  The draw at (rid, position) is invariant to
+    lane order, wave packing, and draft depth."""
+    base = jax.random.fold_in(jax.random.PRNGKey(seed), stream)
+
+    def one(r, p):
+        return jax.random.fold_in(jax.random.fold_in(base, r), p)
+
+    return jax.vmap(one)(rids.astype(jnp.uint32),
+                         positions.astype(jnp.uint32))
+
+
+def _policy_logits(policy: SamplerPolicy, logits: jax.Array) -> jax.Array:
+    return _mask_top_k(logits.astype(jnp.float32)
+                       / max(policy.temp, 1e-4), policy.top_k)
+
+
+def policy_probs(policy: SamplerPolicy, logits: jax.Array) -> jax.Array:
+    """The policy's sampling distribution (tempered, top-k-masked
+    softmax) — the target measure :func:`spec_accept` preserves."""
+    return jax.nn.softmax(_policy_logits(policy, logits), axis=-1)
+
+
+def sample(policy: SamplerPolicy, logits: jax.Array, rids: jax.Array,
+           positions: jax.Array, stream: int = STREAM_POLICY) -> jax.Array:
+    """Device-side token selection: (B, 1, V) logits -> (B, 1) int32.
+
+    ``policy.temp == 0`` is exactly :func:`greedy`; otherwise each row
+    draws from its tempered top-k softmax under its own lane key."""
+    if not policy.stochastic:
+        return greedy(logits)
+    lg = _policy_logits(policy, logits)
+    B = lg.shape[0]
+    keys = lane_keys(policy.seed, stream, rids, positions)
+    flat = lg.reshape(B, -1)
+    toks = jax.vmap(jax.random.categorical)(keys, flat)
+    return toks.reshape(B, 1).astype(jnp.int32)
+
+
+def spec_accept(policy: SamplerPolicy, draft_toks: jax.Array,
+                draft_logits: jax.Array, verify_logits: jax.Array,
+                rids: jax.Array, pos0: jax.Array):
+    """Jit'd accept/reject for a k-token speculative round.
+
+    Inputs (``k`` = draft depth, ``B`` = lanes):
+      draft_toks    (B, k)      draft proposals d_1..d_k
+      draft_logits  (B, k, V)   draft logits that proposed them
+      verify_logits (B, k+1, V) verifier logits l_0..l_k from the
+                                verify chunk [t_0, d_1..d_k]
+      rids, pos0    (B,)        lane request ids + output position of
+                                the round's first emitted token
+
+    Returns ``(tokens (B, k+1) int32, n_emit (B,) int32)``: lane ``b``
+    emits ``tokens[b, :n_emit[b]]``.  Always ``1 <= n_emit <= k+1`` —
+    the verifier's own token at the first divergence (or the bonus token
+    on full accept) is emitted unconditionally, so a round never
+    produces less than a dense step.
+
+    Greedy: accept while draft matches the verifier argmax; the emitted
+    tokens are the verifier argmaxes themselves, which is what dense
+    greedy decode would have produced — token identity by construction,
+    for any draft quality.  Temperature: standard speculative sampling
+    (accept w.p. ``min(1, p_v/p_d)``; rejection resamples the normalized
+    residual ``(p_v - p_d)+``; full accept samples the bonus from
+    ``p_v``), every draw under its own (stream, rid, position) lane key.
+    """
+    B, k = draft_toks.shape
+    if not policy.stochastic:
+        v = verify_logits.argmax(axis=-1).astype(jnp.int32)       # (B, k+1)
+        match = (draft_toks == v[:, :k]).astype(jnp.int32)
+        n_acc = jnp.cumprod(match, axis=1).sum(axis=1)            # (B,)
+        return v, n_acc + 1
+
+    pv = policy_probs(policy, verify_logits)                      # (B,k+1,V)
+    pd = policy_probs(policy, draft_logits)                       # (B, k, V)
+    pv_d = jnp.take_along_axis(pv[:, :k], draft_toks[..., None],
+                               axis=-1)[..., 0]                   # (B, k)
+    pd_d = jnp.take_along_axis(pd, draft_toks[..., None],
+                               axis=-1)[..., 0]
+
+    pos = pos0[:, None] + jnp.arange(k)[None, :]                  # (B, k)
+    flat = lambda x: x.reshape(-1)
+    u_keys = lane_keys(policy.seed, STREAM_ACCEPT,
+                       jnp.repeat(rids, k), flat(pos))
+    u = jax.vmap(jax.random.uniform)(u_keys).reshape(B, k)
+    accept = (u < jnp.minimum(1.0, pv_d / jnp.maximum(pd_d, 1e-30)))
+    n_acc = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+
+    # Correction draw per draft position from the normalized residual;
+    # where the residual vanishes (p_v == p_d) fall back to p_v.
+    res = jnp.maximum(pv[:, :k] - pd, 0.0)
+    mass = res.sum(axis=-1, keepdims=True)
+    res = jnp.where(mass > 1e-30, res / jnp.maximum(mass, 1e-30),
+                    pv[:, :k])
+    r_keys = lane_keys(policy.seed, STREAM_RESIDUAL,
+                       jnp.repeat(rids, k), flat(pos))
+    corr = jax.vmap(jax.random.categorical)(
+        r_keys, jnp.log(jnp.maximum(res.reshape(B * k, -1), 1e-30)))
+    corr = corr.reshape(B, k).astype(jnp.int32)
+
+    # Bonus token on full accept: a plain policy draw from l_k.
+    bonus_keys = lane_keys(policy.seed, STREAM_POLICY, rids, pos0 + k)
+    bonus = jax.vmap(jax.random.categorical)(
+        bonus_keys, jnp.log(jnp.maximum(pv[:, k], 1e-30)))
+    bonus = bonus.astype(jnp.int32)
+
+    fix = jnp.concatenate([corr, bonus[:, None]], axis=1)         # (B,k+1)
+    pad = jnp.concatenate([draft_toks, jnp.zeros((B, 1), jnp.int32)],
+                          axis=1)
+    j = jnp.arange(k + 1)[None, :]
+    tokens = jnp.where(j < n_acc[:, None], pad,
+                       jnp.where(j == n_acc[:, None], fix, 0))
+    return tokens.astype(jnp.int32), n_acc + 1

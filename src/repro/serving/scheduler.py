@@ -70,12 +70,19 @@ class Request:
 
 class Scheduler:
     def __init__(self, engine: ServingEngine, *, batch_slots: int = 8,
-                 pad_id: int = 0, tracer=None):
+                 pad_id: int = 0, tracer=None, sampler=None):
         """``tracer``: a :class:`repro.obs.Tracer` receiving wave spans and
         per-request lifecycle events on the modeled clock (waves execute
         back-to-back: each wave starts where the previous one's makespan
-        ended).  None = the zero-overhead null tracer."""
+        ended).  None = the zero-overhead null tracer.  ``sampler``: a
+        :class:`~repro.serving.sampler.SamplerPolicy` applied to every
+        wave (default: the engine's standing policy, greedy unless
+        overridden).  Waves pass each request's ``rid`` as its lane key
+        index, so a stochastic request's tokens do not depend on which
+        wave or slot it lands in."""
         self.engine = engine
+        if sampler is not None:
+            engine.set_sampler(sampler)
         self.slots = batch_slots
         self.pad_id = pad_id
         self.tr = tracer or tr_mod.NULL
@@ -127,7 +134,9 @@ class Scheduler:
         rest.extend(self.queue)
         self.queue = rest
         max_new = max(r.max_new for r in wave)
-        res = self.engine.generate(self._make_batch(wave), max_new=max_new)
+        res = self.engine.generate(self._make_batch(wave), max_new=max_new,
+                                   rids=np.array([r.rid for r in wave],
+                                                 np.int32))
         new = np.asarray(res.new_tokens)
         t0 = self.t
         for i, r in enumerate(wave):

@@ -47,8 +47,39 @@ HYBRID = (["kind", "name", "context", "window", "attn_us", "step_us",
            ["fleet", "dense-pool", "", "", "", "", "", "9.0", "850.0",
             "1500"]])
 
+SPEC = (["mix", "arm", "offered", "served", "dropped", "hit_rate",
+         "p50_ms", "p99_ms", "goodput", "itl_ms"],
+        [["trading", "spec-learned", "100", "97", "3", "0.970", "20.0",
+          "36.0", "82.0", "2.6"],
+         ["trading", "dense", "100", "98", "2", "0.980", "21.0", "43.0",
+          "85.0", "3.0"],
+         ["chat", "spec-learned", "200", "199", "1", "0.995", "300.0",
+          "750.0", "225.0", "10.8"],
+         ["chat", "dense", "200", "195", "5", "0.975", "350.0", "1100.0",
+          "209.0", "18.0"],
+         ["mixed", "spec-learned", "300", "297", "3", "0.990", "120.0",
+          "550.0", "302.0", "7.5"],
+         ["mixed", "dense", "300", "294", "6", "0.980", "150.0", "1050.0",
+          "290.0", "12.4"],
+         ["mixed", "fixed-k2", "300", "272", "28", "0.910", "140.0",
+          "1040.0", "288.0", "9.2"],
+         ["mixed", "fixed-k4", "300", "276", "24", "0.920", "130.0",
+          "460.0", "296.0", "7.2"]])
+
 ALL = {"table_paged.csv": PAGED, "table_chunked.csv": CHUNKED,
-       "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID}
+       "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID,
+       "table_spec.csv": SPEC}
+
+
+def mutate_spec(mix, arm, column, value):
+    """Rewrite one cell of the spec table, keyed (mix, arm)."""
+    def over(header, rows):
+        ci = header.index(column)
+        for r in rows:
+            if r[0] == mix and r[1] == arm:
+                r[ci] = value
+        return header, rows
+    return {"table_spec.csv": over}
 
 
 def write_tables(d, overrides=None):
@@ -87,7 +118,7 @@ def mutate(name, path_key, column, value, key_col="path"):
 
 def test_identical_tables_pass(tmp_path, capsys):
     assert run_gate(tmp_path) == 0
-    assert "4 tables OK" in capsys.readouterr().out
+    assert "5 tables OK" in capsys.readouterr().out
 
 
 def test_within_tolerance_passes(tmp_path):
@@ -170,6 +201,35 @@ def test_windowed_not_undercutting_dense_fails(tmp_path, capsys):
                     base_override={"table_hybrid.csv": bloat}) == 1
     err = capsys.readouterr().err
     assert "windowed step_us" in err and "dense" in err
+
+
+def test_spec_goodput_drift_fails(tmp_path, capsys):
+    over = mutate_spec("chat", "spec-learned", "goodput", "150.0")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "goodput dropped" in capsys.readouterr().err
+
+
+def test_spec_chat_below_dense_fails(tmp_path, capsys):
+    # fresh == base (no drift) but the slack-rich margin is inverted
+    over = mutate_spec("chat", "spec-learned", "goodput", "190.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "spec-learned goodput 190.0 below dense" in \
+        capsys.readouterr().err
+
+
+def test_spec_trading_p99_above_dense_fails(tmp_path, capsys):
+    over = mutate_spec("trading", "spec-learned", "p99_ms", "44.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "spec-learned p99 44.0ms above dense" in capsys.readouterr().err
+
+
+def test_spec_mixed_not_beating_fixed_k_fails(tmp_path, capsys):
+    over = mutate_spec("mixed", "fixed-k4", "goodput", "310.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "below fixed-k4" in capsys.readouterr().err
 
 
 def test_hybrid_pool_goodput_ordering_fails(tmp_path, capsys):

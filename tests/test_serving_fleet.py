@@ -171,9 +171,13 @@ def test_fleet_feedback_updates_selector(pool):
     out = router.run(arrivals)
     assert len(out) == 10
     sel = router.selectors["trading"]
-    assert sum(sel.counts) == 10
-    # realized reward on the fast engine dominates the slow engine's zero
-    assert sel.means[0] > sel.means[1]
+    # every retirement lands on the dispatched arm, on top of the one
+    # warm-start pseudo-observation each arm carries
+    assert sel.counts == [11, 1]
+    # realized on-time reward holds the fast arm at its quality; the
+    # never-dispatched slow arm still carries only its optimistic prior
+    assert sel.means[0] == pytest.approx(_quality(pool[0]))
+    assert sel.means[1] == pytest.approx(_quality(pool[1]))
 
 
 def test_fleet_beats_static_baselines_on_mixed_traffic():

@@ -1,0 +1,392 @@
+"""The jit'd sampling layer + fast-draft / slow-verify speculative decoding.
+
+Four contracts locked here:
+
+1. **Device-side sampling == the host reference.**  ``sampler.sample``
+   with ``temp == 0`` is exactly argmax; with temperature/top-k it equals
+   an independently written host-side reference using the same lane-key
+   derivation, and the ``lax.top_k`` mask equals the historical
+   sort-based mask.  Draws are keyed by (seed, rid, position) only —
+   invariant to batch slot.
+2. **Greedy speculative decode is token-identical to dense decode** on
+   the paged path — for any draft depth, any draft quality (full-precision
+   drafts that always accept, 4-bit drafts that frequently diverge), both
+   paged-attention implementations, chunked and monolithic prefill.  The
+   accept/reject sampler's unit contract (emitted tokens are the verifier
+   argmaxes through the first divergence) is also pinned directly.
+3. **Stochastic speculative decode preserves the verifier's
+   distribution** (model-free statistical check of ``spec_accept``
+   against the tempered softmax target), and traced runs satisfy the
+   spec commit discipline ``check_trace`` replays.
+4. **The analytic mirror and pricing are coherent**: the
+   ``ContinuousBatcher`` spec mode lands ``spec_expected_tokens`` per
+   round on average with deterministic integer emissions, rounds collapse
+   to dense steps under deadline pressure, and ``core.latency`` prices
+   speculation monotonically (deeper rounds cost more; higher acceptance
+   raises expected emission).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import (make_requests, pallas_modes, run_paged,
+                      servable_smoke_configs, smoke_params)
+from repro.core import latency as lat_mod
+from repro.core.fpx import SpecPoint
+from repro.obs import check_trace
+from repro.obs.trace import (SPEC_ACCEPT, SPEC_DRAFT, SPEC_VERIFY, Tracer)
+from repro.serving import sampler as sampler_mod
+from repro.serving.sampler import SamplerPolicy
+
+SERVABLE = servable_smoke_configs()
+#: one uniform-dense and one local:global config for the engine sweeps
+DENSE_NAME = "qwen-sim-1.5b"
+HYBRID_NAME = "gemma3-4b"
+
+
+# ---------------------------------------------------------------------------
+# 1. the sampling layer: device == host
+# ---------------------------------------------------------------------------
+
+def _host_lane_key(seed, stream, rid, position):
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), stream)
+    return jax.random.fold_in(jax.random.fold_in(k, np.uint32(rid)),
+                              np.uint32(position))
+
+
+def test_greedy_policy_is_exact_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 1, 97))
+    out = sampler_mod.sample(sampler_mod.GREEDY, logits,
+                             jnp.arange(5, dtype=jnp.int32),
+                             jnp.zeros(5, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(logits.argmax(-1)))
+
+
+def test_top_k_mask_matches_sort_reference():
+    lg = jax.random.normal(jax.random.PRNGKey(1), (4, 1, 64))
+    for top_k in (1, 5, 63):
+        fast = np.asarray(sampler_mod._mask_top_k(lg, top_k))
+        # the historical O(V log V) formulation: full sort, threshold at
+        # the k-th largest
+        kth = np.sort(np.asarray(lg), axis=-1)[..., -top_k][..., None]
+        ref = np.where(np.asarray(lg) < kth, -1e30, np.asarray(lg))
+        np.testing.assert_array_equal(fast, ref)
+
+
+def test_sample_matches_host_reference_per_lane():
+    pol = SamplerPolicy(temp=0.7, top_k=8, seed=3)
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 1, 50))
+    rids = jnp.asarray([9, 0, 7, 9], jnp.int32)
+    pos = jnp.asarray([0, 4, 1, 3], jnp.int32)
+    out = np.asarray(sampler_mod.sample(pol, logits, rids, pos))
+    for b in range(4):
+        lg = np.asarray(logits)[b, 0] / pol.temp
+        kth = np.sort(lg)[-pol.top_k]
+        lg = np.where(lg < kth, -1e30, lg)
+        key = _host_lane_key(pol.seed, sampler_mod.STREAM_POLICY,
+                             int(rids[b]), int(pos[b]))
+        ref = int(jax.random.categorical(key, jnp.asarray(lg)))
+        assert out[b, 0] == ref, b
+
+
+def test_draws_invariant_to_batch_slot():
+    """The same (rid, position) draws the same token from the same row of
+    logits no matter where in the batch the lane sits."""
+    pol = SamplerPolicy(temp=1.0, seed=5)
+    logits = jax.random.normal(jax.random.PRNGKey(4), (2, 1, 40))
+    rids = jnp.asarray([11, 22], jnp.int32)
+    pos = jnp.asarray([2, 6], jnp.int32)
+    fwd = np.asarray(sampler_mod.sample(pol, logits, rids, pos))
+    rev = np.asarray(sampler_mod.sample(pol, logits[::-1], rids[::-1],
+                                        pos[::-1]))
+    np.testing.assert_array_equal(fwd, rev[::-1])
+
+
+def test_wave_generate_draws_independent_of_batch_packing():
+    """ServingEngine.generate under temperature: a request's sampled
+    tokens depend on (seed, rid, position) only — swapping batch rows
+    (with their rids) swaps the outputs verbatim."""
+    from repro.serving.engine import ServingEngine
+
+    name, cfg = SERVABLE[0]
+    eng = ServingEngine(smoke_params(name), cfg, max_ctx=64)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 6)).astype(np.int32))
+    rids = jnp.asarray([4, 9], jnp.int32)
+    fwd = np.asarray(eng.generate({"tokens": toks}, max_new=4, temp=0.8,
+                                  rids=rids).new_tokens)
+    rev = np.asarray(eng.generate({"tokens": toks[::-1]}, max_new=4,
+                                  temp=0.8, rids=rids[::-1]).new_tokens)
+    np.testing.assert_array_equal(fwd, rev[::-1])
+
+
+# ---------------------------------------------------------------------------
+# 2. spec_accept: greedy token identity + unit semantics
+# ---------------------------------------------------------------------------
+
+def _one_hot_logits(tokens, vocab):
+    """(B, C) target tokens -> (B, C, V) logits whose argmax is exactly
+    those tokens."""
+    return jax.nn.one_hot(jnp.asarray(tokens), vocab) * 10.0
+
+
+@pytest.mark.parametrize("draft,verify,emitted", [
+    # full accept: every draft matches the verifier, bonus token rides
+    ([3, 5, 7], [3, 5, 7, 9], [3, 5, 7, 9]),
+    # first divergence at position 1: keep d1, emit the verifier's fix
+    ([3, 6, 7], [3, 5, 7, 9], [3, 5]),
+    # immediate divergence: the round still emits the verifier's token
+    ([4, 5, 7], [3, 5, 7, 9], [3]),
+    # late divergence
+    ([3, 5, 8], [3, 5, 7, 9], [3, 5, 7]),
+])
+def test_spec_accept_greedy_emits_verifier_prefix(draft, verify, emitted):
+    V = 16
+    toks, n = sampler_mod.spec_accept(
+        sampler_mod.GREEDY, jnp.asarray([draft], jnp.int32),
+        _one_hot_logits([draft], V), _one_hot_logits([verify], V),
+        jnp.asarray([0], jnp.int32), jnp.asarray([0], jnp.int32))
+    n = int(n[0])
+    assert n == len(emitted)
+    assert np.asarray(toks)[0, :n].tolist() == emitted
+
+
+def test_spec_accept_stochastic_preserves_verifier_distribution():
+    """Model-free: for arbitrary fixed draft/verify logits, the first
+    token a speculative round emits must be distributed as the verifier's
+    tempered softmax — the defining property of accept/reject + residual
+    resampling.  Many (rid) replicas of the same round give the empirical
+    law; compare in total variation."""
+    V, k, B = 12, 3, 4000
+    pol = SamplerPolicy(temp=1.0, seed=11)
+    rng = np.random.default_rng(7)
+    d_logits = jnp.asarray(np.repeat(rng.normal(size=(1, k, V)), B, axis=0),
+                           jnp.float32)
+    v_logits = jnp.asarray(np.repeat(rng.normal(size=(1, k + 1, V)), B,
+                                     axis=0), jnp.float32)
+    rids = jnp.arange(B, dtype=jnp.int32)
+    pos0 = jnp.zeros((B,), jnp.int32)
+    # drafts must themselves be drawn from the draft distribution — the
+    # accept identity only holds for proposals sampled from p_d
+    drafts = []
+    for j in range(k):
+        drafts.append(sampler_mod.sample(
+            pol, d_logits[:, j:j + 1], rids, pos0 + j,
+            stream=sampler_mod.STREAM_DRAFT))
+    draft_toks = jnp.concatenate(drafts, axis=1)
+    toks, n_emit = sampler_mod.spec_accept(pol, draft_toks, d_logits,
+                                           v_logits, rids, pos0)
+    first = np.asarray(toks)[:, 0]
+    emp = np.bincount(first, minlength=V) / B
+    target = np.asarray(sampler_mod.policy_probs(pol, v_logits[0, 0]))
+    tv = 0.5 * np.abs(emp - target).sum()
+    assert tv < 0.05, tv
+    assert np.all(np.asarray(n_emit) >= 1)
+    assert np.all(np.asarray(n_emit) <= k + 1)
+
+
+# ---------------------------------------------------------------------------
+# 3. the paged engine: spec == dense (greedy), traced discipline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+@pytest.mark.parametrize("name", [DENSE_NAME, HYBRID_NAME])
+@pytest.mark.parametrize("k,draft_bits,chunk", [
+    (1, 16.0, None),    # shallow, always-accept drafts
+    (2, 4.0, None),     # low-bit drafts: frequent argmax divergence
+    (3, 4.0, 8),        # deep + rejection-heavy + chunked prefill
+])
+def test_spec_decode_token_identical_to_dense(name, k, draft_bits, chunk,
+                                              use_pallas):
+    cfg = dict(SERVABLE)[name]
+    params = smoke_params(name)
+    lens, max_new = (9, 14, 5), 6
+    reqs_d = make_requests(cfg, lens, max_new=max_new)
+    run_paged(params, cfg, reqs_d, chunk=chunk, use_pallas=use_pallas)
+    reqs_s = make_requests(cfg, lens, max_new=max_new)
+    run_paged(params, cfg, reqs_s, chunk=chunk, use_pallas=use_pallas,
+              speculate=SpecPoint(k=k, draft_bits=draft_bits))
+    for rd, rs in zip(reqs_d, reqs_s):
+        np.testing.assert_array_equal(rd.result_tokens, rs.result_tokens)
+
+
+def test_spec_decode_stochastic_deterministic_and_traced():
+    """Temperature spec decode: reproducible under a fixed sampler seed,
+    emits only in-vocab tokens, and its trace satisfies the spec commit
+    discipline (accepted <= drafted, exactly-once, nothing dangling)."""
+    name, cfg = DENSE_NAME, dict(SERVABLE)[DENSE_NAME]
+    params = smoke_params(name)
+    runs = []
+    for _ in range(2):
+        tracer = Tracer()
+        reqs = make_requests(cfg, (7, 12), max_new=6)
+        run_paged(params, cfg, reqs, speculate=SpecPoint(k=2),
+                  sampler=SamplerPolicy(temp=0.9, top_k=20, seed=13),
+                  tracer=tracer)
+        runs.append([r.result_tokens.tolist() for r in reqs])
+        assert check_trace.check(tracer.events) == []
+        names = [e.name for e in tracer.events]
+        assert SPEC_DRAFT in names and SPEC_VERIFY in names \
+            and SPEC_ACCEPT in names
+        for tok in runs[-1]:
+            assert all(0 <= t < cfg.vocab for t in tok)
+    assert runs[0] == runs[1]
+
+
+def test_spec_trace_commit_violations_are_caught():
+    """The replay actually bites: over-commit and dangling rounds fail."""
+    tr = Tracer()
+    tr.instant(SPEC_DRAFT, 0.0, track="steps", k=2, lanes=[0], drafted=2)
+    tr.instant(SPEC_ACCEPT, 0.1, track="steps", lanes=[0], accepted=3,
+               emitted=4)
+    assert any("committed 3" in e for e in check_trace.check(tr.events))
+    tr2 = Tracer()
+    tr2.instant(SPEC_DRAFT, 0.0, track="steps", k=2, lanes=[0], drafted=2)
+    assert any("dangling" in e for e in check_trace.check(tr2.events))
+    tr3 = Tracer()
+    tr3.instant(SPEC_ACCEPT, 0.0, track="steps", lanes=[0], accepted=0,
+                emitted=1)
+    assert any("without a pending" in e for e in check_trace.check(tr3.events))
+
+
+def test_spec_admission_reserves_draft_headroom():
+    """With speculation on, admission must keep k positions of block-table
+    headroom: a request sized to the exact max_ctx boundary is trimmed
+    below the dense-path budget instead of overflowing mid-round."""
+    name, cfg = DENSE_NAME, dict(SERVABLE)[DENSE_NAME]
+    params = smoke_params(name)
+    max_ctx, k, S = 32, 3, 20
+    cap_dense = max_ctx - S + 1
+    reqs = make_requests(cfg, (S,), max_new=cap_dense)
+    run_paged(params, cfg, reqs, max_ctx=max_ctx,
+              speculate=SpecPoint(k=k, draft_bits=16.0))
+    assert len(reqs[0].result_tokens) == cap_dense - k
+
+
+# ---------------------------------------------------------------------------
+# 4. the analytic mirror + pricing
+# ---------------------------------------------------------------------------
+
+def test_spec_expected_tokens_geometric():
+    assert lat_mod.spec_expected_tokens(0, 0.8) == 1.0
+    assert lat_mod.spec_expected_tokens(2, 0.0) == 1.0
+    np.testing.assert_allclose(lat_mod.spec_expected_tokens(3, 1.0), 4.0)
+    np.testing.assert_allclose(lat_mod.spec_expected_tokens(2, 0.5), 1.75)
+
+
+def test_speculate_pricing_monotonic():
+    from repro.configs import get_config
+    cfg = get_config("qwen2.5-7b")
+    rounds = [lat_mod.speculate_round_s(cfg, k=k, context=256)
+              for k in (1, 2, 4)]
+    assert rounds[0] < rounds[1] < rounds[2]
+    # higher acceptance -> cheaper effective per-token time at equal k
+    fast = lat_mod.speculate_s(cfg, k=4, accept=0.9, context=256)
+    slow = lat_mod.speculate_s(cfg, k=4, accept=0.3, context=256)
+    assert fast < slow
+    # cross-model drafting with a small config undercuts self-drafting
+    # at full precision
+    small = get_config("qwen2.5-1.5b")
+    cross = lat_mod.speculate_round_s(cfg, k=4, context=256,
+                                      draft_cfg=small, draft_bits=16)
+    self_full = lat_mod.speculate_round_s(cfg, k=4, context=256,
+                                          draft_bits=16)
+    assert cross < self_full
+
+
+def test_profile_tok_s_amortizes_round():
+    from repro.configs import get_config
+    from repro.serving.continuous import LatencyProfile
+    cfg = get_config("qwen2.5-7b")
+    spec = SpecPoint(k=4, accept=0.9, draft_bits=4.0)
+    dense = LatencyProfile(cfg, 16.0)
+    sp = LatencyProfile(cfg, 16.0, spec=spec)
+    assert sp.tok_s(1, 256) == pytest.approx(
+        sp.spec_round_s(1, 256) / spec.expected_tokens())
+    # at 90% acceptance with 4-bit drafts, speculation must beat dense
+    # per-token — this is the break-even the router exploits
+    assert sp.tok_s(1, 256) < dense.tok_s(1, 256)
+    assert dense.tok_s(1, 256) == dense.step_s(1, 256)
+
+
+def _sim_reqs(n, *, deadline, max_new=16, prompt=32, spacing=1000.0):
+    from repro.serving.traffic import SimRequest
+    return [SimRequest(rid=i, cls_name="t", t_arrive=i * spacing,
+                       prompt_len=prompt, max_new=max_new,
+                       deadline_s=deadline) for i in range(n)]
+
+
+def test_batcher_spec_mode_deterministic_and_exact():
+    """The analytic spec rounds emit every budgeted token, deterministically,
+    and finish sooner than the dense batcher when acceptance is high."""
+    from repro.configs import get_config
+    from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+    cfg = get_config("qwen2.5-7b")
+    spec = SpecPoint(k=4, accept=0.9, draft_bits=4.0)
+
+    def run(profile):
+        b = ContinuousBatcher(profile, slots=2, policy="serve")
+        reqs = _sim_reqs(3, deadline=100.0)
+        for r in reqs:
+            b.submit(r)
+        b.drain()
+        return reqs, b.t
+
+    r1, t_spec = run(LatencyProfile(cfg, 16.0, spec=spec))
+    r2, t_spec2 = run(LatencyProfile(cfg, 16.0, spec=spec))
+    assert t_spec == t_spec2
+    assert [r.tokens_done for r in r1] == [r.tokens_done for r in r2]
+    assert all(r.tokens_done == r.max_new for r in r1)
+    _, t_dense = run(LatencyProfile(cfg, 16.0))
+    assert t_spec < t_dense
+
+
+def test_batcher_collapses_to_dense_under_deadline_pressure():
+    """A deadline tighter than one spec round forces dense steps: the
+    traced run contains no spec rounds at all, and the request still
+    lands every token the admission projection granted."""
+    from repro.configs import get_config
+    from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+    cfg = get_config("qwen2.5-7b")
+    spec = SpecPoint(k=4, accept=0.9, draft_bits=4.0)
+    profile = LatencyProfile(cfg, 16.0, spec=spec)
+    round_s = profile.spec_round_s(1, 32)
+    tr = Tracer()
+    b = ContinuousBatcher(profile, slots=1, policy="serve", tracer=tr)
+    # deadline covers prefill + a few dense steps but not one full round
+    tight = profile.prefill_s(32) + round_s * 0.5
+    reqs = _sim_reqs(1, deadline=tight, max_new=4)
+    for r in reqs:
+        b.submit(r)
+    b.drain()
+    assert reqs[0].tokens_done == 4
+    assert not any(e.name == SPEC_DRAFT for e in tr.events)
+    assert check_trace.check(tr.events) == []
+
+
+def test_fleet_learns_per_class_draft_depth():
+    """The spec-widened pool: chat-like slack-rich traffic must settle on
+    a speculative operating point — at equal verifier quality the bandit's
+    load-aware draw routes work to the arm whose rounds drain faster, so
+    the chat workhorse (most-pulled arm) is a draft-depth variant, not the
+    dense point — the per-class draft-depth learning the grid exists for."""
+    from repro.serving.fleet import (FleetRouter, demo_quality,
+                                     demo_spec_pool)
+    from repro.serving.traffic import chat_class, generate
+    pool = demo_spec_pool()
+    assert any(c.spec is not None for c in pool)
+    router = FleetRouter(pool, quality=demo_quality, slots=4,
+                         policy="degrade", mode="bandit", epsilon=0.2,
+                         seed=0)
+    arrivals = generate([chat_class(rate_hz=20.0)], horizon_s=20.0, seed=3)
+    router.run(arrivals)
+    sel = router.selectors["chat"]
+    workhorse = sel.grid[max(range(len(sel.grid)),
+                             key=lambda i: sel.counts[i])]
+    assert workhorse.spec is not None
+    # and speculation carried the majority of the class's traffic
+    spec_pulls = sum(n for n, c in zip(sel.counts, sel.grid)
+                     if c.spec is not None)
+    assert spec_pulls > sum(sel.counts) / 2
