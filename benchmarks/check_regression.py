@@ -16,6 +16,8 @@ turns the tables into a gate:
    sliding-window paged path: per-context windowed step/KV costs and the
    hybrid-pool fleet goodput.  ``results/table_spec.csv`` gates the
    speculative-decoding fleet the same way, per (mix, arm).
+   ``results/table_sessions.csv`` gates session serving per path:
+   TTFT percentiles, hit rates, and goodput.
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
@@ -30,7 +32,9 @@ turns the tables into a gate:
    or above always-dense on the slack-rich class and above dense and
    every fixed-k deployment on the mixed workload, while its p99 on the
    deadline-tight class never exceeds dense (speculative rounds collapse
-   to dense steps under deadline pressure).
+   to dense steps under deadline pressure); prefix sharing's session TTFT
+   p50 sits strictly below the no-sharing path's with no less goodput at
+   equal capacity.
 
 Malformed tables (empty, or missing the gated columns) fail the gate
 with a named error rather than a traceback — a refactor that drops a
@@ -73,6 +77,8 @@ ATTN_TABLE = "table_paged_attn.csv"
 HYBRID_TABLE = "table_hybrid.csv"
 #: speculative decoding: learned per-class draft depth vs dense/fixed-k
 SPEC_TABLE = "table_spec.csv"
+#: session serving: prefix reuse + TTFT SLOs vs cold starts, per path
+SESSIONS_TABLE = "table_sessions.csv"
 
 
 def read_rows(text: str):
@@ -356,6 +362,53 @@ def check_spec_orderings(rows, errors):
                               f"{lv} below {arm} {rv}")
 
 
+def check_sessions_drift(fresh, base, tol_pct: float, errors):
+    """The sessions table: per-path TTFT p50 and p99 must not rise,
+    goodput and hit rates must not drop, beyond tolerance."""
+    fresh_by, base_by = ({r.get("path"): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{SESSIONS_TABLE}: row set changed; commit the "
+                      "regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        for cname, sign in (("ttft_p50_ms", +1), ("ttft_p99_ms", +1),
+                            ("p99_ms", +1), ("goodput", -1),
+                            ("hit_rate", -1), ("ttft_hit_rate", -1)):
+            bv, fv = (col(r, cname, SESSIONS_TABLE, errors) for r in (b, f))
+            if None in (bv, fv):
+                continue
+            if sign > 0 and fv > bv * (1 + tol):
+                errors.append(f"{SESSIONS_TABLE} {k}: {cname} rose "
+                              f"{bv} -> {fv} (tol {tol_pct}%)")
+            if sign < 0 and fv < bv * (1 - tol):
+                errors.append(f"{SESSIONS_TABLE} {k}: {cname} dropped "
+                              f"{bv} -> {fv} (tol {tol_pct}%)")
+
+
+def check_sessions_orderings(rows, errors):
+    """The claims the sessions table exists to prove: at equal capacity,
+    prefix sharing's TTFT p50 is *strictly* below no-sharing's, and its
+    goodput is at least no-sharing's — a warm prefix can only remove
+    prefill work."""
+    by = {r.get("path"): r for r in rows}
+    sh, ns = by.get("sharing"), by.get("no-sharing")
+    if sh is None or ns is None:
+        errors.append(f"{SESSIONS_TABLE}: missing sharing/no-sharing row")
+        return
+    sv, nv = (col(r, "ttft_p50_ms", SESSIONS_TABLE, errors)
+              for r in (sh, ns))
+    if None not in (sv, nv) and sv >= nv:
+        errors.append(f"{SESSIONS_TABLE}: sharing ttft_p50 {sv}ms not "
+                      f"strictly below no-sharing {nv}ms")
+    sv, nv = (col(r, "goodput", SESSIONS_TABLE, errors) for r in (sh, ns))
+    if None not in (sv, nv) and sv < nv:
+        errors.append(f"{SESSIONS_TABLE}: sharing goodput {sv} below "
+                      f"no-sharing {nv}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
@@ -393,6 +446,11 @@ def main(argv=None) -> int:
                                                args.baseline_dir),
                      args.tol_pct, errors)
     check_spec_orderings(spec_fresh, errors)
+    sess_fresh = load_fresh(args.results, SESSIONS_TABLE)
+    check_sessions_drift(sess_fresh, load_baseline(SESSIONS_TABLE,
+                                                   args.baseline_dir),
+                         args.tol_pct, errors)
+    check_sessions_orderings(sess_fresh, errors)
 
     for trace_path in args.trace:
         sys.path.insert(0, os.path.join(REPO, "src"))
@@ -405,7 +463,7 @@ def main(argv=None) -> int:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
     traced = f" + {len(args.trace)} trace(s)" if args.trace else ""
-    print(f"regression gate: {len(TABLES) + 3} tables OK{traced} "
+    print(f"regression gate: {len(TABLES) + 4} tables OK{traced} "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

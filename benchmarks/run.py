@@ -90,6 +90,15 @@ def main() -> None:
                  f":goodput={th_good['hybrid-pool']:.1f}"
                  f"_vs_{th_good['dense-pool']:.1f}"))
 
+    # --- Session serving: prefix reuse + TTFT SLOs vs cold starts ---------
+    import table_sessions
+    tse = table_sessions.main(verbose=False)
+    tse_by = {r[0]: r for r in tse}
+    sh, ns = tse_by["sharing"], tse_by["no-sharing"]
+    rows.append(("table_sessions", float(sh[7]) * 1e3,
+                 f"ttft_p50={sh[7]}ms_vs_cold{ns[7]}ms"
+                 f":goodput={sh[10]}_vs_{ns[10]}"))
+
     # --- Speculative decoding: learned draft depth vs dense/fixed-k -------
     import table_spec
     tsp = table_spec.main(verbose=False)

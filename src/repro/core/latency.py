@@ -295,6 +295,22 @@ def chunk_attn_s(cfg: ModelConfig, *, chunk: int, context: int,
     return total
 
 
+def resume_prefill_s(cfg: ModelConfig, *, n_new: int, context: int = 0,
+                     w_bits: float = 16.0, hw: Hardware = V5E) -> float:
+    """Prefill charge for absorbing ``n_new`` prompt tokens on top of
+    ``context`` tokens already resident in the request's pages — the
+    shared pricing of a chunked-prefill chunk *and* of a prefix-cache
+    hit's remainder.  The skipped/absorbed prefix costs nothing here (its
+    compute already happened, possibly in another request's prefill); the
+    remainder pays its own weight-read (:func:`step_latency`) plus the
+    length-aware attend over the adopted pages (:func:`chunk_attn_s`).
+    ``context=0`` degrades to a plain monolithic prefill."""
+    t = step_latency(cfg, n_tokens=n_new, w_bits=w_bits, hw=hw)
+    if context:
+        t += chunk_attn_s(cfg, chunk=n_new, context=context, hw=hw)
+    return t
+
+
 def spec_expected_tokens(k: int, accept: float) -> float:
     """Expected tokens emitted by one fast-draft / slow-verify round at
     draft depth ``k`` and per-token acceptance probability ``accept``:

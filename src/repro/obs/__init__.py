@@ -20,9 +20,14 @@ seconds go* observable:
   :class:`~repro.serving.metrics.SLOReport` (TTFT / inter-token p50/p99,
   per-class queue/prefill/decode slack attribution).
 * :mod:`~repro.obs.check_trace` — replays any event stream and asserts
-  the stack's conservation laws (page conservation, reservation
-  non-negativity, per-lane clock monotonicity, exactly-once retire), so
-  every traced run doubles as a correctness audit.
+  the stack's conservation laws (page conservation under refcounted
+  sharing — shared pages free only at refcount zero, freeing a page you
+  merely reference is a finding — reservation non-negativity, per-lane
+  clock monotonicity, exactly-once retirement with cancel as a third
+  retirement kind, and speculation commit discipline: every
+  ``spec.draft`` committed by exactly one ``spec.accept`` with
+  ``accepted <= drafted``), so every traced run doubles as a
+  correctness audit.
 
 Wiring: pass ``tracer=Tracer()`` to ``ContinuousEngine``,
 ``ContinuousBatcher``, ``Scheduler``, or ``FleetRouter`` (the router

@@ -6,22 +6,31 @@ each caught by bespoke harnesses).  This module turns any traced run —
 benchmark, example, CI scenario — into a standing audit by replaying its
 event stream and asserting the conservation laws the stack promises:
 
-1. **Page conservation** (per engine pool, per layer group).  A page is
-   allocated only off the free list and freed only while live; the dummy
-   page (id 0) and out-of-range ids are never allocated; a slot never
-   holds more pages than its reservation.  When every admitted request
-   has retired, no page is live.
+1. **Page conservation under refcounting** (per engine pool, per layer
+   group).  A page is allocated only off the free list (exclusive,
+   refcount 1); ``page.share`` adds references only to live pages, and a
+   holder never holds the same page twice (the prefix cache, pseudo-slot
+   -1, may — its entries overlap); every ``page.free`` drops exactly one
+   reference held by its emitter — releasing a page the holder does not
+   hold (the double-free of a shared page) is an error — and the page
+   returns to the free list exactly when the last reference drops.  The
+   dummy page (id 0) and out-of-range ids are never allocated; a slot
+   never *owns* more pages than its reservation (shared holdings are
+   free).  When every admitted request has retired, no lane holds a
+   page, every live page is a prefix-cache holding, and
+   ``free + live = n_pages - 1`` per group.
 2. **Reservation non-negativity.**  After every pool event,
    ``free - sum over slots of (reserved - owned)+ >= 0`` — the invariant
-   that makes the sliding window's lazy mid-flight allocation
-   deadlock-free (kv_cache's "Reservations" contract).
+   that makes the sliding window's lazy mid-flight allocation *and* the
+   copy-on-write of a shared boundary page deadlock-free (kv_cache's
+   "Reservations" contract; CoW pages are part of the reservation).
 3. **Clock monotonicity per lane/engine track.**  Step, prefill, and
    token events on one track never move the analytic clock backwards,
    and spans never have negative duration.
 4. **Exactly-once retire.**  Every admitted request retires exactly once
-   (finish or drop), never both, never twice; a finish implies an
-   admission.  Drops without admission are legal (admission-time policy
-   rejections).
+   (finish, drop, or barge-in cancel), never twice; a finish implies an
+   admission.  Drops and cancels without admission are legal
+   (admission-time policy rejections; barge-in while still queued).
 5. **Speculation commit discipline** (per track).  Every ``spec.draft``
    is committed by exactly one ``spec.accept`` before the next round on
    that track begins, with ``0 <= accepted <= drafted`` — a draft token
@@ -42,9 +51,11 @@ import argparse
 import sys
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_FREE,
-                             PAGE_RESERVE, POOL_CONFIG, REQ_ADMIT, REQ_DROP,
-                             REQ_FINISH, REQ_FIRST_TOKEN, REQ_PREFILL,
+from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_COW,
+                             PAGE_FREE, PAGE_RESERVE, PAGE_SHARE,
+                             POOL_CONFIG, PREFIX_EVICT, PREFIX_INSERT,
+                             REQ_ADMIT, REQ_CANCEL, REQ_DROP, REQ_FINISH,
+                             REQ_FIRST_TOKEN, REQ_PREFILL,
                              REQ_PREFILL_CHUNK, REQ_TOKEN, SPEC_ACCEPT,
                              SPEC_DRAFT, SPEC_VERIFY, WAVE_STEP)
 
@@ -53,7 +64,8 @@ from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_FREE,
 #: them out of arrival order on shared tracks)
 _MONOTONIC = {ENGINE_STEP, WAVE_STEP, REQ_PREFILL, REQ_PREFILL_CHUNK,
               REQ_TOKEN, REQ_FIRST_TOKEN, PAGE_ALLOC, PAGE_FREE,
-              PAGE_RESERVE, SPEC_DRAFT, SPEC_VERIFY, SPEC_ACCEPT}
+              PAGE_RESERVE, PAGE_SHARE, PAGE_COW, PREFIX_INSERT,
+              PREFIX_EVICT, SPEC_DRAFT, SPEC_VERIFY, SPEC_ACCEPT}
 _EPS = 1e-12
 
 
@@ -66,8 +78,15 @@ class _Pool:
         self.free: Dict[str, Set[int]] = {
             g: set(range(1, int(n))) for g, n in groups.items()}
         self.n_pages = {g: int(n) for g, n in groups.items()}
-        #: (group, slot) -> set of live page ids
+        #: (group, slot) -> set of *exclusively* owned page ids (these
+        #: count against the slot's reservation)
         self.owned: Dict[Tuple[str, int], Set[int]] = {}
+        #: (group, holder) -> {page: reference count} of shared holdings;
+        #: holder -1 is the prefix cache, whose overlapping entries may
+        #: hold a page more than once
+        self.shared: Dict[Tuple[str, int], Dict[int, int]] = {}
+        #: group -> {page: total refcount} of live pages
+        self.refs: Dict[str, Dict[int, int]] = {g: {} for g in self.free}
         self.reserved: Dict[Tuple[str, int], int] = {}
 
     def _chk_available(self, errors: List[str], where: str) -> None:
@@ -112,6 +131,7 @@ class _Pool:
                               "while not on the free list (double alloc)")
             else:
                 self.free[g].discard(page)
+                self.refs[g][page] = 1
                 own = self.owned.setdefault((g, slot), set())
                 own.add(page)
                 if len(own) > self.reserved.get((g, slot), 0):
@@ -119,19 +139,86 @@ class _Pool:
                         f"{self.track}: slot {slot} holds {len(own)} pages "
                         f"of {g!r} beyond its reservation "
                         f"({self.reserved.get((g, slot), 0)})")
+        elif ev.name == PAGE_SHARE:
+            page = int(a.get("page", -1))
+            if self.refs[g].get(page, 0) <= 0:
+                errors.append(f"{self.track}: page {g}:{page} shared while "
+                              f"not live (holder {slot})")
+                return
+            sh = self.shared.setdefault((g, slot), {})
+            if slot >= 0 and (page in sh
+                              or page in self.owned.get((g, slot), ())):
+                errors.append(f"{self.track}: slot {slot} shares page "
+                              f"{g}:{page} it already holds")
+                return
+            sh[page] = sh.get(page, 0) + 1
+            self.refs[g][page] += 1
+            want = a.get("refs")
+            if want is not None and int(want) != self.refs[g][page]:
+                errors.append(
+                    f"{self.track}: page {g}:{page} refcount drift on "
+                    f"share (emitter says {want}, replay says "
+                    f"{self.refs[g][page]})")
         elif ev.name == PAGE_FREE:
             page = int(a.get("page", -1))
             own = self.owned.get((g, slot), set())
-            if page not in own:
-                errors.append(f"{self.track}: page {g}:{page} freed by slot "
-                              f"{slot} that does not own it (double free?)")
-            else:
+            sh = self.shared.get((g, slot), {})
+            if page in own:
                 own.discard(page)
+            elif sh.get(page, 0) > 0:
+                sh[page] -= 1
+                if not sh[page]:
+                    del sh[page]
+            else:
+                errors.append(
+                    f"{self.track}: page {g}:{page} freed by holder {slot} "
+                    "that holds no reference (double free of a shared "
+                    "page?)")
+                return
+            self.refs[g][page] -= 1
+            want = a.get("refs")
+            if want is not None and int(want) != self.refs[g][page]:
+                errors.append(
+                    f"{self.track}: page {g}:{page} refcount drift on "
+                    f"free (emitter says {want}, replay says "
+                    f"{self.refs[g][page]})")
+            if self.refs[g][page] == 0:
+                del self.refs[g][page]
                 self.free[g].add(page)
         self._chk_available(errors, f"{ev.name} t={ev.t0:.6f}")
 
     def live_pages(self) -> int:
-        return sum(len(o) for o in self.owned.values())
+        return sum(len(r) for r in self.refs.values())
+
+    def lane_holdings(self) -> int:
+        """Pages (counting multiplicity) held by real lanes (slot >= 0) —
+        must be 0 at quiescence; prefix-cache holdings may persist."""
+        return (sum(len(o) for (g, s), o in self.owned.items() if s >= 0)
+                + sum(sum(sh.values())
+                      for (g, s), sh in self.shared.items() if s >= 0))
+
+    def conservation(self, errors: List[str]) -> None:
+        """free + live == allocatable, and every live page has exactly as
+        many references as holders hold — nothing leaks, nothing double
+        counts."""
+        held: Dict[Tuple[str, int], int] = {}
+        for (g, s), own in self.owned.items():
+            for p in own:
+                held[(g, p)] = held.get((g, p), 0) + 1
+        for (g, s), sh in self.shared.items():
+            for p, n in sh.items():
+                held[(g, p)] = held.get((g, p), 0) + n
+        for g in self.free:
+            if len(self.free[g]) + len(self.refs[g]) != self.n_pages[g] - 1:
+                errors.append(
+                    f"{self.track}: group {g!r} conservation broken "
+                    f"(free {len(self.free[g])} + live {len(self.refs[g])} "
+                    f"!= {self.n_pages[g] - 1})")
+            for p, r in self.refs[g].items():
+                if held.get((g, p), 0) != r:
+                    errors.append(
+                        f"{self.track}: page {g}:{p} refcount {r} but "
+                        f"{held.get((g, p), 0)} holdings")
 
 
 def check(events: Sequence[Event]) -> List[str]:
@@ -161,7 +248,7 @@ def check(events: Sequence[Event]) -> List[str]:
                 errors.append(f"{ev.track}: duplicate pool.config")
             pools[ev.track] = _Pool(ev.track, a.get("groups", {}),
                                     int(a.get("slots", 0)))
-        elif ev.name in (PAGE_ALLOC, PAGE_FREE, PAGE_RESERVE):
+        elif ev.name in (PAGE_ALLOC, PAGE_FREE, PAGE_RESERVE, PAGE_SHARE):
             pool = pools.get(ev.track)
             if pool is None:
                 errors.append(f"{ev.track}: {ev.name} before pool.config")
@@ -192,9 +279,10 @@ def check(events: Sequence[Event]) -> List[str]:
             if rid in admitted:
                 errors.append(f"request {rid}: admitted twice")
             admitted.add(rid)
-        elif ev.name in (REQ_FINISH, REQ_DROP):
+        elif ev.name in (REQ_FINISH, REQ_DROP, REQ_CANCEL):
             rid = a.get("rid")
-            kind = "finish" if ev.name == REQ_FINISH else "drop"
+            kind = {REQ_FINISH: "finish", REQ_DROP: "drop",
+                    REQ_CANCEL: "cancel"}[ev.name]
             if rid in retired:
                 errors.append(f"request {rid}: retired twice "
                               f"({retired[rid]} then {kind})")
@@ -209,10 +297,12 @@ def check(events: Sequence[Event]) -> List[str]:
                       "(dangling round at end of trace)")
     if not (admitted - set(retired)):     # quiescent: no request live
         for pool in pools.values():
-            if pool.live_pages():
+            if pool.lane_holdings():
                 errors.append(
-                    f"{pool.track}: {pool.live_pages()} pages still live "
-                    "after every admitted request retired (leak)")
+                    f"{pool.track}: {pool.lane_holdings()} lane-held page "
+                    "references after every admitted request retired "
+                    "(leak; prefix-cache holdings are exempt)")
+            pool.conservation(errors)
     return errors
 
 

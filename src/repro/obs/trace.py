@@ -66,6 +66,11 @@ REQ_FINISH = "req.finish"
 #: instant — retired by the drop policy (possibly before admission).
 #: args: rid, cls
 REQ_DROP = "req.drop"
+#: instant — retired by barge-in cancellation (mid-decode, mid-prefill,
+#: or while still queued).  A third retirement kind next to finish/drop:
+#: check_trace requires exactly one of the three per request.  args: rid,
+#: cls, tokens (decode tokens emitted before the cancel), admitted
+REQ_CANCEL = "req.cancel"
 
 #: span — one batched decode step.  args: n_active, context, lanes
 #: (rids), wall_s (measured host seconds for the real-compute engines)
@@ -94,16 +99,40 @@ ROUTE_RETIRE = "route.retire"
 #: instant at bind time — pool geometry the invariant checker needs.
 #: args: groups ({name: n_pages}), page_size, slots.  track: "pool"
 POOL_CONFIG = "pool.config"
-#: instant — a page left the free list.  args: group, page, slot.
-#: track: "pool"
+#: instant — a page left the free list into *exclusive* ownership
+#: (refcount 1).  args: group, page, slot.  track: "pool"
 PAGE_ALLOC = "page.alloc"
-#: instant — a page returned to the free list.  args: group, page, slot,
-#: mid_flight (True = freed by the sliding window while the request is
-#: still decoding).  track: "pool"
+#: instant — one reference to a page dropped.  The page returns to the
+#: free list only when this was the last reference (args carry ``refs``,
+#: the count remaining after the drop; 0 means the page is free again).
+#: args: group, page, slot (CACHE_SLOT = the prefix cache's holdings),
+#: refs, mid_flight (True = freed by the sliding window while the request
+#: is still decoding).  track: "pool"
 PAGE_FREE = "page.free"
 #: instant — a slot's reservation set (admission) or cleared (retire,
 #: pages=0).  args: group, slot, pages.  track: "pool"
 PAGE_RESERVE = "page.reserve"
+#: instant — a live page gained a reference without leaving anyone's
+#: hands: a lane adopted a cached prefix page, or the prefix cache pinned
+#: a lane's prompt page.  args: group, page, slot (the *new* holder;
+#: CACHE_SLOT for the prefix cache), refs (count after the share).
+#: track: "pool"
+PAGE_SHARE = "page.share"
+#: instant — copy-on-write: a lane about to write a shared page copied it
+#: into a fresh exclusive page first (emitted alongside the PAGE_ALLOC of
+#: ``to`` and the PAGE_FREE of the reference on ``from``).  args: group,
+#: slot, from_page, to_page.  track: "pool"
+PAGE_COW = "page.cow"
+
+#: instant — prefix-cache lookup outcome at admission.  args: rid,
+#: hit (bool), tokens (prefix length adopted; 0 on miss).  track: "pool"
+PREFIX_LOOKUP = "prefix.lookup"
+#: instant — a prompt prefix was pinned into the prefix cache.  args:
+#: tokens, pages (references taken).  track: "pool"
+PREFIX_INSERT = "prefix.insert"
+#: instant — an entry was evicted (LRU / pressure).  args: tokens, pages
+#: (references released).  track: "pool"
+PREFIX_EVICT = "prefix.evict"
 
 #: counters (gauges): one ``value`` float each
 CTR_LANES = "lanes.active"

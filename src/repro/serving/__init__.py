@@ -104,6 +104,32 @@ lifecycle fields the engines fill in):
   ``benchmarks/table_spec.py`` shows the learned arm beating
   always-dense and every fixed-k deployment on goodput).
 
+  **Sessions, prefix reuse, and TTFT-first serving.**  KV pages are
+  refcounted: a holder's claim on a page is *owned* (exclusive, counts
+  against its admission reservation) or *shared* (read-only reference),
+  pages return to the free list only at refcount zero, and writes into
+  a shared page copy-on-write first (the boundary page a tail write can
+  need is reserved at admission).  On that substrate a
+  :class:`~repro.serving.kv_cache.PrefixCache` (token-hash-keyed,
+  byte-verified, LRU-bounded; full-attention stacks only) lets a
+  completed prefill publish its pages and later requests adopt the
+  longest cached strict prefix — repeated system prompts and a
+  session's own earlier turns become near-zero-cost prefills, charged
+  ``prefill_s(P - l, context=l)`` on the clock so admission
+  projections, the analytic batcher's warm-prefix mirror, and the
+  fleet router all see the win.  Session-structured traffic
+  (``traffic.generate_sessions``: multi-turn conversations, think-time
+  gaps, shared system prompts, streaming TTFT SLOs, seeded barge-in)
+  exercises it end to end: admission drops requests whose projected
+  first token misses ``ttft_deadline_s``, routing prefers engines that
+  can meet it (and discounts warm-prefix service time), and a
+  mid-decode cancel retires the lane at the next step boundary keeping
+  the partial output while shared pages are unreferenced, not freed.
+  Shared-prefix outputs are token-identical to independent prefills in
+  both kernel modes (tests/test_sessions.py);
+  ``benchmarks/table_sessions.py`` shows sharing cutting TTFT p50 with
+  no less goodput at equal capacity.
+
 * **Traffic-scale path** — the fleet simulator.  Its contract, end to end:
 
   - **Clock.**  One global notion of simulated time, denominated in the
@@ -158,23 +184,32 @@ parameterizes a simulated engine can be applied to a live engine via its
 ``ExecContext`` precision policy.  ``benchmarks/table_paged.py`` measures
 the fusion: wave vs. paged-continuous on identical requests — same tokens,
 lower p99, higher goodput.
+
+A narrative walkthrough of the whole system — a request's life per
+path, the clock contract, the page-pool/reservation/refcount model, and
+the FPX axes — lives in ``docs/architecture.md``; the benchmark index
+is ``docs/benchmarks.md``.
 """
 from repro.serving.continuous import (ContinuousBatcher, LatencyProfile,
                                       degraded_budget, projected_finish)
 from repro.serving.engine import GenerationResult, ServingEngine
 from repro.serving.fleet import FleetRouter, pool_candidates
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import PagedKVCache, PrefixCache
 from repro.serving.metrics import SLOReport, summarize
 from repro.serving.paged_engine import ContinuousEngine
 from repro.serving.sampler import GREEDY, SamplerPolicy
 from repro.serving.scheduler import Request, Scheduler
-from repro.serving.traffic import (SCENARIOS, SimRequest, TrafficClass,
-                                   generate, scenario)
+from repro.serving.traffic import (SCENARIOS, SessionClass, SimRequest,
+                                   TrafficClass, generate,
+                                   generate_sessions, scenario,
+                                   session_scenario)
 
 __all__ = [
     "ContinuousBatcher", "ContinuousEngine", "LatencyProfile",
     "GenerationResult", "ServingEngine", "FleetRouter", "PagedKVCache",
-    "pool_candidates", "SLOReport", "summarize", "Request", "Scheduler",
-    "SCENARIOS", "SimRequest", "TrafficClass", "generate", "scenario",
-    "degraded_budget", "projected_finish", "GREEDY", "SamplerPolicy",
+    "PrefixCache", "pool_candidates", "SLOReport", "summarize",
+    "Request", "Scheduler", "SCENARIOS", "SessionClass", "SimRequest",
+    "TrafficClass", "generate", "generate_sessions", "scenario",
+    "session_scenario", "degraded_budget", "projected_finish", "GREEDY",
+    "SamplerPolicy",
 ]

@@ -110,16 +110,16 @@ class LatencyProfile:
         """Cost of absorbing ``prompt_len`` prompt tokens with ``context``
         tokens already written to the request's pages (0 for a monolithic
         prefill or a first chunk).  The context term is the length-aware
-        attention charge of a later chunk attending over the lane's prior
-        pages (:func:`repro.core.latency.chunk_attn_s`)."""
+        attention charge of absorbing new tokens over the lane's prior
+        pages — a later chunked-prefill chunk, or a prefix-cache hit's
+        remainder attending over the adopted pages
+        (:func:`repro.core.latency.resume_prefill_s`)."""
         key = (prompt_len, context)
         t = self._prefill.get(key)
         if t is None:
-            t = lat_mod.step_latency(self.cfg, n_tokens=prompt_len,
-                                     w_bits=self.avg_bits, hw=self.hw)
-            if context:
-                t += lat_mod.chunk_attn_s(self.cfg, chunk=prompt_len,
-                                          context=context, hw=self.hw)
+            t = lat_mod.resume_prefill_s(self.cfg, n_new=prompt_len,
+                                         context=context,
+                                         w_bits=self.avg_bits, hw=self.hw)
             self._prefill[key] = t
         return t
 
@@ -245,16 +245,25 @@ class _Running:
 
 def _prefill_charge(profile: LatencyProfile, prompt_len: int,
                     n_active_after: int, prefill_chunk: Optional[int],
-                    ) -> float:
+                    cached_prefix: int = 0) -> float:
     """Modeled wall time between a request's admission and the end of its
     prefill.  Monolithic: one stall.  Chunked: the per-chunk charges plus
     one interleaved decode step per chunk boundary when other lanes are
     decoding (that interleaving is the point — the *other* lanes' tokens
-    keep landing; for this request it is added wait)."""
+    keep landing; for this request it is added wait).
+
+    ``cached_prefix``: prompt tokens adopted from the prefix cache — the
+    skipped span is free, and only the remainder is absorbed (attending
+    over the adopted pages, so a hit on a long system prompt is priced as
+    the short remainder's resume cost, not the full prompt).  This is the
+    single place the prefix cache's win enters the clock; every admission
+    projection below inherits it."""
+    new = prompt_len - cached_prefix
     if prefill_chunk is None:
-        return profile.prefill_s(prompt_len)
-    total = profile.prefill_chunked_s(prompt_len, prefill_chunk)
-    n_chunks = len(prompt_chunks(prompt_len, prefill_chunk))
+        return profile.prefill_s(new, context=cached_prefix)
+    total = profile.prefill_chunked_s(new, prefill_chunk,
+                                      start_ctx=cached_prefix)
+    n_chunks = len(prompt_chunks(new, prefill_chunk))
     if n_active_after > 1:
         total += (n_chunks - 1) * profile.tok_s(n_active_after, prompt_len)
     return total
@@ -262,7 +271,8 @@ def _prefill_charge(profile: LatencyProfile, prompt_len: int,
 
 def projected_finish(profile: LatencyProfile, t_now: float,
                      n_active_after: int, req, n_tokens: int, *,
-                     prefill_chunk: Optional[int] = None) -> float:
+                     prefill_chunk: Optional[int] = None,
+                     cached_prefix: int = 0) -> float:
     """Finish-time projection if ``req`` were admitted now: prefill stalls
     the engine (monolithically, or chunk-by-chunk with interleaved decode
     steps — see :func:`_prefill_charge`), then ``n_tokens`` steps at the
@@ -270,13 +280,34 @@ def projected_finish(profile: LatencyProfile, t_now: float,
     point)."""
     step = profile.tok_s(n_active_after, req.prompt_len + n_tokens // 2)
     prefill = _prefill_charge(profile, req.prompt_len, n_active_after,
-                              prefill_chunk)
+                              prefill_chunk, cached_prefix)
     return t_now + prefill + n_tokens * step
+
+
+def projected_first_token(profile: LatencyProfile, t_now: float,
+                          n_active_after: int, req, *,
+                          prefill_chunk: Optional[int] = None,
+                          cached_prefix: int = 0,
+                          decode_first_token: bool = False) -> float:
+    """First-token-time projection if ``req`` were admitted now — the
+    TTFT-side admission check, shared by the analytic batcher and the
+    live paged engine.  The live engine's first token *is* the prefill's
+    last-position logits, so its projection is prefill-done; the analytic
+    clock models no prefill-logits token (``decode_first_token=True``
+    adds the first decode step, mirroring where ``t_first_token`` lands
+    in :class:`ContinuousBatcher`).  Degrading trims decode budget, which
+    cannot speed this up — a TTFT miss is a drop, never a degrade."""
+    t = t_now + _prefill_charge(profile, req.prompt_len, n_active_after,
+                                prefill_chunk, cached_prefix)
+    if decode_first_token:
+        t += profile.tok_s(n_active_after, req.prompt_len + 1)
+    return t
 
 
 def degraded_budget(profile: LatencyProfile, t_now: float,
                     n_active_after: int, req, *,
-                    prefill_chunk: Optional[int] = None) -> int:
+                    prefill_chunk: Optional[int] = None,
+                    cached_prefix: int = 0) -> int:
     """Largest token budget that still fits ``req``'s deadline, with the
     step cost *re-projected at the trimmed budget's own context* (iterated
     to a fixed point).  A budget derived from the original ``max_new``'s
@@ -286,7 +317,7 @@ def degraded_budget(profile: LatencyProfile, t_now: float,
     ``projected_finish(..., n) <= req.deadline_abs``.  Returns 0 when not
     even one token fits (caller drops)."""
     prefill = _prefill_charge(profile, req.prompt_len, n_active_after,
-                              prefill_chunk)
+                              prefill_chunk, cached_prefix)
     slack = req.deadline_abs - t_now - prefill
     if slack <= 0:
         return 0
@@ -341,6 +372,7 @@ class ContinuousBatcher:
                  policy: str = "degrade",
                  on_retire: Optional[Callable[[SimRequest], None]] = None,
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  tracer=None):
         """``on_retire`` fires once per request leaving the system — on
         completion *and* on drop — so a learner sees the reward (or lack
@@ -348,8 +380,18 @@ class ContinuousBatcher:
         admitted prompts this many tokens at a time, interleaved with
         decode steps for the other slots, instead of stalling the engine
         for the whole prompt (None = monolithic, the historical
-        behavior).  ``tracer``: a :class:`repro.obs.Tracer` (or a scoped
-        view) receiving the full request/step event stream; None = the
+        behavior).  ``prefix_cache``: model prefix reuse — the analytic
+        mirror of the live engine's token-hash cache.  It has no token
+        arrays, so it keys on the *identity* streams session traffic
+        declares (``SimRequest.prefix_keys``): a (key, length) pair
+        published at prefill completion marks the prompt's first
+        ``length`` tokens warm under ``key``, and a later request listing
+        the same key skips ``min(warm, own length)`` tokens of prefill.
+        Because session prompts literally extend each other, this
+        coincides with what the token-hash cache would find (modulo
+        capacity eviction, which the analytic mirror does not model).
+        ``tracer``: a :class:`repro.obs.Tracer` (or a scoped view)
+        receiving the full request/step event stream; None = the
         zero-overhead null tracer."""
         assert policy in ("drop", "degrade", "serve"), policy
         assert prefill_chunk is None or prefill_chunk >= 1, prefill_chunk
@@ -358,6 +400,8 @@ class ContinuousBatcher:
         self.policy = policy
         self.on_retire = on_retire
         self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
+        self._warm: Dict[str, int] = {}   # prefix-stream key -> warm tokens
         self.tr = tracer or tr_mod.NULL
         self.t = 0.0                      # engine-local simulated clock
         self.pending: List[SimRequest] = []
@@ -374,10 +418,37 @@ class ContinuousBatcher:
 
     # -- admission ----------------------------------------------------------
 
-    def _projected_finish(self, req: SimRequest, n_tokens: int) -> float:
+    def cached_prefix_len(self, req: SimRequest) -> int:
+        """Prompt tokens a request admitted *now* would skip via prefix
+        reuse — the analytic mirror of the live engine's token-hash
+        lookup, and the router-facing signal ``FleetRouter`` folds into
+        first-token slack.  At least one prompt token always remains
+        (the first output token comes from the remainder's logits)."""
+        if not self.prefix_cache:
+            return 0
+        best = 0
+        for key, ln in getattr(req, "prefix_keys", ()) or ():
+            best = max(best, min(self._warm.get(key, 0), ln))
+        return min(best, req.prompt_len - 1)
+
+    def _publish_prefixes(self, req: SimRequest) -> None:
+        """At prefill completion the prompt's declared prefix streams are
+        warm — later same-stream requests skip them.  (Completion, not
+        admission: a concurrent same-prefix request must not hit pages
+        that are still being written.)"""
+        if not self.prefix_cache:
+            return
+        for key, ln in getattr(req, "prefix_keys", ()) or ():
+            n = min(ln, req.prompt_len)
+            if n > self._warm.get(key, 0):
+                self._warm[key] = n
+
+    def _projected_finish(self, req: SimRequest, n_tokens: int,
+                          cached_prefix: int = 0) -> float:
         return projected_finish(self.profile, self.t, len(self.active) + 1,
                                 req, n_tokens,
-                                prefill_chunk=self.prefill_chunk)
+                                prefill_chunk=self.prefill_chunk,
+                                cached_prefix=cached_prefix)
 
     def _admit_one(self) -> bool:
         """Admit the earliest-deadline *arrived* pending request, applying
@@ -388,13 +459,29 @@ class ContinuousBatcher:
                 return False
             req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
             self.pending.remove(req)
+            cached = self.cached_prefix_len(req)
+            if self.tr and self.prefix_cache:
+                self.tr.instant(tr_mod.PREFIX_LOOKUP, self.t, track="queue",
+                                rid=req.rid, hit=cached > 0, tokens=cached)
+            if self.policy != "serve" and req.ttft_deadline_s is not None \
+                    and projected_first_token(
+                        self.profile, self.t, len(self.active) + 1, req,
+                        prefill_chunk=self.prefill_chunk,
+                        cached_prefix=cached, decode_first_token=True,
+                    ) > req.t_arrive + req.ttft_deadline_s:
+                # degrading trims decode budget, which cannot speed up the
+                # first token — a TTFT miss is a drop under either policy
+                retire_dropped(self, req)
+                continue
             n_tok = req.max_new
             if self.policy != "serve" \
-                    and self._projected_finish(req, n_tok) > req.deadline_abs:
+                    and self._projected_finish(req, n_tok, cached) \
+                    > req.deadline_abs:
                 if self.policy == "degrade":
                     n_tok = degraded_budget(self.profile, self.t,
                                             len(self.active) + 1, req,
-                                            prefill_chunk=self.prefill_chunk)
+                                            prefill_chunk=self.prefill_chunk,
+                                            cached_prefix=cached)
                 else:
                     n_tok = 0
                 if n_tok < 1:
@@ -408,25 +495,50 @@ class ContinuousBatcher:
             if self.tr:
                 emit_admit(self.tr, req, self.t, n_tok, track="steps")
             if self.prefill_chunk is None:
-                # monolithic: the whole prompt is charged as one stall
+                # monolithic: the (remaining) prompt is charged as one
+                # stall; an adopted prefix is free and the remainder
+                # attends over it
                 t0 = self.t
-                self.t += self.profile.prefill_s(req.prompt_len)
+                self.t += self.profile.prefill_s(req.prompt_len - cached,
+                                                 context=cached)
                 req.t_prefill_done = self.t
                 if self.tr:
                     self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
                                  track="steps", rid=req.rid,
-                                 tokens=req.prompt_len)
+                                 tokens=req.prompt_len - cached,
+                                 cached=cached)
+                self._publish_prefixes(req)
                 self.active.append(_Running(req, remaining=n_tok,
                                             context=req.prompt_len))
             else:
                 # chunked: charge nothing yet — _decode_step absorbs the
-                # prompt chunk-by-chunk, decode steps landing in between
+                # remainder chunk-by-chunk, decode steps landing in
+                # between (prefill_left starts past the adopted prefix)
                 self.active.append(_Running(req, remaining=n_tok,
                                             context=req.prompt_len,
-                                            prefill_left=req.prompt_len))
+                                            prefill_left=req.prompt_len
+                                            - cached))
             return True
 
+    def _sweep_cancels(self) -> None:
+        """Barge-in: retire every request whose cancel time has passed —
+        queued requests leave the queue, active lanes free their slot
+        mid-decode (or mid-prefill) keeping whatever tokens they
+        produced.  Swept between steps, mirroring the live engine's
+        page-reclaiming sweep."""
+        for req in [r for r in self.pending
+                    if getattr(r, "t_cancel", None) is not None
+                    and r.t_cancel <= self.t]:
+            self.pending.remove(req)
+            retire_cancelled(self, req)
+        for run in [r for r in self.active
+                    if getattr(r.req, "t_cancel", None) is not None
+                    and r.req.t_cancel <= self.t]:
+            self.active.remove(run)
+            retire_cancelled(self, run.req)
+
     def _admit(self) -> None:
+        self._sweep_cancels()
         while self._admit_one():
             pass
 
@@ -453,6 +565,7 @@ class ContinuousBatcher:
             if run.prefill_left > 0:
                 continue
             run.req.t_prefill_done = self.t
+            self._publish_prefixes(run.req)
             if self.policy == "serve":
                 continue
             fit = post_prefill_fit(self.profile, self.t, len(self.active),
@@ -473,6 +586,7 @@ class ContinuousBatcher:
                 retire_dropped(self, run.req)
 
     def _decode_step(self) -> None:
+        self._sweep_cancels()
         if self.prefill_chunk is not None:
             self._advance_prefills()
         decoding = [r for r in self.active if r.prefill_left <= 0]
@@ -500,7 +614,7 @@ class ContinuousBatcher:
             if run.req.tokens_done == 1:
                 # the analytic clock models no prefill-logits token: the
                 # first token lands after the first decode step
-                run.req.t_first_token = self.t
+                mark_first_token(run.req, self.t)
                 if self.tr:
                     self.tr.instant(tr_mod.REQ_FIRST_TOKEN, self.t,
                                     track="steps", rid=run.req.rid,
@@ -562,7 +676,7 @@ class ContinuousBatcher:
             run.context += emit
             run.req.tokens_done += emit
             if first:
-                run.req.t_first_token = self.t
+                mark_first_token(run.req, self.t)
                 if self.tr:
                     self.tr.instant(tr_mod.REQ_FIRST_TOKEN, self.t,
                                     track="steps", rid=run.req.rid,
@@ -655,6 +769,43 @@ def emit_finish(tr, req, track: str) -> None:
                met_deadline=bool(req.met_deadline),
                degraded=req.tokens_done < req.max_new,
                **request_slack(req))
+
+
+def mark_first_token(req, t: float) -> None:
+    """Shared first-token bookkeeping: stamp ``t_first_token`` and judge
+    the TTFT deadline (relative to arrival) the moment it is decidable —
+    both engine flavors call this at their own notion of "first token"
+    (prefill-done logits on the live paged path, first decode step on the
+    analytic clock)."""
+    req.t_first_token = t
+    if getattr(req, "ttft_deadline_s", None) is not None:
+        req.met_ttft = (t - req.t_arrive) <= req.ttft_deadline_s
+
+
+def retire_cancelled(eng, req) -> None:
+    """Shared barge-in bookkeeping: the request leaves at ``eng.t`` with
+    whatever tokens it produced.  A cancelled turn is *not* a failure —
+    the user interrupted because they had heard enough — so it retires
+    into ``completed`` flagged ``cancelled``, and ``met_deadline`` is
+    judged on whether streaming *started* in time (first token by the
+    completion deadline); a cancel that lands while the request is still
+    queued or prefilling never streamed and counts as a miss.  Retires
+    through the same ``on_retire`` feedback path as finishes and drops,
+    so the router's bandit sees the (partial) reward."""
+    req.cancelled = True
+    req.t_finish = eng.t
+    req.latency_s = eng.t - req.t_arrive
+    req.met_deadline = (req.t_first_token is not None
+                        and req.t_first_token <= req.deadline_abs)
+    eng.completed.append(req)
+    tr = getattr(eng, "tr", None)
+    if tr:
+        tr.instant(tr_mod.REQ_CANCEL, eng.t, track="queue", rid=req.rid,
+                   cls=getattr(req, "cls_name", "default"),
+                   tokens=req.tokens_done,
+                   admitted=req.t_admit is not None)
+    if eng.on_retire is not None:
+        eng.on_retire(req)
 
 
 def retire_dropped(eng, req) -> None:

@@ -139,6 +139,11 @@ def demo_spec_pool(*, hw: Hardware = V5E, ks: Sequence[int] = (2, 4),
     return spec_variants(demo_pool(hw=hw), ks=ks, accept=accept)
 
 
+def _no_prefix(req) -> int:
+    """Fallback ``cached_prefix_len`` for engines without a prefix cache."""
+    return 0
+
+
 class FleetRouter:
     """Dispatch + feedback loop over a pool of continuous batchers."""
 
@@ -222,24 +227,58 @@ class FleetRouter:
     # -- dispatch -----------------------------------------------------------
 
     def dispatch(self, req: SimRequest) -> int:
+        waits = [e.backlog_s(req.t_arrive) for e in self.engines]
+        # prefix-aware service estimates: an engine holding this prompt's
+        # prefix warm (cached_prefix_len > 0) skips that span's prefill,
+        # so its estimate drops by the resume discount — session turns
+        # gravitate to the engine already holding their pages.  Engines
+        # without the hook (or without a warm prefix) keep the historical
+        # estimate exactly.
+        cached = [getattr(e, "cached_prefix_len", _no_prefix)(req)
+                  for e in self.engines]
+        lats = []
+        for e, l in zip(self.engines, cached):
+            t = e.profile.service_s(req.prompt_len, req.max_new)
+            if l:
+                t -= (e.profile.prefill_s(req.prompt_len)
+                      - e.profile.prefill_s(req.prompt_len - l, context=l))
+            lats.append(t)
+        # first-token slack: with a streaming SLO, engines whose projected
+        # TTFT (wait + discounted prefill + one uncontended step — a
+        # first-order estimate, same spirit as backlog_s) misses the
+        # budget are excluded, unless that excludes everyone — then the
+        # completion-deadline rule decides alone rather than deadlocking.
+        ok = None
+        if req.ttft_deadline_s is not None:
+            ok = [w + e.profile.prefill_s(req.prompt_len - l, context=l)
+                  + e.profile.tok_s(1, req.prompt_len + 1)
+                  <= req.ttft_deadline_s
+                  for e, w, l in zip(self.engines, waits, cached)]
+            if not any(ok):
+                ok = None
         if self.mode == "bandit":
-            waits = [e.backlog_s(req.t_arrive) for e in self.engines]
-            fits = [w + e.profile.service_s(req.prompt_len, req.max_new)
-                    <= req.deadline_s
-                    for w, e in zip(waits, self.engines)]
+            fits = [w + t <= req.deadline_s for w, t in zip(waits, lats)]
+            if ok is not None:
+                fits = [f and o for f, o in zip(fits, ok)]
             idx = self._selector(req.cls_name).choose(waits, feasible=fits)
         else:
-            waits = [e.backlog_s(req.t_arrive) for e in self.engines]
-            cands = [dataclasses.replace(
-                c, latency_s=e.profile.service_s(req.prompt_len, req.max_new))
-                for c, e in zip(self.cands, self.engines)]
-            idx = fpx.select_for_slack(cands, req.deadline_s, waits,
-                                       self.quality)
+            cands = [dataclasses.replace(c, latency_s=t)
+                     for c, t in zip(self.cands, lats)]
+            if ok is not None:
+                sub = [i for i, o in enumerate(ok) if o]
+                pick = fpx.select_for_slack([cands[i] for i in sub],
+                                            req.deadline_s,
+                                            [waits[i] for i in sub],
+                                            self.quality)
+                idx = sub[pick]
+            else:
+                idx = fpx.select_for_slack(cands, req.deadline_s, waits,
+                                           self.quality)
         req.engine_idx = idx
         if self.tr:
             self.tr.instant(tr_mod.ROUTE_DISPATCH, req.t_arrive,
                             track="router", rid=req.rid, cls=req.cls_name,
-                            engine_idx=idx)
+                            engine_idx=idx, cached=cached[idx])
         self.engines[idx].submit(req)
         return idx
 

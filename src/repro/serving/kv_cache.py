@@ -44,8 +44,28 @@ and :meth:`can_admit` measures the pool's *available* (free minus
 outstanding-reserved) pages.  The invariant — free >= sum over slots of
 (reserved - owned)+ — makes every lazy allocation a guaranteed pop.
 
-Page accounting (free lists, block tables, per-lane positions) is
-host-side numpy — it is O(pages) bookkeeping between jit'd steps.  The
+**Refcounted sharing + copy-on-write.**  Every page carries a reference
+count.  Exclusively owned pages (the historical case) sit at refcount 1;
+:meth:`share_prefix` lets additional holders — decode lanes adopting a
+cached prompt prefix (``alloc(..., adopt=...)``), or the
+:class:`PrefixCache` pinning a finished prompt — take references on the
+*same* physical pages, so N lanes over one system prompt read one copy of
+its K/V.  Shared pages are read-only by construction: before any write
+lands in a shared page, :meth:`prepare_tokens` copies it into a fresh
+exclusive page (copy-on-write) through the same free-list/reservation
+accounting — a lane's reservation includes the one potential CoW page of
+a partially-shared prefix, so the copy is a guaranteed pop too.  A
+reference drop returns the page to the free list only at refcount zero
+(:meth:`free` retires a lane by dropping its references, never by
+returning page lists wholesale), and the trace invariant checker
+(``obs.check_trace``) replays the refcounts: double-freeing a shared
+page, or a page leaking when its last holder drops it, is a hard error.
+Shared holdings do **not** count against a lane's reservation — only
+exclusive pages do — which is exactly what makes a prefix hit cheap at
+admission: the adopted pages cost the pool nothing.
+
+Page accounting (free lists, block tables, refcounts, per-lane positions)
+is host-side numpy — it is O(pages) bookkeeping between jit'd steps.  The
 pools themselves are device arrays threaded functionally through
 ``transformer.paged_decode_step``.
 
@@ -57,7 +77,9 @@ harmlessly there; their outputs are discarded.
 """
 from __future__ import annotations
 
+import hashlib
 import math
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -71,6 +93,10 @@ from repro.obs import trace as tr_mod
 #: id of the page idle lanes (and retired window entries) point at; never
 #: allocated to a request.  One per group pool.
 DUMMY_PAGE = 0
+
+#: pseudo-slot id the prefix cache's page references are emitted under in
+#: pool trace events (it holds pages but has no lane or reservation)
+CACHE_SLOT = -1
 
 
 class PagedKVCache:
@@ -93,14 +119,22 @@ class PagedKVCache:
         self.table_width = math.ceil(max_ctx / page_size)
         self.n_pages = n_pages
         self.groups: List[PagedGroup] = paged_layer_groups(cfg)
+        self._gmap: Dict[str, PagedGroup] = {g.name: g for g in self.groups}
         for g in self.groups:
             assert g.window is None or g.window >= 1, (g.name, g.window)
         self._group_pages: Dict[str, int] = {}
         self.kpool: Dict[str, jax.Array] = {}
         self.vpool: Dict[str, jax.Array] = {}
         self._free: Dict[str, List[int]] = {}
-        #: per (group, slot): logical page index -> owned page id
+        #: per (group, slot): logical page index -> *exclusively* owned
+        #: page id (refcount contribution 1; counts against reservation)
         self._owned: Dict[str, List[Dict[int, int]]] = {}
+        #: per (group, slot): logical page index -> *shared* page id — a
+        #: reference on a page other holders also reference.  Read-only
+        #: until copy-on-write promotes the logical into ``_owned``.
+        self._shared: Dict[str, List[Dict[int, int]]] = {}
+        #: per group: refcount per physical page (0 = free or dummy)
+        self._refcount: Dict[str, np.ndarray] = {}
         #: per (group, slot): peak concurrent page demand of the admitted
         #: request (0 = slot idle) — see "Reservations" above
         self._reserved: Dict[str, np.ndarray] = {}
@@ -115,6 +149,8 @@ class PagedKVCache:
             self.vpool[g.name] = jnp.zeros(shape, dtype)
             self._free[g.name] = list(range(1, n_pg))    # 0 is the dummy
             self._owned[g.name] = [{} for _ in range(slots)]
+            self._shared[g.name] = [{} for _ in range(slots)]
+            self._refcount[g.name] = np.zeros((n_pg,), np.int32)
             self._reserved[g.name] = np.zeros((slots,), np.int64)
             self.block_tables[g.name] = np.full(
                 (slots, self.table_width), DUMMY_PAGE, np.int32)
@@ -161,16 +197,20 @@ class PagedKVCache:
         return max(0, pos - g.window + 1) // self.page_size
 
     def peak_pages(self, g: PagedGroup, n_tokens: int,
-                   prefill_chunk: Optional[int] = None) -> int:
+                   prefill_chunk: Optional[int] = None,
+                   cached_prefix: int = 0) -> int:
         """Peak concurrent page demand of a request writing ``n_tokens``
-        positions.  Full groups: every page, for the whole lifetime.
-        Window groups: the live set slides — bounded by ``win_cap`` during
-        decode, transiently ``ceil((window + chunk - 1)/page_size) + 1``
-        while a prefill chunk is absorbed (the chunk's own pages plus the
+        positions.  Full groups: every page, for the whole lifetime —
+        minus the pages a ``cached_prefix``-token prefix adoption shares
+        instead of allocating (the partially-covered boundary page still
+        counts: it is the one potential copy-on-write).  Window groups:
+        the live set slides — bounded by ``win_cap`` during decode,
+        transiently ``ceil((window + chunk - 1)/page_size) + 1`` while a
+        prefill chunk is absorbed (the chunk's own pages plus the
         in-window prior pages must coexist for the chunk attend)."""
         need = math.ceil(n_tokens / self.page_size)
         if g.window is None:
-            return need
+            return need - cached_prefix // self.page_size
         span = g.window + max(1, prefill_chunk or 1) - 1
         cap = min(self.table_width,
                   math.ceil(span / self.page_size) + 1)
@@ -179,9 +219,10 @@ class PagedKVCache:
     # -- allocation ----------------------------------------------------------
 
     def pages_needed(self, n_tokens: int,
-                     prefill_chunk: Optional[int] = None) -> int:
+                     prefill_chunk: Optional[int] = None,
+                     cached_prefix: int = 0) -> int:
         """Total peak page demand across groups (admission feasibility)."""
-        return sum(self.peak_pages(g, n_tokens, prefill_chunk)
+        return sum(self.peak_pages(g, n_tokens, prefill_chunk, cached_prefix)
                    for g in self.groups)
 
     @property
@@ -209,21 +250,28 @@ class PagedKVCache:
                         for g in self.groups))
 
     def can_admit(self, n_tokens: int,
-                  prefill_chunk: Optional[int] = None) -> bool:
+                  prefill_chunk: Optional[int] = None,
+                  cached_prefix: int = 0) -> bool:
         return (n_tokens <= self.max_ctx
-                and all(self.peak_pages(g, n_tokens, prefill_chunk)
+                and all(self.peak_pages(g, n_tokens, prefill_chunk,
+                                        cached_prefix)
                         <= self.available(g) for g in self.groups))
 
     def _take(self, g: PagedGroup, slot: int, logical: int) -> int:
         """Pop a free page of ``g`` and map ``slot``'s logical page
-        ``logical`` to it (reservations guarantee the pop succeeds)."""
+        ``logical`` to it, exclusively — refcount 1 (reservations
+        guarantee the pop succeeds)."""
         owned = self._owned[g.name][slot]
         assert logical not in owned, (g.name, slot, logical)
+        assert logical not in self._shared[g.name][slot], \
+            (g.name, slot, logical, "still shared — CoW must unref first")
         assert len(owned) < int(self._reserved[g.name][slot]), \
             f"{g.name}/slot{slot}: allocation beyond reservation"
         assert self._free[g.name], \
             f"{g.name}: free list empty despite reservation"
         page = self._free[g.name].pop()
+        assert self._refcount[g.name][page] == 0, (g.name, page)
+        self._refcount[g.name][page] = 1
         owned[logical] = page
         self.block_tables[g.name][slot, logical] = page
         if self.tr:
@@ -231,17 +279,49 @@ class PagedKVCache:
                             group=g.name, page=page, slot=slot)
         return page
 
-    def _drop_page(self, g: PagedGroup, slot: int, logical: int) -> int:
-        """Return ``slot``'s logical page to the pool; the table entry
-        parks on the dummy page (window-masked, never attended)."""
-        page = self._owned[g.name][slot].pop(logical)
-        self._free[g.name].append(page)
-        self.block_tables[g.name][slot, logical] = DUMMY_PAGE
+    def _unref(self, g: PagedGroup, page: int, slot: int, *,
+               mid_flight: bool = False) -> bool:
+        """Drop one reference to ``page``.  Only the *last* reference
+        returns the page to the free list — the refcounted free every
+        release path (retire, window trim, CoW, cache eviction) goes
+        through.  Returns True iff the page was actually freed."""
+        rc = self._refcount[g.name]
+        assert rc[page] > 0, (g.name, page, "unref of a dead page")
+        rc[page] -= 1
+        freed = rc[page] == 0
+        if freed:
+            self._free[g.name].append(page)
         if self.tr:
             self.tr.instant(tr_mod.PAGE_FREE, self._clock(), track="pool",
                             group=g.name, page=page, slot=slot,
-                            mid_flight=True)
+                            refs=int(rc[page]), mid_flight=mid_flight)
+        return freed
+
+    def _drop_page(self, g: PagedGroup, slot: int, logical: int) -> int:
+        """Drop ``slot``'s reference to its logical page; the table entry
+        parks on the dummy page (window-masked, never attended)."""
+        page = self._owned[g.name][slot].pop(logical)
+        self._unref(g, page, slot, mid_flight=True)
+        self.block_tables[g.name][slot, logical] = DUMMY_PAGE
         return page
+
+    def _cow(self, g: PagedGroup, slot: int, logical: int) -> int:
+        """Copy-on-write: ``slot`` is about to write into a shared page —
+        copy its K/V into a fresh exclusive page (the slot's reservation
+        covers it), repoint the block table, and drop the shared
+        reference.  Other holders keep reading the original."""
+        old = self._shared[g.name][slot].pop(logical)
+        new = self._take(g, slot, logical)
+        self.kpool[g.name] = self.kpool[g.name].at[:, new].set(
+            self.kpool[g.name][:, old])
+        self.vpool[g.name] = self.vpool[g.name].at[:, new].set(
+            self.vpool[g.name][:, old])
+        self._unref(g, old, slot)
+        if self.tr:
+            self.tr.instant(tr_mod.PAGE_COW, self._clock(), track="pool",
+                            group=g.name, slot=slot, from_page=old,
+                            to_page=new)
+        return new
 
     def _ensure(self, g: PagedGroup, slot: int, lo: int, hi: int) -> None:
         """Window groups: make logical pages [lo, hi] live for ``slot``."""
@@ -258,18 +338,40 @@ class PagedKVCache:
         return [self._drop_page(g, slot, j) for j in sorted(dropped)]
 
     def alloc(self, slot: int, n_tokens: int,
-              prefill_chunk: Optional[int] = None
+              prefill_chunk: Optional[int] = None, *,
+              adopt: Optional[dict] = None, adopt_len: int = 0
               ) -> List[Tuple[str, int]]:
         """Admit a request covering ``n_tokens`` logical positions into
         ``slot``: full groups get every page now; window groups only
         *reserve* their peak demand — their pages are taken lazily as the
         write position advances (and freed as it leaves them behind).
-        Returns the (group, page) pairs allocated immediately."""
+
+        ``adopt`` (a :meth:`share_prefix` snapshot) maps the first
+        ``adopt_len`` positions onto already-live *shared* pages instead
+        of fresh ones: each covering page gains a reference, the block
+        table points at it, and the write position starts at
+        ``adopt_len`` — the prefix-cache hit path.  ``adopt_len`` may
+        truncate the snapshot (tokens beyond it inside the boundary page
+        are masked by ``pos`` until sequential writes — post-CoW —
+        overwrite them).  The reservation covers only the exclusive pages
+        the lane can ever own, *including* the boundary page a partially
+        shared prefix will copy-on-write; full-page shares cost nothing.
+        Adoption requires an all-full-attention stack (window groups trim
+        pages below the horizon, so a snapshot taken at one position is
+        not valid at another).  Returns the (group, page) pairs allocated
+        immediately (exclusive takes only — not the adopted shares)."""
         assert n_tokens <= self.max_ctx, (n_tokens, self.max_ctx)
+        if adopt is not None:
+            assert 0 < adopt_len <= adopt["len"], (adopt_len, adopt["len"])
+            assert adopt_len < n_tokens, "nothing left to write"
+            assert all(g.window is None for g in self.groups), \
+                "prefix adoption requires full-attention groups"
+        cached = adopt_len if adopt is not None else 0
         taken: List[Tuple[str, int]] = []
         for g in self.groups:
             assert not self._owned[g.name][slot], f"slot {slot} allocated"
-            need = self.peak_pages(g, n_tokens, prefill_chunk)
+            assert not self._shared[g.name][slot], f"slot {slot} allocated"
+            need = self.peak_pages(g, n_tokens, prefill_chunk, cached)
             assert need <= self.available(g), (g.name, need,
                                                self.available(g))
             self._reserved[g.name][slot] = need
@@ -278,28 +380,42 @@ class PagedKVCache:
                                 track="pool", group=g.name, slot=slot,
                                 pages=need)
             self.block_tables[g.name][slot, :] = DUMMY_PAGE
+            first = 0
+            if cached:
+                first = math.ceil(cached / self.page_size)
+                shared = self._shared[g.name][slot]
+                pages = adopt["pages"][g.name]
+                for j in range(first):
+                    page = pages[j]
+                    self._refcount[g.name][page] += 1
+                    shared[j] = page
+                    self.block_tables[g.name][slot, j] = page
+                    if self.tr:
+                        self.tr.instant(
+                            tr_mod.PAGE_SHARE, self._clock(), track="pool",
+                            group=g.name, page=page, slot=slot,
+                            refs=int(self._refcount[g.name][page]))
             if g.window is None:
-                for j in range(math.ceil(n_tokens / self.page_size)):
+                for j in range(first, math.ceil(n_tokens / self.page_size)):
                     taken.append((g.name, self._take(g, slot, j)))
-        self.pos[slot] = 0
+        self.pos[slot] = cached
         return taken
 
     def free(self, slot: int) -> List[Tuple[str, int]]:
-        """Retire ``slot``: every group's pages return to its free list
-        immediately."""
+        """Retire ``slot``: drop its reference to every page it holds —
+        exclusive *and* shared.  Exclusive pages whose last reference
+        this was return to the free list immediately; pages the prefix
+        cache (or a co-resident lane) still references stay live and
+        merely lose one refcount.  Returns the (group, page) pairs
+        released."""
         out: List[Tuple[str, int]] = []
         for g in self.groups:
-            owned = self._owned[g.name][slot]
-            for j in sorted(owned):
-                out.append((g.name, owned[j]))
-            self._free[g.name].extend(owned.values())
-            if self.tr:
-                t = self._clock()
-                for j in sorted(owned):
-                    self.tr.instant(tr_mod.PAGE_FREE, t, track="pool",
-                                    group=g.name, page=owned[j], slot=slot,
-                                    mid_flight=False)
-            owned.clear()
+            for holdings in (self._owned[g.name][slot],
+                             self._shared[g.name][slot]):
+                for j in sorted(holdings):
+                    out.append((g.name, holdings[j]))
+                    self._unref(g, holdings[j], slot)
+                holdings.clear()
             if self.tr and int(self._reserved[g.name][slot]):
                 self.tr.instant(tr_mod.PAGE_RESERVE, self._clock(),
                                 track="pool", group=g.name, slot=slot,
@@ -314,16 +430,77 @@ class PagedKVCache:
         window bound caps)."""
         return len(self._owned[group][slot])
 
+    def refcount(self, group: str, page: int) -> int:
+        """Current reference count of a physical page (0 = free)."""
+        return int(self._refcount[group][page])
+
+    # -- prefix sharing ------------------------------------------------------
+
+    def share_prefix(self, slot: int, n_tokens: int,
+                     holder: int = CACHE_SLOT) -> dict:
+        """Pin the pages covering ``slot``'s first ``n_tokens`` positions
+        under an extra reference held by ``holder`` (the prefix cache) and
+        return the snapshot — ``{"len", "pages": {group: [page, ...]}}``
+        — that :meth:`alloc(adopt=...)` maps into future lanes.
+
+        If the boundary page is only partially covered (``n_tokens`` not
+        page-aligned) and the donor will keep writing into it (its write
+        position sits inside that page), the donor's own holding of that
+        page is demoted from exclusive to shared: its next write — the
+        first decode token — triggers copy-on-write, so the pinned page
+        stays frozen at the prompt's K/V.  The demotion releases exactly
+        the reservation slot the CoW copy will consume, so the donor's
+        reservation stays sufficient.  Full-attention groups only."""
+        assert 0 < n_tokens <= int(self.pos[slot]), (n_tokens,
+                                                     int(self.pos[slot]))
+        assert all(g.window is None for g in self.groups), \
+            "prefix sharing requires full-attention groups"
+        n_pg = math.ceil(n_tokens / self.page_size)
+        wpos = int(self.pos[slot]) // self.page_size
+        pages: Dict[str, List[int]] = {}
+        for g in self.groups:
+            owned = self._owned[g.name][slot]
+            shared = self._shared[g.name][slot]
+            plist: List[int] = []
+            for j in range(n_pg):
+                page = owned[j] if j in owned else shared[j]
+                self._refcount[g.name][page] += 1
+                plist.append(page)
+                if self.tr:
+                    self.tr.instant(
+                        tr_mod.PAGE_SHARE, self._clock(), track="pool",
+                        group=g.name, page=page, slot=holder,
+                        refs=int(self._refcount[g.name][page]))
+                if j >= wpos and j in owned:
+                    shared[j] = owned.pop(j)   # demote: next write CoWs
+            pages[g.name] = plist
+        return {"len": n_tokens, "pages": pages}
+
+    def release_snapshot(self, snap: dict, holder: int = CACHE_SLOT) -> None:
+        """Drop the references a :meth:`share_prefix` snapshot holds
+        (prefix-cache eviction); pages with no other holder are freed."""
+        for name, plist in snap["pages"].items():
+            g = self._gmap[name]
+            for page in plist:
+                self._unref(g, page, holder)
+
     # -- position lifecycle --------------------------------------------------
 
     def prepare_tokens(self, slot: int, n_tokens: int) -> None:
-        """Make the pages for writing (and attending) logical positions
-        ``[pos, pos + n_tokens)`` live in every window group: pages from
-        the window horizon of the first query through the last written
-        position.  Full groups allocated everything at admission."""
+        """Make the pages for logical positions ``[pos, pos + n_tokens)``
+        *writable* for ``slot``: any shared page in the write span is
+        copied-on-write into an exclusive page first (shared pages are
+        read-only — co-holders must never see our tokens), and window
+        groups make the span's pages live (pages from the window horizon
+        of the first query through the last written position; full groups
+        allocated everything at admission)."""
         pos = int(self.pos[slot])
-        hi = (pos + n_tokens - 1) // self.page_size
+        lo, hi = pos // self.page_size, (pos + n_tokens - 1) // self.page_size
         for g in self.groups:
+            shared = self._shared[g.name][slot]
+            if shared:
+                for j in [j for j in shared if lo <= j <= hi]:
+                    self._cow(g, slot, j)
             if g.window is None:
                 continue
             self._ensure(g, slot, self._win_lo(g, pos), hi)
@@ -452,3 +629,138 @@ class PagedKVCache:
         """Fraction of allocatable pages currently owned by live requests."""
         total = sum(n - 1 for n in self._group_pages.values())
         return 1.0 - self.free_pages / total
+
+
+class PrefixCache:
+    """Token-hash-keyed cache of pinned prompt-prefix pages.
+
+    Turns repeated prompt prefixes — a traffic class's shared system
+    prompt, or a session's previous-turn prompt — into (near-)zero-cost
+    prefills: when a finished prefill's prompt is inserted, the cache
+    takes a reference on the pages covering it (:meth:`PagedKVCache.
+    share_prefix`); when a later prompt starts with the same tokens, the
+    engine adopts those pages (``alloc(adopt=...)``) and prefills only
+    the remainder, so TTFT drops by the skipped prefix's prefill time.
+
+    * **Keys are token hashes** (blake2b over the int32 prefix), but a
+      hit also verifies the stored tokens byte-for-byte — a hash
+      collision can never serve wrong K/V.
+    * **Lookup returns the longest cached entry** that is a *strict*
+      prefix of the prompt (at least one token must remain to prefill:
+      the remainder chunk's last-position logits produce the first output
+      token).
+    * **Entries are pinned by refcount, evicted LRU**: ``max_pages``
+      bounds the cache's page references; admission pressure can also
+      force eviction (:meth:`evict_lru`), and an entry's pages return to
+      the free list only when no lane still shares them.
+    * **Full-attention stacks only** (asserted): sliding-window groups
+      trim pages below the horizon, so a prompt snapshot is only valid at
+      the exact position it was taken — not worth caching.
+
+    All bookkeeping is host-side and O(entries); the pool pages are
+    shared in place, never copied (lanes copy-on-write if they must
+    write the boundary page).
+    """
+
+    def __init__(self, kv: PagedKVCache, *, max_pages: Optional[int] = None):
+        assert all(g.window is None for g in kv.groups), \
+            "PrefixCache requires an all-full-attention stack"
+        self.kv = kv
+        self.max_pages = max_pages
+        #: insertion/recency-ordered: key -> {"len", "toks", "snap", "pages"}
+        self._entries: "OrderedDict[bytes, dict]" = OrderedDict()
+        self.held_pages = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _key(toks: np.ndarray, n: int) -> bytes:
+        raw = np.ascontiguousarray(toks[:n]).astype(np.int32).tobytes()
+        return hashlib.blake2b(raw, digest_size=16).digest()
+
+    def lookup(self, toks: np.ndarray) -> Tuple[Optional[dict], int]:
+        """Longest cached strict prefix of ``toks`` -> (snapshot, length),
+        or (None, 0).  A hit refreshes the entry's LRU position."""
+        lens = sorted({e["len"] for e in self._entries.values()},
+                      reverse=True)
+        for n in lens:
+            if n > len(toks) - 1:
+                continue
+            key = self._key(toks, n)
+            e = self._entries.get(key)
+            if e is not None and np.array_equal(e["toks"], toks[:n]):
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return e["snap"], n
+        self.misses += 1
+        return None, 0
+
+    def probe(self, toks: np.ndarray) -> int:
+        """The length :meth:`lookup` would return, *without* refreshing
+        LRU order or counting a hit/miss — the router-facing peek
+        (``ContinuousEngine.cached_prefix_len``) must not perturb
+        eviction order just by estimating."""
+        for n in sorted({e["len"] for e in self._entries.values()},
+                       reverse=True):
+            if n > len(toks) - 1:
+                continue
+            e = self._entries.get(self._key(toks, n))
+            if e is not None and np.array_equal(e["toks"], toks[:n]):
+                return n
+        return 0
+
+    def insert(self, slot: int, toks: np.ndarray, n_tokens: int) -> bool:
+        """Pin ``slot``'s first ``n_tokens`` prompt positions as a cache
+        entry.  If pinning the partially-covered boundary page would
+        break the reservation invariant (demoting the donor's holding
+        needs one available page of CoW headroom per group), the entry is
+        truncated to whole pages; returns False if nothing was cached."""
+        ps = self.kv.page_size
+        n = min(int(n_tokens), int(self.kv.pos[slot]))
+        if n > (int(self.kv.pos[slot]) // ps) * ps:
+            # pinning the donor's live write page demotes it; the CoW
+            # that re-exclusives it needs one available page per group
+            if any(self.kv.available(g) < 1 for g in self.kv.groups):
+                n = (int(self.kv.pos[slot]) // ps) * ps
+        if n <= 0:
+            return False
+        key = self._key(toks, n)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return False
+        snap = self.kv.share_prefix(slot, n)
+        pages = sum(len(p) for p in snap["pages"].values())
+        self._entries[key] = {"len": n,
+                              "toks": np.array(toks[:n], np.int32),
+                              "snap": snap, "pages": pages}
+        self.held_pages += pages
+        if self.kv.tr:
+            self.kv.tr.instant(tr_mod.PREFIX_INSERT, self.kv._clock(),
+                               track="pool", tokens=n, pages=pages)
+        if self.max_pages is not None:
+            while self.held_pages > self.max_pages and len(self._entries) > 1:
+                self.evict_lru()
+        return True
+
+    def evict_lru(self) -> bool:
+        """Release the least-recently-used entry's page references (pages
+        free only once no lane shares them).  False if the cache is
+        empty."""
+        if not self._entries:
+            return False
+        _, e = self._entries.popitem(last=False)
+        self.kv.release_snapshot(e["snap"])
+        self.held_pages -= e["pages"]
+        if self.kv.tr:
+            self.kv.tr.instant(tr_mod.PREFIX_EVICT, self.kv._clock(),
+                               track="pool", tokens=e["len"],
+                               pages=e["pages"])
+        return True
+
+    def clear(self) -> None:
+        """Evict everything (e.g. before tearing an engine down)."""
+        while self.evict_lru():
+            pass

@@ -43,6 +43,11 @@ class SLOReport:
     # -- streaming SLOs (nan when the path records no first token) --------
     ttft_p50_s: float = float("nan")   # time to first token percentiles
     ttft_p99_s: float = float("nan")
+    #: barge-in cancellations (session traffic): retired early by the
+    #: client, not by the engine — disjoint from ``dropped``/``degraded``
+    cancelled: int = 0
+    #: met_ttft / requests carrying a ttft_deadline_s (nan when none do)
+    ttft_hit_rate: float = float("nan")
     itl_p50_s: float = float("nan")    # per-request mean inter-token latency
     itl_p99_s: float = float("nan")
     # -- slack attribution: mean seconds per served request ---------------
@@ -113,7 +118,8 @@ def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
         n=len(reqs),
         served=len(done),
         dropped=sum(r.dropped for r in reqs),
-        degraded=sum(r.tokens_done < r.max_new for r in done),
+        degraded=sum(r.tokens_done < r.max_new for r in done
+                     if not getattr(r, "cancelled", False)),
         hit_rate=(sum(bool(r.met_deadline) for r in reqs) / len(reqs)
                   if reqs else 0.0),
         p50_s=_percentile(lats, 50), p99_s=_percentile(lats, 99),
@@ -123,7 +129,12 @@ def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
         itl_p50_s=_percentile(itls, 50), itl_p99_s=_percentile(itls, 99),
         queue_s=_mean(pick("queue_s")), prefill_s=_mean(pick("prefill_s")),
         decode_s=_mean(pick("decode_s")),
+        cancelled=sum(bool(getattr(r, "cancelled", False)) for r in reqs),
     )
+    slod = [r for r in reqs if getattr(r, "ttft_deadline_s", None) is not None]
+    if slod:
+        rep.ttft_hit_rate = (sum(bool(getattr(r, "met_ttft", False))
+                                 for r in slod) / len(slod))
     if split_classes:
         names = sorted({r.cls_name for r in reqs})
         if len(names) > 1:

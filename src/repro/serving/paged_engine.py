@@ -47,6 +47,20 @@ does both at once:
   weights at ``draft_bits``), verify in one fused chunk, accept/reject
   on device — greedy output stays token-identical to dense decode, and
   rounds collapse to dense steps under deadline pressure.
+* **Prefix reuse and sessions.**  With a
+  :class:`~repro.serving.kv_cache.PrefixCache` attached
+  (``prefix_cache=``), completed prefills publish their pages under
+  token-hash keys and later requests sharing a prefix (repeated system
+  prompts, a session's own earlier turns) adopt those pages as
+  refcounted read-only references — admission charges and the clock
+  pays only the tail ``prefill_s(P - l, context=l)``.  Writes into the
+  shared region copy-on-write (the boundary page is reserved at
+  admission), so co-resident lanes stay token-identical to independent
+  prefills; full-attention stacks only.  Streaming SLOs ride along:
+  admission drops requests whose projected first token already misses
+  ``ttft_deadline_s``, and a barge-in (``t_cancel``) retires a lane at
+  the next step boundary — partial output kept, private pages freed
+  immediately, shared pages merely unreferenced.
 * **The analytic clock.**  Between real steps the engine advances the same
   ``core.latency`` roofline clock the traffic simulator and the FPX
   controller use (CPU wall time is meaningless here), and reuses the
@@ -80,11 +94,13 @@ from repro.obs import trace as tr_mod
 from repro.serving import sampler as sampler_mod
 from repro.serving.continuous import (LatencyProfile, degraded_budget,
                                       emit_admit, emit_arrive, emit_finish,
-                                      estimate_backlog, post_prefill_fit,
-                                      projected_finish, retire_dropped,
-                                      spec_round_fits)
+                                      estimate_backlog, mark_first_token,
+                                      post_prefill_fit, projected_finish,
+                                      projected_first_token, retire_cancelled,
+                                      retire_dropped, spec_round_fits)
 from repro.serving.continuous import drive as continuous_drive
-from repro.serving.kv_cache import PagedKVCache
+from repro.serving.kv_cache import PagedKVCache, PrefixCache
+from repro.serving.traffic import session_prompt_tokens
 
 
 @dataclasses.dataclass
@@ -119,7 +135,8 @@ class ContinuousEngine:
                  prefill_chunk: Optional[int] = None,
                  attn_impl: str = "fused", tracer=None,
                  sampler: Optional[sampler_mod.SamplerPolicy] = None,
-                 speculate: Optional[SpecPoint] = None):
+                 speculate: Optional[SpecPoint] = None,
+                 prefix_cache=False):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
@@ -169,7 +186,20 @@ class ContinuousEngine:
         earliest lane deadline (:func:`~repro.serving.continuous.
         spec_round_fits`).  Admission reserves ``k`` extra positions of
         page headroom (a round writes up to ``pos + k`` before the host
-        learns the accepted count); requires the fused attention path."""
+        learns the accepted count); requires the fused attention path.
+
+        ``prefix_cache``: enable the token-hash prefix cache
+        (:class:`~repro.serving.kv_cache.PrefixCache`) — ``True`` for an
+        unbounded page budget, an int to cap the cache's pinned pages,
+        ``False`` (default) off.  With it on, admission looks the
+        request's prompt up, adopts the longest cached prefix's pages by
+        reference (copy-on-write protects them), prefills only the
+        remainder — TTFT drops by the skipped span's prefill time, and
+        every admission projection prices the discount
+        (``cached_prefix=``) — and publishes the finished prompt's
+        shareable spans back into the cache.  Requires an
+        all-full-attention stack (window groups trim pages positionally,
+        so prefix snapshots are not reusable)."""
         if not transformer.paged_supported(cfg):
             raise NotImplementedError(
                 "ContinuousEngine needs the paged decode path, which "
@@ -213,6 +243,16 @@ class ContinuousEngine:
             n_pages = slots * width + 1
         self.cache = PagedKVCache(cfg, slots=slots, n_pages=n_pages,
                                   page_size=page_size, max_ctx=max_ctx)
+        self.prefix: Optional[PrefixCache] = None
+        if prefix_cache:
+            if any(g.window is not None for g in self.cache.groups):
+                raise ValueError(
+                    "prefix_cache requires an all-full-attention stack "
+                    "(sliding-window groups trim pages positionally, so "
+                    f"prefix snapshots are not reusable) — {cfg.name}")
+            self.prefix = PrefixCache(
+                self.cache,
+                max_pages=None if prefix_cache is True else int(prefix_cache))
         self.sampler = sampler or sampler_mod.GREEDY
         self._unroll = unroll
         self._jit_steps()
@@ -261,8 +301,21 @@ class ContinuousEngine:
                                                           unroll=unroll)
             return sampler_mod.sample(pol, logits, rids, pos), cache
 
+        # a chunk resumed on an adopted prefix starts wherever that prefix
+        # ended — almost never on a page boundary — so it rides the same
+        # unaligned-scatter escape the speculative verify chunk uses (the
+        # scatter takes the jnp path; the attend stays fused)
+        resume_ctx = dataclasses.replace(self.ctx, unaligned_scatter=True)
+
+        def rchk(p, b, c, rids, pos):
+            logits, cache = transformer.prefill_chunk(p, cfg, b, c,
+                                                      resume_ctx,
+                                                      unroll=unroll)
+            return sampler_mod.sample(pol, logits, rids, pos), cache
+
         self._prefill = jax.jit(pre)
         self._chunk = jax.jit(chk)
+        self._resume = jax.jit(rchk)
         self._decode = jax.jit(dec)
         if self.speculate is not None:
             k = self.speculate.k
@@ -328,6 +381,12 @@ class ContinuousEngine:
         p = getattr(req, "prompt", None)
         if p is not None:
             return np.asarray(p, np.int32)
+        if getattr(req, "session", None) is not None:
+            # session SimRequest: nested deterministic streams — turn k's
+            # prompt literally extends turn k-1's, so the token-hash
+            # prefix cache hits exactly the spans prefix_keys declares
+            return session_prompt_tokens(req, vocab=self.cfg.vocab,
+                                         seed=self.prompt_seed)
         # SimRequest: deterministic synthetic tokens for its prompt_len
         rng = np.random.default_rng(self.prompt_seed * 7919 + req.rid)
         return rng.integers(0, self.cfg.vocab, req.prompt_len,
@@ -351,7 +410,10 @@ class ContinuousEngine:
         """Admit the earliest-deadline arrived request into a free lane,
         with the shared drop/degrade projection *plus* page feasibility:
         a request that cannot get pages right now keeps its place in the
-        EDF queue and waits for a retirement to free some."""
+        EDF queue and waits for a retirement to free some.  With the
+        prefix cache on, the prompt is looked up first and every
+        projection prices the discounted (remainder-only) prefill; under
+        page pressure cold cache entries are evicted before waiting."""
         while True:
             arrived = [r for r in self.pending if r.t_arrive <= self.t]
             lane = self._free_lane()
@@ -368,15 +430,37 @@ class ContinuousEngine:
                 self.pending.remove(req)
                 self._drop(req)               # prompt alone can never fit
                 continue
+            toks = snap = None
+            cached = 0
+            if self.prefix is not None:
+                toks = self._prompt_for(req)
+                snap, cached = self.prefix.lookup(toks)
+                if self.tr:
+                    self.tr.instant(tr_mod.PREFIX_LOOKUP, self.t,
+                                    track="queue", rid=req.rid,
+                                    hit=cached > 0, tokens=cached)
+            ttft_d = getattr(req, "ttft_deadline_s", None)
+            if self.policy != "serve" and ttft_d is not None \
+                    and projected_first_token(
+                        self.profile, self.t, self._n_active() + 1, req,
+                        prefill_chunk=self.prefill_chunk,
+                        cached_prefix=cached) > req.t_arrive + ttft_d:
+                # the paged path's first token is the prefill logits, so
+                # the projection is prefill-done; degrading trims decode
+                # budget, which cannot speed that up — drop
+                self.pending.remove(req)
+                self._drop(req)
+                continue
             n_tok = min(req.max_new, cap)
             if self.policy != "serve" and projected_finish(
                     self.profile, self.t, self._n_active() + 1, req,
-                    n_tok, prefill_chunk=self.prefill_chunk) \
-                    > req.deadline_abs:
+                    n_tok, prefill_chunk=self.prefill_chunk,
+                    cached_prefix=cached) > req.deadline_abs:
                 if self.policy == "degrade":
                     n_tok = min(cap, degraded_budget(
                         self.profile, self.t, self._n_active() + 1, req,
-                        prefill_chunk=self.prefill_chunk))
+                        prefill_chunk=self.prefill_chunk,
+                        cached_prefix=cached))
                 else:
                     n_tok = 0
                 if n_tok < 1:
@@ -392,60 +476,117 @@ class ContinuousEngine:
             # *window-bounded* per layer group: a sliding-window group
             # costs at most its win_cap pages however long the request
             # runs, so windowed stacks admit far more work per pool than
-            # their total token count suggests.
+            # their total token count suggests.  An adopted prefix's
+            # whole pages cost nothing (shared, not allocated).
             span = S + n_tok - 1 + self._spec_k
             if not self.cache.fits_pool(span, self._page_chunk):
                 self.pending.remove(req)
                 self._drop(req)               # exceeds the whole pool:
                 continue                      # waiting would hang forever
-            if not self.cache.can_admit(span, self._page_chunk):
-                return False                  # wait for pages (EDF head)
+            if not self.cache.can_admit(span, self._page_chunk, cached):
+                # shed cold prefix entries before making the EDF head
+                # wait (re-looking up after each eviction: the adopted
+                # entry itself may have been the LRU victim)
+                while self.prefix is not None \
+                        and not self.cache.can_admit(span, self._page_chunk,
+                                                     cached) \
+                        and self.prefix.evict_lru():
+                    if cached:
+                        snap, cached = self.prefix.lookup(toks)
+                if not self.cache.can_admit(span, self._page_chunk, cached):
+                    return False              # wait for pages (EDF head)
             self.pending.remove(req)
-            self._start(lane, req, n_tok)
+            self._start(lane, req, n_tok, toks=toks, snap=snap,
+                        cached=cached)
             return True
 
+    def _sweep_cancels(self) -> None:
+        """Barge-in: retire every request whose cancel time has passed.
+        Queued requests leave the queue; a live lane is reclaimed
+        mid-flight — its pages drop one reference each, so private pages
+        return to the free list immediately while pages shared with the
+        prefix cache or a co-resident lane merely decrement and live
+        on."""
+        for req in [r for r in self.pending
+                    if getattr(r, "t_cancel", None) is not None
+                    and r.t_cancel <= self.t]:
+            self.pending.remove(req)
+            retire_cancelled(self, req)
+        for i, l in enumerate(self.lanes):
+            if l is None or getattr(l.req, "t_cancel", None) is None \
+                    or l.req.t_cancel > self.t:
+                continue
+            self.lanes[i] = None
+            self.cache.free(i)
+            l.req.result_tokens = np.asarray(l.produced, np.int32)
+            retire_cancelled(self, l.req)
+
     def _admit(self) -> None:
+        self._sweep_cancels()
         while self._admit_one():
             pass
 
-    def _start(self, lane: int, req, n_tok: int) -> None:
-        """Admit ``req`` into ``lane`` over freshly allocated pages.
+    def _start(self, lane: int, req, n_tok: int, *, toks=None, snap=None,
+               cached: int = 0) -> None:
+        """Admit ``req`` into ``lane`` over freshly allocated pages —
+        minus the ``cached`` leading tokens adopted by reference from the
+        prefix-cache snapshot ``snap`` (copy-on-write keeps the shared
+        pages frozen).
 
-        Monolithic (``prefill_chunk=None``): run the whole real prefill
-        now, charge ``prefill_s(S)``, and seed the lane with the first
-        output token from the prefill logits (same contract as
-        engine.generate).  Chunked: just stage the prompt — the drive loop
-        absorbs it chunk-by-chunk via :meth:`_advance_prefills`, decode
-        steps landing in between."""
+        Monolithic (``prefill_chunk=None``): run the real prefill of the
+        *remainder* now — the full prompt through ``transformer.prefill``
+        on a miss, or the uncached tail as one resumed chunk attending
+        over the adopted pages on a hit — charge ``prefill_s(S - cached,
+        context=cached)``, and seed the lane with the first output token
+        from the prefill logits (same contract as engine.generate).
+        Chunked: just stage the prompt — the drive loop absorbs it
+        chunk-by-chunk via :meth:`_advance_prefills`, decode steps
+        landing in between (absorption starts past the adopted span)."""
         S = req.prompt_len
         pages = self.cache.alloc(lane, S + n_tok - 1 + self._spec_k,
-                                 self._page_chunk)
+                                 self._page_chunk,
+                                 adopt=snap if cached else None,
+                                 adopt_len=cached)
         self.admissions.append((req.rid, pages))
         req.t_admit = self.t
         if self.tr:
             emit_admit(self.tr, req, self.t, n_tok, track=f"lane{lane}")
+        if toks is None:
+            toks = self._prompt_for(req)
         if self.prefill_chunk is not None:
             self.lanes[lane] = _Lane(req, last_token=None, remaining=n_tok,
-                                     context=0,
-                                     prompt_toks=self._prompt_for(req))
+                                     context=cached, prompt_toks=toks,
+                                     absorbed=cached)
             return
-        toks = jnp.asarray(self._prompt_for(req)[None, :])
         w0 = time.perf_counter()
-        first_tok, raw_cache = self._prefill(
-            self.params, {"tokens": toks},
-            jnp.asarray([req.rid], jnp.int32), jnp.zeros((1,), jnp.int32))
-        self.cache.write_prefill(
-            lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
+        if cached:
+            # remainder prefill: one resumed chunk over the adopted pages
+            # (chunk_cache CoWs the shared boundary page before the
+            # scatter; advance moves pos to S)
+            first_tok, new_cache = self._resume(
+                self.params, {"tokens": jnp.asarray(toks[None, cached:])},
+                self.cache.chunk_cache(lane, S - cached),
+                jnp.asarray([req.rid], jnp.int32),
+                jnp.zeros((1,), jnp.int32))
+            self.cache.update_from(new_cache)
+            self.cache.advance(lane, S - cached)
+        else:
+            first_tok, raw_cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(toks[None, :])},
+                jnp.asarray([req.rid], jnp.int32),
+                jnp.zeros((1,), jnp.int32))
+            self.cache.write_prefill(
+                lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
         t0 = self.t
-        self.t += self.profile.prefill_s(S)
+        self.t += self.profile.prefill_s(S - cached, context=cached)
         if self.tr:
             self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
-                         track=f"lane{lane}", rid=req.rid, tokens=S,
-                         wall_s=time.perf_counter() - w0)
+                         track=f"lane{lane}", rid=req.rid, tokens=S - cached,
+                         cached=cached, wall_s=time.perf_counter() - w0)
         lane_state = _Lane(req, last_token=None, remaining=n_tok,
                            context=S)
         self.lanes[lane] = lane_state
-        self._finish_prefill(lane, lane_state, first_tok)
+        self._finish_prefill(lane, lane_state, first_tok, toks)
 
     # -- chunked prefill -----------------------------------------------------
 
@@ -462,9 +603,14 @@ class ContinuousEngine:
             c = min(self.prefill_chunk, S - l.absorbed)
             toks = jnp.asarray(l.prompt_toks[None, l.absorbed:l.absorbed + c])
             w0 = time.perf_counter()
+            # an adopted prefix leaves absorbed at an arbitrary (page-
+            # unaligned) offset — those chunks ride the unaligned-scatter
+            # resume closure; the normal path keeps the aligned graph
+            step = (self._chunk if l.absorbed % self.cache.page_size == 0
+                    else self._resume)
             # pos 0: only the final chunk's sample is consumed, and it
             # selects the request's output position 0
-            first_tok, new_cache = self._chunk(
+            first_tok, new_cache = step(
                 self.params, {"tokens": toks}, self.cache.chunk_cache(i, c),
                 jnp.asarray([l.req.rid], jnp.int32),
                 jnp.zeros((1,), jnp.int32))
@@ -482,12 +628,30 @@ class ContinuousEngine:
             l.absorbed += c
             l.context += c
             if l.absorbed == S:
+                prompt = l.prompt_toks
                 l.prompt_toks = None
-                self._finish_prefill(i, l, first_tok)
+                self._finish_prefill(i, l, first_tok, prompt)
 
-    def _finish_prefill(self, lane: int, l: _Lane, first_tok) -> None:
+    def _maybe_insert(self, lane: int, req, toks) -> None:
+        """Publish the finished prompt's shareable spans into the prefix
+        cache: the lengths the request declared in ``prefix_keys``
+        (session traffic: the class system prompt and the accumulated
+        session prompt), or the whole prompt when it declared none.
+        Host-side pinning only — no pool data moves, no clock charge."""
+        if self.prefix is None or toks is None:
+            return
+        keys = getattr(req, "prefix_keys", ()) or ()
+        lens = sorted({min(int(n), len(toks)) for _, n in keys}
+                      or {len(toks)})
+        for n in lens:
+            if n > 0:
+                self.prefix.insert(lane, toks, n)
+
+    def _finish_prefill(self, lane: int, l: _Lane, first_tok,
+                        prompt_toks=None) -> None:
         """Shared prefill completion: seed the lane with the first output
-        token (sampled on-device inside the jit'd prefill/chunk step), then
+        token (sampled on-device inside the jit'd prefill/chunk step),
+        publish the prompt's shareable spans into the prefix cache, then
         re-apply the admission policy — interleaved decode charges (and
         co-resident lanes' real step costs) landed since the admission-time
         projection, so a request can reach this point already unable to
@@ -497,7 +661,8 @@ class ContinuousEngine:
         req.t_prefill_done = self.t
         # the first output token is sampled from the prefill logits, so it
         # exists the instant the prompt is absorbed: TTFT == prefill done
-        req.t_first_token = self.t
+        mark_first_token(req, self.t)
+        self._maybe_insert(lane, req, prompt_toks)
         t0 = int(np.asarray(first_tok)[0, 0])
         l.last_token = t0
         l.produced = [t0]
@@ -547,8 +712,10 @@ class ContinuousEngine:
     # -- the decode loop -----------------------------------------------------
 
     def _decode_step(self) -> None:
-        """One engine iteration: advance every mid-prefill lane by one chunk,
-        then one real batched decode step for the lanes already decoding."""
+        """One engine iteration: sweep barge-in cancels, advance every
+        mid-prefill lane by one chunk, then one real batched decode step
+        for the lanes already decoding."""
+        self._sweep_cancels()
         if self.prefill_chunk is not None:
             self._advance_prefills()
         active = [(i, l) for i, l in enumerate(self.lanes)
@@ -714,6 +881,16 @@ class ContinuousEngine:
         return self.completed
 
     # -- router-facing estimates ---------------------------------------------
+
+    def cached_prefix_len(self, req) -> int:
+        """Prompt tokens this engine would skip for ``req`` via its prefix
+        cache right now — the routing signal :class:`~repro.serving.fleet.
+        FleetRouter` folds into first-token slack (an engine that has the
+        session's pages warm wins the dispatch).  A non-perturbing peek:
+        LRU order and hit/miss counters are untouched."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.probe(self._prompt_for(req))
 
     def backlog_s(self, now: float) -> float:
         lanes = [l for l in self.lanes if l is not None]

@@ -8,7 +8,8 @@ into a first-class policy layer:
 
 * :class:`SamplerPolicy` — a frozen, hashable (temp, top_k, seed)
   triple.  Engines close over it in their jit'd step functions (the
-  ``set_policy`` re-jit pattern), so greedy *and* temperature/top-k run
+  ``set_sampler`` re-jit pattern — the sampling-layer twin of the
+  precision policy's ``set_policy``), so greedy *and* temperature/top-k run
   device-side on every path with only ``(slots,)`` int32 ids crossing to
   host, exactly as greedy does today.  ``temp == 0`` reduces *exactly*
   to ``argmax`` — the policy layer is bit-identical to the historical

@@ -56,6 +56,10 @@ class Request:
     tokens_done: int = 0
     dropped: bool = False
     reward: float = 0.0
+    #: barge-in (SimRequest contract): client abandons at this absolute
+    #: time; a wave never launches a request already cancelled
+    t_cancel: Optional[float] = None
+    cancelled: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -124,6 +128,22 @@ class Scheduler:
         A wave only batches requests whose ``extra`` inputs have the same
         key set (vision/audio tensors must stack); mismatched requests keep
         their queue position and go out in a later wave."""
+        # barge-in sweep: a request cancelled before its wave starts never
+        # reaches the engine (waves are atomic — once launched, members run
+        # to completion; mid-wave cancellation is the continuous engines'
+        # territory)
+        for r in [r for r in self.queue
+                  if r.t_cancel is not None and r.t_cancel <= self.t]:
+            self.queue.remove(r)
+            r.cancelled = True
+            r.t_finish = self.t
+            r.latency_s = self.t - r.t_arrive
+            r.met_deadline = False      # never produced a first token
+            if self.tr:
+                self.tr.instant(tr_mod.REQ_CANCEL, self.t, track="waves",
+                                rid=r.rid, cls=r.cls_name, tokens=0,
+                                admitted=False)
+            self.done.append(r)
         if not self.queue:
             return []
         sig = self._extra_sig(self.queue[0])

@@ -9,6 +9,17 @@ seconds; the clock is the same analytic-latency clock the engines run on
 (core.latency), so one unit of traffic time is one unit of modeled TPU
 time and the two sides of the simulation stay in sync by construction.
 
+Beyond independent requests, :func:`generate_sessions` draws *session*
+traffic — multi-turn conversations over a shared per-class system prompt,
+the workload shape that makes prefix reuse matter.  Turn ``k``'s prompt is
+literally a token-prefix extension of turn ``k-1``'s (system prompt ++
+accumulated user turns; :func:`session_prompt_tokens` materializes the
+actual nested token arrays for the live engines), each request declares
+its shareable spans as ``SimRequest.prefix_keys``, and turns may carry a
+streaming SLO (``ttft_deadline_s``) and a barge-in cancel time
+(``t_cancel`` — the user interrupts mid-stream and the engine reclaims
+the lane's pages).
+
 Everything is seeded and deterministic: the same (classes, horizon, seed)
 triple always yields the same workload, so competing routers can be
 measured on identical request streams.
@@ -16,6 +27,7 @@ measured on identical request streams.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -34,6 +46,29 @@ class SimRequest:
     max_new: int
     deadline_s: float
     reward_weight: float = 1.0
+    #: streaming SLO, relative to ``t_arrive`` (None = completion deadline
+    #: only).  Admission drops — never degrades — on a projected miss:
+    #: trimming decode budget cannot speed up the first token.
+    ttft_deadline_s: Optional[float] = None
+    #: barge-in: *absolute* time the client cancels mid-stream (None =
+    #: never).  Engines sweep between steps; the request retires with the
+    #: tokens it produced and its lane/pages are reclaimed.
+    t_cancel: Optional[float] = None
+
+    # session structure (empty for independent-request traffic)
+    #: session identity, e.g. "support/s3" (None = not session traffic)
+    session: Optional[str] = None
+    #: 0-based turn index within the session
+    turn: int = 0
+    #: leading tokens shared class-wide (the system prompt)
+    sys_len: int = 0
+    #: shareable-prefix declarations: (key, length) pairs meaning "this
+    #: prompt's first ``length`` tokens are the content stream ``key``".
+    #: The analytic batcher's prefix mirror warms/looks up these keys; the
+    #: live engine inserts the corresponding token spans into its
+    #: token-hash cache at the same lengths.  Session turns declare the
+    #: class system prompt and the session's own accumulated prompt.
+    prefix_keys: Tuple[Tuple[str, int], ...] = ()
 
     # filled in by the continuous batcher / fleet router
     engine_idx: Optional[int] = None
@@ -50,8 +85,14 @@ class SimRequest:
     t_finish: Optional[float] = None
     latency_s: Optional[float] = None
     met_deadline: Optional[bool] = None
+    #: first token by ``ttft_deadline_s``?  None when no streaming SLO,
+    #: or when the request never produced a token
+    met_ttft: Optional[bool] = None
     tokens_done: int = 0
     dropped: bool = False
+    #: retired by barge-in (kept its partial output; see
+    #: ``continuous.retire_cancelled`` for how met_deadline is judged)
+    cancelled: bool = False
     reward: float = 0.0
 
     @property
@@ -64,7 +105,11 @@ class SimRequest:
         return SimRequest(rid=self.rid, cls_name=self.cls_name,
                           t_arrive=self.t_arrive, prompt_len=self.prompt_len,
                           max_new=self.max_new, deadline_s=self.deadline_s,
-                          reward_weight=self.reward_weight)
+                          reward_weight=self.reward_weight,
+                          ttft_deadline_s=self.ttft_deadline_s,
+                          t_cancel=self.t_cancel, session=self.session,
+                          turn=self.turn, sys_len=self.sys_len,
+                          prefix_keys=self.prefix_keys)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +188,120 @@ def generate(classes: Sequence[TrafficClass], horizon_s: float, *,
 
 
 # ---------------------------------------------------------------------------
+# Session traffic: multi-turn conversations over shared system prompts —
+# the workload where prefix reuse and TTFT decide the reward.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SessionClass:
+    """Arrival + shape distribution for one kind of *session* traffic.
+
+    ``rate_hz`` is the session *start* rate; each session then runs
+    ``turns`` requests.  Turn ``k``'s prompt is the class system prompt
+    plus every user turn so far (``sys_len + sum(user_len_1..k)``), so
+    prompts within a session nest as literal token prefixes — turn ``k``
+    can adopt turn ``k-1``'s pages wholesale, and the first turn of a new
+    session can adopt the class-wide system prompt.  (Assistant replies
+    are abstracted out of the prompt stream: content is synthetic, and
+    what the memory substrate cares about is that prompts nest.)
+
+    The stream is open-loop, so the next turn's arrival is modeled as the
+    previous turn's *deadline* plus a think-time gap — the client read
+    the answer, typed, and sent.  ``barge_in_frac`` of turns carry a
+    cancel time drawn in ``(ttft_deadline, deadline)``: the user heard
+    enough and interrupted mid-stream."""
+    name: str
+    rate_hz: float                           # session starts per second
+    turns_range: Tuple[int, int] = (2, 5)
+    sys_len_range: Tuple[int, int] = (192, 320)
+    user_len_range: Tuple[int, int] = (16, 48)
+    max_new_range: Tuple[int, int] = (8, 16)
+    deadline_range_s: Tuple[float, float] = (0.6, 1.4)
+    #: streaming SLO draw; None = no TTFT deadline on this class
+    ttft_range_s: Optional[Tuple[float, float]] = (0.25, 0.45)
+    think_range_s: Tuple[float, float] = (0.5, 2.0)
+    barge_in_frac: float = 0.0
+    reward_weight: float = 1.0
+
+
+def generate_sessions(classes: Sequence[SessionClass], horizon_s: float, *,
+                      seed: int = 0) -> List[SimRequest]:
+    """Draw the merged, time-sorted session-request stream.
+
+    Every turn declares two shareable spans in ``prefix_keys``: the class
+    system prompt (``"<cls>/sys"``, warm after *any* session of the class
+    prefilled once) and the session's own accumulated prompt
+    (``"<cls>/<session>"``, warm after the previous turn) — which is
+    exactly what the live engine's token-hash prefix cache discovers from
+    the nested token arrays (:func:`session_prompt_tokens`)."""
+    reqs: List[SimRequest] = []
+    for ci, cls in enumerate(classes):
+        rng = np.random.default_rng(seed * 1013 + ci)
+        starts = _poisson_times(cls.rate_hz, horizon_s, rng)
+        sys_key = f"{cls.name}/sys"
+        for sid, t0 in enumerate(starts):
+            n_turns = int(rng.integers(cls.turns_range[0],
+                                       cls.turns_range[1] + 1))
+            sys_len = int(rng.integers(cls.sys_len_range[0],
+                                       cls.sys_len_range[1] + 1))
+            session = f"{cls.name}/s{sid}"
+            t, prompt_len = t0, sys_len
+            for k in range(n_turns):
+                if t >= horizon_s:
+                    break
+                prompt_len += int(rng.integers(cls.user_len_range[0],
+                                               cls.user_len_range[1] + 1))
+                m = int(rng.integers(cls.max_new_range[0],
+                                     cls.max_new_range[1] + 1))
+                d = float(rng.uniform(*cls.deadline_range_s))
+                ttft = None
+                if cls.ttft_range_s is not None:
+                    ttft = float(rng.uniform(*cls.ttft_range_s))
+                t_cancel = None
+                if cls.barge_in_frac > 0.0 \
+                        and rng.random() < cls.barge_in_frac:
+                    t_cancel = t + float(rng.uniform(ttft or 0.0, d))
+                reqs.append(SimRequest(
+                    rid=-1, cls_name=cls.name, t_arrive=t,
+                    prompt_len=prompt_len, max_new=m, deadline_s=d,
+                    reward_weight=cls.reward_weight, ttft_deadline_s=ttft,
+                    t_cancel=t_cancel, session=session, turn=k,
+                    sys_len=sys_len,
+                    prefix_keys=((sys_key, sys_len),
+                                 (session, prompt_len))))
+                t += d + float(rng.uniform(*cls.think_range_s))
+    reqs.sort(key=lambda r: r.t_arrive)
+    for i, r in enumerate(reqs):
+        r.rid = i
+    return reqs
+
+
+def _stream_tokens(tag: str, n: int, vocab: int, seed: int) -> np.ndarray:
+    """``n`` tokens of the deterministic content stream named ``tag`` —
+    seeded by a stable digest of the tag (not Python's salted ``hash``),
+    so streams are reproducible across processes and draws of different
+    lengths share their common prefix."""
+    rng = np.random.default_rng([seed, zlib.crc32(tag.encode())])
+    return rng.integers(0, vocab, size=n, dtype=np.int32)
+
+
+def session_prompt_tokens(req: SimRequest, *, vocab: int,
+                          seed: int = 0) -> np.ndarray:
+    """Materialize a session request's actual prompt tokens for the live
+    engines: the class system stream followed by the session stream,
+    truncated to ``prompt_len``.  Because both pieces are deterministic
+    streams, turn ``k``'s array is byte-identical to turn ``k-1``'s for
+    their common length — the token-hash prefix cache hits exactly the
+    spans ``prefix_keys`` declares."""
+    assert req.session is not None, "not a session request"
+    sys_toks = _stream_tokens(f"{req.cls_name}/sys", req.sys_len, vocab,
+                              seed)
+    rest = _stream_tokens(req.session, req.prompt_len - req.sys_len, vocab,
+                          seed)
+    return np.concatenate([sys_toks, rest])
+
+
+# ---------------------------------------------------------------------------
 # Scenario presets.  Deadlines are calibrated against the analytic ladder
 # (core.latency, qwen2.5 family): ~20ms (1.5B @ FP4) ... ~300ms (14B @ FP8)
 # per action — so "trading" budgets are only meetable by small/high-gamma
@@ -168,6 +327,25 @@ def chat_class(rate_hz: float = 8.0) -> TrafficClass:
                         deadline_range_s=(0.4, 1.2),
                         prompt_range=(128, 384), max_new_range=(8, 16),
                         reward_weight=1.0)
+
+
+def support_sessions(rate_hz: float = 0.8) -> SessionClass:
+    """Customer-support-style sessions: a long shared system prompt
+    (policies, tools), short user turns, streaming TTFT budgets well
+    under the completion deadline, and occasional barge-in."""
+    return SessionClass(name="support", rate_hz=rate_hz,
+                        turns_range=(2, 5), sys_len_range=(192, 320),
+                        user_len_range=(16, 48), max_new_range=(8, 16),
+                        deadline_range_s=(0.6, 1.4),
+                        ttft_range_s=(0.25, 0.45),
+                        think_range_s=(0.5, 2.0), barge_in_frac=0.15)
+
+
+def session_scenario(name: str) -> List[SessionClass]:
+    """Named session mixes used by benchmarks/table_sessions.py."""
+    if name == "support":
+        return [support_sessions()]
+    raise KeyError(f"unknown session scenario {name!r}; known: support")
 
 
 def scenario(name: str) -> List[TrafficClass]:

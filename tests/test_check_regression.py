@@ -66,9 +66,17 @@ SPEC = (["mix", "arm", "offered", "served", "dropped", "hit_rate",
          ["mixed", "fixed-k4", "300", "276", "24", "0.920", "130.0",
           "460.0", "296.0", "7.2"]])
 
+SESSIONS = (["path", "offered", "served", "dropped", "cancelled",
+             "hit_rate", "ttft_hit_rate", "ttft_p50_ms", "ttft_p99_ms",
+             "p99_ms", "goodput", "tokens"],
+            [["sharing", "280", "200", "80", "17", "0.620", "0.690",
+              "130.0", "400.0", "950.0", "170.0", "2250"],
+             ["no-sharing", "280", "185", "95", "14", "0.540", "0.620",
+              "155.0", "395.0", "1000.0", "148.0", "2080"]])
+
 ALL = {"table_paged.csv": PAGED, "table_chunked.csv": CHUNKED,
        "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID,
-       "table_spec.csv": SPEC}
+       "table_spec.csv": SPEC, "table_sessions.csv": SESSIONS}
 
 
 def mutate_spec(mix, arm, column, value):
@@ -118,7 +126,7 @@ def mutate(name, path_key, column, value, key_col="path"):
 
 def test_identical_tables_pass(tmp_path, capsys):
     assert run_gate(tmp_path) == 0
-    assert "5 tables OK" in capsys.readouterr().out
+    assert "6 tables OK" in capsys.readouterr().out
 
 
 def test_within_tolerance_passes(tmp_path):
@@ -230,6 +238,43 @@ def test_spec_mixed_not_beating_fixed_k_fails(tmp_path, capsys):
     assert run_gate(tmp_path, fresh_override=over,
                     base_override=over) == 1
     assert "below fixed-k4" in capsys.readouterr().err
+
+
+def test_sessions_ttft_rise_fails(tmp_path, capsys):
+    over = mutate("table_sessions.csv", "sharing", "ttft_p50_ms", "150.0")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "ttft_p50_ms rose" in capsys.readouterr().err
+
+
+def test_sessions_hit_rate_drop_fails(tmp_path, capsys):
+    over = mutate("table_sessions.csv", "sharing", "ttft_hit_rate", "0.500")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "ttft_hit_rate dropped" in capsys.readouterr().err
+
+
+def test_sessions_row_set_change_fails(tmp_path, capsys):
+    def drop_row(header, rows):
+        return header, rows[:-1]
+    assert run_gate(tmp_path,
+                    fresh_override={"table_sessions.csv": drop_row}) == 1
+    assert "row set changed" in capsys.readouterr().err
+
+
+def test_sessions_sharing_not_cutting_ttft_fails(tmp_path, capsys):
+    # drift-clean (fresh == base) but sharing's TTFT p50 no longer sits
+    # below no-sharing's: the structural claim itself is violated
+    over = mutate("table_sessions.csv", "sharing", "ttft_p50_ms", "155.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "not strictly below no-sharing" in capsys.readouterr().err
+
+
+def test_sessions_sharing_goodput_below_cold_fails(tmp_path, capsys):
+    over = mutate("table_sessions.csv", "sharing", "goodput", "140.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "sharing goodput 140.0 below no-sharing" in \
+        capsys.readouterr().err
 
 
 def test_hybrid_pool_goodput_ordering_fails(tmp_path, capsys):

@@ -1,0 +1,608 @@
+"""Sessions, prefix reuse, and barge-in — the PR 8 differential suite.
+
+The contract under test: with the prefix cache on, a paged engine serving
+requests that share a prompt prefix produces tokens **identical** to the
+contiguous-cache wave oracle serving each request alone — the shared
+pages plus copy-on-write are invisible to the numerics — while the pool's
+refcounted accounting never leaks, double-frees, or dangles a page, even
+under mid-decode barge-in cancellation of a lane that shares pages with
+co-resident lanes.
+
+Locked by the same cross-path harness as tests/test_hybrid_paged.py
+(``REPRO_PAGED_MODES`` selects the paged-attention implementation), plus
+a refcount-aware page-accounting property test with random share / adopt
+/ CoW / cancel sequences, and check_trace negatives proving the trace
+auditor rejects the failure modes (double-free of a shared page, share
+of a dead page).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import (make_requests, pallas_modes, run_paged,
+                      run_wave_reference, servable_smoke_configs,
+                      smoke_params)
+from repro.configs import get_config
+from repro.obs import trace as tr_mod
+from repro.obs.check_trace import check
+from repro.serving import metrics as metrics_mod
+from repro.serving import traffic
+from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.kv_cache import (CACHE_SLOT, DUMMY_PAGE, PagedKVCache,
+                                    PrefixCache)
+from repro.serving.scheduler import Request, Scheduler
+
+SERVABLE = servable_smoke_configs()
+#: prefix sharing requires all-full-attention stacks; pick the dense ones
+DENSE = [(n, c) for n, c in SERVABLE if not c.sliding_window]
+NAME, CFG = DENSE[0]
+
+MAX_NEW = 4
+PREFIX_LEN = 27          # deliberately page-unaligned for page_size=8
+TAILS = (5, 9, 14)
+
+
+def _shared_prefix_requests(cfg, *, max_new=MAX_NEW, seed=3):
+    """Requests sharing a PREFIX_LEN-token prefix with distinct tails,
+    declaring the shared span via ``prefix_keys`` (what session traffic
+    does) so the engine caches the prefix, not just whole prompts."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab, PREFIX_LEN).astype(np.int32)
+    reqs = []
+    for i, t in enumerate(TAILS):
+        tail = rng.integers(0, cfg.vocab, t).astype(np.int32)
+        r = Request(rid=i, prompt=np.concatenate([shared, tail]),
+                    max_new=max_new, deadline_s=100.0)
+        r.prefix_keys = (("shared", PREFIX_LEN),)
+        reqs.append(r)
+    return reqs
+
+
+def _total_pages(cache):
+    return sum(n - 1 for n in cache._group_pages.values())
+
+
+# -- the tentpole acceptance: shared-prefix token identity --------------------
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+@pytest.mark.parametrize("chunk", [None, 8])
+@pytest.mark.parametrize("slots", [1, 3])
+def test_shared_prefix_token_identity(chunk, slots, use_pallas):
+    """Adopted prefix pages + resume prefill of the remainder == the wave
+    oracle's from-scratch prefill, monolithic and chunked, sequential
+    (slots=1: every later request hits) and co-resident (slots=3)."""
+    params = smoke_params(NAME)
+    want = _shared_prefix_requests(CFG)
+    run_wave_reference(params, CFG, want)
+    reqs, eng = run_paged(params, CFG, _shared_prefix_requests(CFG),
+                          page_size=8, chunk=chunk, slots=slots,
+                          use_pallas=use_pallas, prefix_cache=True)
+    for w, r in zip(want, reqs):
+        assert r.result_tokens is not None, r.rid
+        assert np.array_equal(w.result_tokens, r.result_tokens), \
+            (chunk, slots, use_pallas, r.rid)
+    if slots == 1 or chunk is None:
+        # sequential service (or synchronous monolithic prefills): every
+        # later request finds the prefix warm.  slots=3 + chunked admits
+        # all three before any prefill completes — legitimately no hits
+        # (in-flight prefills are unpublishable: their pages are still
+        # being written).
+        assert eng.prefix.hits >= 2, eng.prefix.hits
+    # cache holdings are the only live pages; releasing them restores the
+    # full pool (conservation under refcounting)
+    eng.prefix.clear()
+    assert eng.cache.free_pages == _total_pages(eng.cache)
+
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_prefix_cache_off_is_bit_identical_noop(use_pallas):
+    """prefix_cache=False (the default everywhere) must not change a
+    single token vs. the historical engine — committed benchmark CSVs
+    depend on it."""
+    params = smoke_params(NAME)
+    base, _ = run_paged(params, CFG, _shared_prefix_requests(CFG),
+                        page_size=8, use_pallas=use_pallas)
+    off, eng = run_paged(params, CFG, _shared_prefix_requests(CFG),
+                         page_size=8, use_pallas=use_pallas,
+                         prefix_cache=False)
+    assert eng.prefix is None
+    for b, r in zip(base, off):
+        assert np.array_equal(b.result_tokens, r.result_tokens)
+
+
+def test_prefix_cache_rejects_windowed_stacks():
+    windowed = [(n, c) for n, c in SERVABLE if c.sliding_window]
+    name, cfg = windowed[0]
+    with pytest.raises(ValueError, match="full-attention"):
+        run_paged(smoke_params(name), cfg, make_requests(cfg, (9,)),
+                  prefix_cache=True)
+
+
+# -- refcount / copy-on-write unit semantics ---------------------------------
+
+def _zero_prefill_kv(cfg, cache, S):
+    import jax.numpy as jnp
+    return {g.name: {"k": jnp.zeros((len(g.layers), S, cfg.n_kv_heads,
+                                     cfg.head_dim)),
+                     "v": jnp.zeros((len(g.layers), S, cfg.n_kv_heads,
+                                     cfg.head_dim))}
+            for g in cache.groups}
+
+
+def test_share_adopt_cow_refcount_lifecycle():
+    """The full life of a shared unaligned prefix: donor demotion, CoW on
+    the donor's next write, adoption by a second lane, CoW on the
+    adopter's first write, and frees that only return pages at refcount
+    zero."""
+    cfg = CFG
+    ps = 4
+    cache = PagedKVCache(cfg, slots=2, n_pages=24, page_size=ps, max_ctx=32)
+    cache.alloc(0, 14)                       # 10 prompt + 4 decode budget
+    cache.write_prefill(0, _zero_prefill_kv(cfg, cache, 10))
+    snap = cache.share_prefix(0, 10)         # 10 tokens -> 3 pages, page 2
+    for g, plist in snap["pages"].items():   # partially covered (boundary)
+        assert len(plist) == 3
+        for p in plist:
+            assert cache.refcount(g, p) == 2   # donor + snapshot
+    # the donor's live write page was demoted: its next write must CoW
+    g0 = cache.groups[0].name
+    assert 2 in cache._shared[g0][0] and 2 not in cache._owned[g0][0]
+    boundary = snap["pages"][g0][2]
+    cache.prepare_tokens(0, 1)               # donor decodes: CoW
+    assert cache.refcount(g0, boundary) == 1            # snapshot only
+    assert cache._owned[g0][0][2] != boundary           # fresh page
+    # a second lane adopts the snapshot
+    cache.alloc(1, 20, adopt=snap, adopt_len=10)
+    assert int(cache.pos[1]) == 10
+    assert cache.refcount(g0, boundary) == 2            # snapshot + lane 1
+    cache.prepare_tokens(1, 4)               # adopter writes: CoW again
+    assert cache.refcount(g0, boundary) == 1
+    # frees drop references; the snapshot keeps its pages live
+    cache.free(0)
+    for g, plist in snap["pages"].items():
+        for p in plist:
+            assert cache.refcount(g, p) >= 1
+    cache.free(1)
+    assert cache.free_pages < _total_pages(cache)       # snapshot still held
+    cache.release_snapshot(snap)
+    assert cache.free_pages == _total_pages(cache)
+
+
+def test_prefix_cache_lookup_is_strict_and_verified():
+    """An exact-length prompt never hits its own entry (at least one token
+    must remain to prefill), probe() matches lookup() without perturbing
+    LRU order, and a hash key never serves mismatched tokens."""
+    cache = PagedKVCache(CFG, slots=2, n_pages=24, page_size=4, max_ctx=32)
+    pc = PrefixCache(cache)
+    toks = np.arange(12, dtype=np.int32)
+    cache.alloc(0, 16)
+    cache.write_prefill(0, _zero_prefill_kv(CFG, cache, 12))
+    assert pc.insert(0, toks, 12)
+    assert pc.lookup(toks) == (None, 0)                 # strict prefix only
+    longer = np.concatenate([toks, [99]]).astype(np.int32)
+    order_before = list(pc._entries)
+    assert pc.probe(longer) == 12
+    assert list(pc._entries) == order_before
+    snap, n = pc.lookup(longer)
+    assert n == 12 and snap is not None
+    different = longer.copy()
+    different[3] = 77                                   # same length, other
+    assert pc.probe(different) == 0                     # tokens: verified
+    cache.free(0)
+    pc.clear()
+    assert cache.free_pages == _total_pages(cache)
+
+
+def test_prefix_cache_lru_eviction_bounded_by_max_pages():
+    cache = PagedKVCache(CFG, slots=2, n_pages=24, page_size=4, max_ctx=32)
+    n_groups = len(cache.groups)
+    pc = PrefixCache(cache, max_pages=2 * n_groups)     # room for one entry
+    for slot, base in ((0, 0), (1, 100)):
+        toks = np.arange(base, base + 8, dtype=np.int32)
+        cache.alloc(slot, 12)
+        cache.write_prefill(slot, _zero_prefill_kv(CFG, cache, 8))
+        assert pc.insert(slot, toks, 8)
+        cache.free(slot)
+    assert len(pc) == 1                                 # first entry evicted
+    assert pc.held_pages <= 2 * n_groups
+    assert pc.probe(np.arange(0, 9, dtype=np.int32)) == 0
+    assert pc.probe(np.arange(100, 109, dtype=np.int32)) == 8
+    pc.clear()
+    assert cache.free_pages == _total_pages(cache)
+
+
+# -- barge-in cancellation ---------------------------------------------------
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_barge_in_mid_decode_keeps_corunner_identical(use_pallas):
+    """Cancelling a lane mid-decode reclaims its private pages, merely
+    decrements the shared prefix pages, and leaves the co-resident lane's
+    tokens identical to the oracle — replayed through check_trace."""
+    params = smoke_params(NAME)
+    max_new = 10
+    want = _shared_prefix_requests(CFG, max_new=max_new)
+    run_wave_reference(params, CFG, want)
+    # dry run to learn the victim's decode window on the analytic clock
+    dry, _ = run_paged(params, CFG, _shared_prefix_requests(CFG,
+                                                            max_new=max_new),
+                       page_size=8, use_pallas=use_pallas, prefix_cache=True)
+    victim = dry[1]
+    assert victim.t_first_token is not None
+    t_cancel = victim.t_first_token + 0.5 * (victim.t_finish
+                                             - victim.t_first_token)
+    reqs = _shared_prefix_requests(CFG, max_new=max_new)
+    reqs[1].t_cancel = t_cancel
+    tr = tr_mod.Tracer()
+    reqs, eng = run_paged(params, CFG, reqs, page_size=8,
+                          use_pallas=use_pallas, prefix_cache=True,
+                          tracer=tr)
+    r = reqs[1]
+    assert r.cancelled and not r.dropped
+    assert 0 < r.tokens_done < max_new
+    # partial output is the oracle's prefix (barge-in loses no tokens)
+    assert np.array_equal(want[1].result_tokens[:r.tokens_done],
+                          r.result_tokens)
+    for i in (0, 2):                         # co-runners: token-identical
+        assert not reqs[i].cancelled
+        assert np.array_equal(want[i].result_tokens, reqs[i].result_tokens)
+    assert any(e.name == tr_mod.REQ_CANCEL for e in tr.events)
+    assert check(tr.events) == []            # incl. refcounted conservation
+    eng.prefix.clear()
+    assert eng.cache.free_pages == _total_pages(eng.cache)
+
+
+def test_analytic_barge_in_before_admission_is_a_miss(profile):
+    """A request cancelled while still queued retires as cancelled (not
+    dropped), with no first token and a missed deadline."""
+    b = ContinuousBatcher(profile, slots=1, policy="serve")
+    blocker = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                                 prompt_len=64, max_new=64, deadline_s=10.0)
+    queued = traffic.SimRequest(rid=1, cls_name="t", t_arrive=0.0,
+                                prompt_len=64, max_new=8, deadline_s=10.0,
+                                t_cancel=1e-4)
+    b.submit(blocker)
+    b.submit(queued)
+    out = b.run()
+    r = next(x for x in out if x.rid == 1)
+    assert r.cancelled and not r.dropped
+    assert r.tokens_done == 0 and r.t_first_token is None
+    assert r.met_deadline is False
+    assert next(x for x in out if x.rid == 0).tokens_done == 64
+
+
+def test_wave_scheduler_sweeps_cancelled_before_launch():
+    """The wave path never launches a request whose cancel time passed
+    before its wave — waves are atomic, so that is the only barge-in the
+    wave engine honors."""
+    from repro.serving.engine import ServingEngine
+
+    params = smoke_params(NAME)
+    sched = Scheduler(ServingEngine(params, CFG, max_ctx=64), batch_slots=1)
+    reqs = make_requests(CFG, (9, 7), max_new=4)
+    reqs[1].t_cancel = 1e-6                  # cancelled during wave 0
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    assert len(done) == 2
+    assert reqs[0].result_tokens is not None and not reqs[0].cancelled
+    assert reqs[1].cancelled and reqs[1].result_tokens is None
+    assert reqs[1].met_deadline is False
+
+
+# -- session traffic ---------------------------------------------------------
+
+def test_session_traffic_deterministic_and_nested():
+    cls = traffic.support_sessions(rate_hz=1.5)
+    a = traffic.generate_sessions([cls], 10.0, seed=7)
+    b = traffic.generate_sessions([cls], 10.0, seed=7)
+    assert [(r.session, r.turn, r.prompt_len, r.t_arrive) for r in a] \
+        == [(r.session, r.turn, r.prompt_len, r.t_arrive) for r in b]
+    assert [r.t_arrive for r in a] == sorted(r.t_arrive for r in a)
+    assert [r.rid for r in a] == list(range(len(a)))
+    by_session = {}
+    for r in a:
+        by_session.setdefault(r.session, []).append(r)
+    multi = [v for v in by_session.values() if len(v) > 1]
+    assert multi, "no multi-turn session in 10s of traffic"
+    for turns in multi:
+        assert [r.turn for r in turns] == list(range(len(turns)))
+        for prev, nxt in zip(turns, turns[1:]):
+            assert nxt.prompt_len > prev.prompt_len     # turns accumulate
+            assert nxt.t_arrive > prev.t_arrive
+            assert nxt.sys_len == prev.sys_len
+            # next turn's prompt literally extends the previous turn's
+            p = traffic.session_prompt_tokens(prev, vocab=1000)
+            q = traffic.session_prompt_tokens(nxt, vocab=1000)
+            assert np.array_equal(q[:len(p)], p)
+    # the system prompt is shared across sessions of the class
+    sys_groups = {}
+    for r in a:
+        sys_groups.setdefault(r.sys_len, []).append(r)
+    wide = [v for v in sys_groups.values()
+            if len({x.session for x in v}) > 1]
+    if wide:
+        toks = [traffic.session_prompt_tokens(x, vocab=1000)[:x.sys_len]
+                for x in wide[0][:2]]
+        assert np.array_equal(toks[0], toks[1])
+    # prefix_keys declare exactly the reusable spans
+    for r in a:
+        (k_sys, n_sys), (k_sess, n_sess) = r.prefix_keys
+        assert k_sys.endswith("/sys") and n_sys == r.sys_len
+        assert k_sess == r.session and n_sess == r.prompt_len
+
+
+def test_session_traffic_carries_slos_and_barge_in():
+    cls = traffic.support_sessions(rate_hz=2.0)
+    reqs = traffic.generate_sessions([cls], 20.0, seed=1)
+    assert all(r.ttft_deadline_s is not None for r in reqs)
+    assert all(r.deadline_s >= r.ttft_deadline_s for r in reqs)
+    cancels = [r for r in reqs if r.t_cancel is not None]
+    frac = len(cancels) / len(reqs)
+    assert 0.02 < frac < 0.5                 # ~barge_in_frac of turns
+    assert all(r.t_cancel > r.t_arrive for r in cancels)
+
+
+@pytest.fixture(scope="module")
+def profile():
+    return LatencyProfile(get_config("qwen2.5-1.5b"), 4.0)
+
+
+def test_analytic_prefix_cache_cuts_ttft(profile):
+    """The batcher's warm-prefix mirror prices session turns' skipped
+    prefill: TTFT p50 drops vs. the same traffic without sharing, token
+    budgets and capacity equal."""
+    cls = traffic.support_sessions(rate_hz=3.0)
+    arrivals = traffic.generate_sessions([cls], 15.0, seed=2)
+    reps = {}
+    for on in (False, True):
+        b = ContinuousBatcher(profile, slots=4, policy="serve",
+                              prefix_cache=on)
+        for r in arrivals:
+            b.submit(r.fresh())
+        reps[on] = metrics_mod.summarize(b.run(), 15.0)
+    assert reps[True].ttft_p50_s < reps[False].ttft_p50_s
+    assert reps[True].served >= reps[False].served
+    # the new aggregates exist and are sane
+    assert reps[True].cancelled >= 0
+    assert 0.0 <= reps[True].ttft_hit_rate <= 1.0
+
+
+def test_metrics_cancelled_disjoint_from_dropped_and_degraded(profile):
+    b = ContinuousBatcher(profile, slots=1, policy="serve")
+    blocker = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                                 prompt_len=64, max_new=32, deadline_s=10.0)
+    queued = traffic.SimRequest(rid=1, cls_name="t", t_arrive=0.0,
+                                prompt_len=64, max_new=8, deadline_s=10.0,
+                                t_cancel=1e-4)
+    b.submit(blocker)
+    b.submit(queued)
+    rep = metrics_mod.summarize(b.run(), 1.0)
+    assert rep.cancelled == 1
+    assert rep.dropped == 0
+    assert rep.degraded == 0                 # cancelled != degraded
+
+
+def test_ttft_admission_drops_hopeless_first_tokens(profile):
+    """Under policy='drop', a request whose projected first token already
+    misses its TTFT budget is rejected at admission — degrading cannot
+    speed up the first token."""
+    b = ContinuousBatcher(profile, slots=1, policy="drop")
+    hopeless = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                                  prompt_len=256, max_new=4,
+                                  deadline_s=10.0, ttft_deadline_s=1e-6)
+    b.submit(hopeless)
+    b.run()
+    assert b.dropped and b.dropped[0].rid == 0
+    assert b.dropped[0].tokens_done == 0
+
+
+# -- fleet routing -----------------------------------------------------------
+
+def _eps(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"L{i}.lin{j}": float(rng.uniform(0.05, 0.9))
+            for i in range(cfg.n_layers) for j in range(4)}
+
+
+def test_router_prefers_engine_with_warm_prefix():
+    """Two identical engines; one has the session's prefix warm — the
+    discounted service estimate routes the next turn there."""
+    from repro.serving.fleet import FleetRouter, pool_candidates
+
+    cfg = get_config("qwen2.5-1.5b")
+    cand = pool_candidates([("qwen2.5-1.5b", cfg, _eps(cfg), 1.0)])[0]
+    router = FleetRouter([cand, cand], quality=lambda c: 1.0, slots=2)
+    for e in router.engines:
+        e.prefix_cache = True
+    router.engines[1]._warm["sess/a"] = 192
+    req = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                             prompt_len=256, max_new=8, deadline_s=5.0,
+                             prefix_keys=(("sess/a", 192),))
+    assert router.dispatch(req) == 1
+
+
+def test_router_ttft_slack_excludes_slow_first_tokens():
+    """With a TTFT budget set, an engine whose projected first token
+    misses it is excluded even when its completion deadline would fit;
+    when no engine fits the TTFT budget, the completion rule decides."""
+    from repro.serving.fleet import FleetRouter, pool_candidates
+
+    fast = get_config("qwen2.5-1.5b")
+    slow = get_config("qwen2.5-14b")
+    cands = pool_candidates([("qwen2.5-1.5b", fast, _eps(fast), 1.0),
+                             ("qwen2.5-14b", slow, _eps(slow), 0.0)])
+    quality = lambda c: {"qwen2.5-1.5b": 0.6, "qwen2.5-14b": 0.95}[
+        c.model_name]
+    router = FleetRouter(cands, quality=quality, slots=2)
+    slow_ttft = (router.engines[1].profile.prefill_s(256)
+                 + router.engines[1].profile.tok_s(1, 257))
+    fast_ttft = (router.engines[0].profile.prefill_s(256)
+                 + router.engines[0].profile.tok_s(1, 257))
+    assert fast_ttft < slow_ttft
+    pick = router.dispatch(traffic.SimRequest(
+        rid=0, cls_name="t", t_arrive=0.0, prompt_len=256, max_new=8,
+        deadline_s=30.0, ttft_deadline_s=0.5 * (fast_ttft + slow_ttft)))
+    assert pick == 0                         # quality said 1; TTFT said 0
+    pick = router.dispatch(traffic.SimRequest(
+        rid=1, cls_name="t", t_arrive=10.0, prompt_len=256, max_new=8,
+        deadline_s=30.0, ttft_deadline_s=1e-9))
+    assert pick == 1                         # nobody fits: quality rules
+
+
+# -- check_trace negatives ---------------------------------------------------
+
+def _ev(name, t, track, **args):
+    return tr_mod.Event("instant", name, t, None, track, args, 0.0)
+
+
+def _pool_prelude(t=0.0):
+    return [_ev(tr_mod.POOL_CONFIG, t, "pool", groups={"layers": 4},
+                page_size=4, slots=2)]
+
+
+def test_check_trace_rejects_double_free_of_shared_page():
+    events = _pool_prelude() + [
+        _ev(tr_mod.PAGE_RESERVE, 0.0, "pool", group="layers", slot=0,
+            pages=1),
+        _ev(tr_mod.PAGE_ALLOC, 0.0, "pool", group="layers", page=1, slot=0),
+        _ev(tr_mod.PAGE_SHARE, 0.1, "pool", group="layers", page=1, slot=1,
+            refs=2),
+        _ev(tr_mod.PAGE_FREE, 0.2, "pool", group="layers", page=1, slot=1,
+            refs=1),
+        _ev(tr_mod.PAGE_FREE, 0.3, "pool", group="layers", page=1, slot=1,
+            refs=0),
+    ]
+    errs = check(events)
+    assert any("double free" in e for e in errs), errs
+
+
+def test_check_trace_rejects_share_of_dead_page():
+    events = _pool_prelude() + [
+        _ev(tr_mod.PAGE_SHARE, 0.1, "pool", group="layers", page=2, slot=1,
+            refs=1),
+    ]
+    errs = check(events)
+    assert any("not live" in e for e in errs), errs
+
+
+def test_check_trace_accepts_refcounted_share_lifecycle():
+    """Alloc -> share (cache + lane) -> frees in any holder order -> free
+    at refcount zero: a legal trace, conservation intact."""
+    events = _pool_prelude() + [
+        _ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=0),
+        _ev(tr_mod.PAGE_RESERVE, 0.0, "pool", group="layers", slot=0,
+            pages=1),
+        _ev(tr_mod.PAGE_ALLOC, 0.0, "pool", group="layers", page=1, slot=0),
+        _ev(tr_mod.PAGE_SHARE, 0.1, "pool", group="layers", page=1,
+            slot=CACHE_SLOT, refs=2),
+        _ev(tr_mod.PAGE_SHARE, 0.2, "pool", group="layers", page=1, slot=1,
+            refs=3),
+        _ev(tr_mod.PAGE_FREE, 0.3, "pool", group="layers", page=1, slot=0,
+            refs=2),
+        _ev(tr_mod.PAGE_RESERVE, 0.3, "pool", group="layers", slot=0,
+            pages=0),
+        _ev(tr_mod.PAGE_FREE, 0.4, "pool", group="layers", page=1, slot=1,
+            refs=1),
+        _ev(tr_mod.PAGE_FREE, 0.5, "pool", group="layers", page=1,
+            slot=CACHE_SLOT, refs=0),
+        _ev(tr_mod.REQ_CANCEL, 0.6, "queue", rid=0),
+    ]
+    assert check(events) == []
+
+
+# -- refcounted page-accounting property test --------------------------------
+
+def _rc_invariants(cache, pc):
+    """Conservation under refcounting: every group's free + live pages
+    partition the pool, and each live page's refcount equals its holder
+    count (lanes' owned + shared, plus prefix-cache snapshot holdings,
+    with multiplicity)."""
+    holders = {}
+    for g in cache.groups:
+        for s in range(cache.slots):
+            for p in cache._owned[g.name][s].values():
+                holders[(g.name, p)] = holders.get((g.name, p), 0) + 1
+            for p in cache._shared[g.name][s].values():
+                holders[(g.name, p)] = holders.get((g.name, p), 0) + 1
+    for e in pc._entries.values():
+        for gname, plist in e["snap"]["pages"].items():
+            for p in plist:
+                holders[(gname, p)] = holders.get((gname, p), 0) + 1
+    for g in cache.groups:
+        n_pg = cache._group_pages[g.name]
+        free = cache._free[g.name]
+        live = {p for (gn, p) in holders if gn == g.name}
+        assert len(free) == len(set(free)), g.name
+        assert not set(free) & live, g.name
+        assert set(free) | live == set(range(1, n_pg)), g.name
+        for p in range(1, n_pg):
+            assert cache.refcount(g.name, p) \
+                == holders.get((g.name, p), 0), (g.name, p)
+        assert cache.available(g) >= 0, g.name
+        for s in range(cache.slots):
+            assert len(cache._owned[g.name][s]) \
+                <= int(cache._reserved[g.name][s]), (g.name, s)
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_refcounted_accounting_property(seed):
+    """Random admit (with prefix adoption when the cache hits) / insert /
+    decode (CoW on shared write pages) / barge-in free / evict sequences
+    never break refcount conservation, reservations, or the final
+    all-free state.  Prompts draw from a shared base stream so hits are
+    common, exercising adoption + CoW, not just exclusive pages."""
+    rng = np.random.default_rng(seed)
+    cfg = CFG
+    ps = int(rng.choice([3, 4, 8]))
+    cache = PagedKVCache(cfg, slots=3, n_pages=int(rng.integers(8, 28)),
+                         page_size=ps, max_ctx=48)
+    pc = PrefixCache(cache, max_pages=int(rng.integers(4, 24)))
+    base = rng.integers(0, 50, 48).astype(np.int32)
+    live = {}                    # slot -> [total, prompt, base_len, toks]
+    for _ in range(60):
+        op = rng.integers(0, 5)
+        if op == 0 and len(live) < cache.slots:          # admit
+            slot = next(s for s in range(cache.slots) if s not in live)
+            total = int(rng.integers(4, cache.max_ctx + 1))
+            prompt = int(rng.integers(2, total))
+            k = int(rng.integers(1, prompt + 1))         # base-prefix len
+            toks = np.concatenate(
+                [base[:k],
+                 rng.integers(50, 100, prompt - k)]).astype(np.int32)
+            snap, cached = pc.lookup(toks)
+            if not cache.can_admit(total, None, cached):
+                continue
+            cache.alloc(slot, total, adopt=snap if cached else None,
+                        adopt_len=cached)
+            if cached:                                   # resume remainder
+                cache.prepare_tokens(slot, prompt - cached)
+                cache.advance(slot, prompt - cached)
+            else:
+                cache.write_prefill(
+                    slot, _zero_prefill_kv(cfg, cache, prompt))
+            live[slot] = [total, prompt, k, toks]
+        elif op == 1 and live:                           # publish prefix
+            slot = int(rng.choice(list(live)))
+            total, prompt, k, toks = live[slot]
+            pc.insert(slot, toks, min(k, prompt))
+        elif op == 2 and live:                           # decode one token
+            slot = int(rng.choice(list(live)))
+            total, prompt, k, toks = live[slot]
+            if int(cache.pos[slot]) < total:
+                cache.prepare_tokens(slot, 1)
+                cache.advance(slot, 1)
+        elif op == 3 and live:                           # retire / barge-in
+            slot = int(rng.choice(list(live)))
+            cache.free(slot)
+            del live[slot]
+        elif op == 4:
+            pc.evict_lru()
+        _rc_invariants(cache, pc)
+    for slot in list(live):
+        cache.free(slot)
+    pc.clear()
+    _rc_invariants(cache, pc)
+    assert cache.free_pages == _total_pages(cache)
+    assert cache.utilization() == pytest.approx(0.0)
