@@ -18,6 +18,8 @@ turns the tables into a gate:
    speculative-decoding fleet the same way, per (mix, arm).
    ``results/table_sessions.csv`` gates session serving per path:
    TTFT percentiles, hit rates, and goodput.
+   ``results/table_faults.csv`` gates the fault-injected fleet per
+   path (ceiling / naive / recovering) on goodput and p99.
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
@@ -34,7 +36,10 @@ turns the tables into a gate:
    deadline-tight class never exceeds dense (speculative rounds collapse
    to dense steps under deadline pressure); prefix sharing's session TTFT
    p50 sits strictly below the no-sharing path's with no less goodput at
-   equal capacity.
+   equal capacity; under the identical seeded fault schedule the
+   token-exact-recovery fleet's goodput is strictly above the stranding
+   (naive) fleet's, neither out-earns the fault-free ceiling, and
+   recovery drops no more requests than stranding.
 
 Malformed tables (empty, or missing the gated columns) fail the gate
 with a named error rather than a traceback — a refactor that drops a
@@ -79,6 +84,8 @@ HYBRID_TABLE = "table_hybrid.csv"
 SPEC_TABLE = "table_spec.csv"
 #: session serving: prefix reuse + TTFT SLOs vs cold starts, per path
 SESSIONS_TABLE = "table_sessions.csv"
+#: fault recovery: token-exact recovery vs stranding under one schedule
+FAULTS_TABLE = "table_faults.csv"
 
 
 def read_rows(text: str):
@@ -409,6 +416,38 @@ def check_sessions_orderings(rows, errors):
                       f"no-sharing {nv}")
 
 
+def check_faults_orderings(rows, errors):
+    """The claims the fault table exists to prove: under the identical
+    seeded fault schedule, token-exact recovery earns *strictly* more
+    goodput than stranding, drops no more requests, and no faulted row
+    out-earns the fault-free ceiling."""
+    by = {r.get("path"): r for r in rows}
+    need = ("ceiling", "naive", "recovering")
+    missing = [p for p in need if by.get(p) is None]
+    if missing:
+        errors.append(f"{FAULTS_TABLE}: missing rows {missing}")
+        return
+    g = {p: col(by[p], "goodput", FAULTS_TABLE, errors) for p in need}
+    if None not in g.values():
+        if g["recovering"] <= g["naive"]:
+            errors.append(f"{FAULTS_TABLE}: recovering goodput "
+                          f"{g['recovering']} not strictly above naive "
+                          f"{g['naive']}")
+        for p in ("naive", "recovering"):
+            if g[p] > g["ceiling"]:
+                errors.append(f"{FAULTS_TABLE}: {p} goodput {g[p]} above "
+                              f"the fault-free ceiling {g['ceiling']}")
+    dn, dr = (col(by[p], "dropped", FAULTS_TABLE, errors)
+              for p in ("naive", "recovering"))
+    if None not in (dn, dr) and dr > dn:
+        errors.append(f"{FAULTS_TABLE}: recovering dropped {dr} requests, "
+                      f"more than naive's {dn}")
+    rt = col(by["recovering"], "retried", FAULTS_TABLE, errors)
+    if rt is not None and rt <= 0:
+        errors.append(f"{FAULTS_TABLE}: recovering row retried nothing — "
+                      "the schedule exercises no recovery")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
@@ -451,6 +490,13 @@ def main(argv=None) -> int:
                                                    args.baseline_dir),
                          args.tol_pct, errors)
     check_sessions_orderings(sess_fresh, errors)
+    # the fault table keys on "path" like the serving tables, so the
+    # generic goodput/p99 drift check applies as-is
+    faults_fresh = load_fresh(args.results, FAULTS_TABLE)
+    check_drift(FAULTS_TABLE, faults_fresh,
+                load_baseline(FAULTS_TABLE, args.baseline_dir),
+                args.tol_pct, errors)
+    check_faults_orderings(faults_fresh, errors)
 
     for trace_path in args.trace:
         sys.path.insert(0, os.path.join(REPO, "src"))
@@ -463,7 +509,7 @@ def main(argv=None) -> int:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
     traced = f" + {len(args.trace)} trace(s)" if args.trace else ""
-    print(f"regression gate: {len(TABLES) + 4} tables OK{traced} "
+    print(f"regression gate: {len(TABLES) + 5} tables OK{traced} "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

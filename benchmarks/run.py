@@ -99,6 +99,15 @@ def main() -> None:
                  f"ttft_p50={sh[7]}ms_vs_cold{ns[7]}ms"
                  f":goodput={sh[10]}_vs_{ns[10]}"))
 
+    # --- Fault injection: token-exact recovery vs stranding ---------------
+    import table_faults
+    tf = table_faults.main(verbose=False)
+    tf_by = {r[0]: r for r in tf}
+    rec, nv = tf_by["recovering"], tf_by["naive"]
+    rows.append(("table_faults", float(rec[7]),
+                 f"goodput={rec[8]}_vs_naive{nv[8]}"
+                 f":retried={rec[4]}:ceiling={tf_by['ceiling'][8]}"))
+
     # --- Speculative decoding: learned draft depth vs dense/fixed-k -------
     import table_spec
     tsp = table_spec.main(verbose=False)

@@ -112,12 +112,23 @@ def select_for_slack(grid: Sequence[Candidate], deadline_s: float,
     ``service + wait`` (the request's *remaining slack* after queueing).
     Quality ties break toward the least-loaded candidate, which makes a
     pool of identical engines degrade gracefully into least-loaded
-    round-robin.  Returns the index into ``grid``."""
+    round-robin.  Returns the index into ``grid``.
+
+    Selection is index-based throughout: a pool may contain *duplicate*
+    operating points (replicated engines) whose adjusted candidates
+    compare equal, and an equality search (the old ``adj.index(pick)``)
+    would always resolve to the first replica — silently mis-routing
+    every pick of the later ones.  When nothing fits the deadline the
+    pick degrades to the fastest effective candidate (wait + service):
+    the paper's win-fast regime, never an error."""
     adj = [dataclasses.replace(c, latency_s=c.latency_s + w)
            for c, w in zip(grid, waits_s)]
-    pick = select_for_budget(adj, deadline_s,
-                             lambda c: (quality(c), -c.latency_s))
-    return adj.index(pick)
+    idxs = range(len(adj))
+    feasible = [i for i in idxs if adj[i].latency_s <= deadline_s]
+    if not feasible:
+        return min(idxs, key=lambda i: (adj[i].latency_s, i))
+    return max(feasible,
+               key=lambda i: (quality(adj[i]), -adj[i].latency_s, -i))
 
 
 def pareto_frontier(grid: Sequence[Candidate],

@@ -27,10 +27,19 @@ event stream and asserting the conservation laws the stack promises:
 3. **Clock monotonicity per lane/engine track.**  Step, prefill, and
    token events on one track never move the analytic clock backwards,
    and spans never have negative duration.
-4. **Exactly-once retire.**  Every admitted request retires exactly once
-   (finish, drop, or barge-in cancel), never twice; a finish implies an
-   admission.  Drops and cancels without admission are legal
-   (admission-time policy rejections; barge-in while still queued).
+4. **Exactly-once retire, attempt-aware.**  Every admitted request
+   retires exactly once (finish, drop, or barge-in cancel), never twice;
+   a finish implies an admission.  Drops and cancels without admission
+   are legal (admission-time policy rejections; barge-in while still
+   queued).  Failure recovery widens the budget per *license*, never
+   silently: each ``req.requeue`` (a crash reclaimed the attempt — which
+   therefore never retires) licenses one extra admission of the same
+   rid, and each ``route.hedge`` licenses one extra admission *and* one
+   extra terminal (the losing attempt of the pair retires too, flagged
+   ``hedge_loser``).  A rid may never exceed
+   ``admits <= 1 + requeues + hedges`` or
+   ``terminals <= 1 + hedges`` — re-admission without a recorded fault
+   event is still the double-admit bug this law existed to catch.
 5. **Speculation commit discipline** (per track).  Every ``spec.draft``
    is committed by exactly one ``spec.accept`` before the next round on
    that track begins, with ``0 <= accepted <= drafted`` — a draft token
@@ -56,8 +65,9 @@ from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_COW,
                              POOL_CONFIG, PREFIX_EVICT, PREFIX_INSERT,
                              REQ_ADMIT, REQ_CANCEL, REQ_DROP, REQ_FINISH,
                              REQ_FIRST_TOKEN, REQ_PREFILL,
-                             REQ_PREFILL_CHUNK, REQ_TOKEN, SPEC_ACCEPT,
-                             SPEC_DRAFT, SPEC_VERIFY, WAVE_STEP)
+                             REQ_PREFILL_CHUNK, REQ_REQUEUE, REQ_TOKEN,
+                             ROUTE_HEDGE, SPEC_ACCEPT, SPEC_DRAFT,
+                             SPEC_VERIFY, WAVE_STEP)
 
 #: events whose analytic timestamps must be non-decreasing per track
 #: (queue spans and arrivals are excluded by design: EDF admission emits
@@ -226,8 +236,10 @@ def check(events: Sequence[Event]) -> List[str]:
     errors: List[str] = []
     pools: Dict[str, _Pool] = {}
     last_t: Dict[str, float] = {}
-    admitted: Set = set()
-    retired: Dict = {}                    # rid -> "finish" | "drop"
+    admits: Dict = {}                     # rid -> admission count
+    terminals: Dict = {}                  # rid -> [kind, ...] in order
+    requeues: Dict = {}                   # rid -> crash-reclaim licenses
+    hedges: Dict = {}                     # rid -> hedge licenses
     spec_pending: Dict[str, int] = {}     # track -> uncommitted drafted
 
     for ev in events:
@@ -276,26 +288,44 @@ def check(events: Sequence[Event]) -> List[str]:
         # -- request lifecycle -------------------------------------------
         elif ev.name == REQ_ADMIT:
             rid = a.get("rid")
-            if rid in admitted:
-                errors.append(f"request {rid}: admitted twice")
-            admitted.add(rid)
+            admits[rid] = admits.get(rid, 0) + 1
+        elif ev.name == REQ_REQUEUE:
+            rid = a.get("rid")
+            requeues[rid] = requeues.get(rid, 0) + 1
+        elif ev.name == ROUTE_HEDGE:
+            rid = a.get("rid")
+            hedges[rid] = hedges.get(rid, 0) + 1
         elif ev.name in (REQ_FINISH, REQ_DROP, REQ_CANCEL):
             rid = a.get("rid")
             kind = {REQ_FINISH: "finish", REQ_DROP: "drop",
                     REQ_CANCEL: "cancel"}[ev.name]
-            if rid in retired:
-                errors.append(f"request {rid}: retired twice "
-                              f"({retired[rid]} then {kind})")
-            retired[rid] = kind
-            if kind == "finish" and rid not in admitted:
+            terminals.setdefault(rid, []).append(kind)
+            if kind == "finish" and rid not in admits:
                 errors.append(f"request {rid}: finished without admission")
 
-    for rid in sorted(admitted - set(retired), key=repr):
+    # per-rid attempt accounting (deferred to the end: a requeue and the
+    # re-admission it licenses may share a timestamp, so event order
+    # within the fault boundary is not load-bearing)
+    for rid in admits:
+        allowed = 1 + requeues.get(rid, 0) + hedges.get(rid, 0)
+        if admits[rid] > allowed:
+            if allowed == 1:
+                errors.append(f"request {rid}: admitted twice")
+            else:
+                errors.append(
+                    f"request {rid}: admitted {admits[rid]} times with "
+                    f"only {allowed - 1} requeue/hedge licenses")
+    for rid, kinds in terminals.items():
+        if len(kinds) > 1 + hedges.get(rid, 0):
+            errors.append(f"request {rid}: retired twice "
+                          f"({kinds[0]} then {kinds[1]})")
+    open_rids = set(admits) - set(terminals)
+    for rid in sorted(open_rids, key=repr):
         errors.append(f"request {rid}: admitted but never retired")
     for track in sorted(spec_pending):
         errors.append(f"{track}: spec.draft never committed "
                       "(dangling round at end of trace)")
-    if not (admitted - set(retired)):     # quiescent: no request live
+    if not open_rids:                     # quiescent: no request live
         for pool in pools.values():
             if pool.lane_holdings():
                 errors.append(

@@ -95,6 +95,34 @@ ROUTE_DISPATCH = "route.dispatch"
 #: instant — router saw the retirement + realized reward.  args: rid,
 #: cls, engine_idx, reward
 ROUTE_RETIRE = "route.retire"
+#: instant — the router duplicated a still-queued request to a second
+#: engine after the hedge delay elapsed (straggler insurance; the losing
+#: attempt is torn down via barge-in cancellation and does not retire the
+#: request).  args: rid, cls, from_engine, to_engine, waited_s.
+#: track: "router"
+ROUTE_HEDGE = "route.hedge"
+
+#: instant — the fault injector fired one scheduled fault on an engine.
+#: args: engine_idx, fault ("crash" | "stall" | "slowdown" |
+#: "page_pressure"), plus per-kind fields (duration_s, factor, pages).
+#: track: "faults"
+FAULT_INJECT = "fault.inject"
+#: instant — an engine was declared unhealthy (crashed, or its circuit
+#: breaker opened on a detected stall); routing excludes it until
+#: ENGINE_UP.  args: engine_idx, reason ("crash" | "stall"), in_flight
+#: (requests reclaimed).  track: "router"
+ENGINE_DOWN = "engine.down"
+#: instant — a down engine recovered (crash window elapsed, or a
+#: circuit-breaker probe succeeded) and rejoined the candidate set.
+#: args: engine_idx, down_s.  track: "router"
+ENGINE_UP = "engine.up"
+#: instant — a request reclaimed from a failed engine re-entered the
+#: router's queue for another attempt.  check_trace treats this as the
+#: license for a later second REQ_ADMIT of the same rid: admission stays
+#: exactly-once *per attempt* and final retirement stays exactly-once
+#: per request.  args: rid, cls, from_engine, attempt (1-based count of
+#: completed attempts), tokens_done.  track: "router"
+REQ_REQUEUE = "req.requeue"
 
 #: instant at bind time — pool geometry the invariant checker needs.
 #: args: groups ({name: n_pages}), page_size, slots.  track: "pool"

@@ -408,6 +408,50 @@ class ContinuousBatcher:
         self.active: List[_Running] = []
         self.completed: List[SimRequest] = []
         self.dropped: List[SimRequest] = []
+        #: fault injection (serving.faults): the per-engine view, or None.
+        #: Falsy when no faults are scheduled, so the clean path costs one
+        #: truthiness check per boundary.
+        self.faults = None
+        self._slots_seized = 0            # page-pressure analog: seized slots
+
+    # -- fault-injection protocol (serving.faults) ---------------------------
+
+    def _charge(self, dt: float) -> None:
+        """Advance the clock by ``dt`` engine-seconds, stretched by any
+        active slowdown fault.  The no-fault path multiplies by exactly
+        1.0 — bit-identical to the historical ``self.t += dt``."""
+        if self.faults:
+            dt *= self.faults.scale(self.t)
+        self.t += dt
+
+    def _slots_now(self) -> int:
+        """Decode slots available right now (pressure faults seize slots
+        on the analytic path; at least one always survives so the engine
+        keeps making progress)."""
+        return max(1, self.slots - self._slots_seized)
+
+    def reclaim_in_flight(self) -> List[SimRequest]:
+        """Crash teardown: every admitted *and* queued request leaves the
+        engine (volatile state is gone; the engine's queue died with the
+        process).  Returns them for the crash handler to requeue, strand,
+        or re-route — they do not retire here."""
+        out = [r.req for r in self.active] + list(self.pending)
+        self.active = []
+        self.pending = []
+        return out
+
+    def requeue(self, req: SimRequest) -> None:
+        """Accept a recovered attempt without re-emitting its arrival
+        (the request already arrived once; this is the same request on a
+        new attempt)."""
+        self.pending.append(req)
+
+    def apply_pressure(self, fault) -> int:
+        self._slots_seized += fault.slots
+        return fault.slots
+
+    def release_pressure(self, token: int) -> None:
+        self._slots_seized -= token
 
     # -- submission ---------------------------------------------------------
 
@@ -455,7 +499,7 @@ class ContinuousBatcher:
         the drop/degrade policy.  Returns True if a slot was filled."""
         while True:
             arrived = [r for r in self.pending if r.t_arrive <= self.t]
-            if not arrived or len(self.active) >= self.slots:
+            if not arrived or len(self.active) >= self._slots_now():
                 return False
             req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
             self.pending.remove(req)
@@ -499,8 +543,8 @@ class ContinuousBatcher:
                 # stall; an adopted prefix is free and the remainder
                 # attends over it
                 t0 = self.t
-                self.t += self.profile.prefill_s(req.prompt_len - cached,
-                                                 context=cached)
+                self._charge(self.profile.prefill_s(req.prompt_len - cached,
+                                                    context=cached))
                 req.t_prefill_done = self.t
                 if self.tr:
                     self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
@@ -538,6 +582,8 @@ class ContinuousBatcher:
             retire_cancelled(self, run.req)
 
     def _admit(self) -> None:
+        if self.faults:
+            self.faults.tick(self)
         self._sweep_cancels()
         while self._admit_one():
             pass
@@ -556,7 +602,7 @@ class ContinuousBatcher:
             c = min(self.prefill_chunk, run.prefill_left)
             absorbed = run.req.prompt_len - run.prefill_left
             t0 = self.t
-            self.t += self.profile.prefill_s(c, context=absorbed)
+            self._charge(self.profile.prefill_s(c, context=absorbed))
             run.prefill_left -= c
             if self.tr:
                 self.tr.span(tr_mod.REQ_PREFILL_CHUNK, t0, self.t,
@@ -600,7 +646,7 @@ class ContinuousBatcher:
             self._spec_round(decoding, n, ctx)
             return
         t0 = self.t
-        self.t += self.profile.step_s(n, ctx)
+        self._charge(self.profile.step_s(n, ctx))
         if self.tr:
             self.tr.span(tr_mod.ENGINE_STEP, t0, self.t, track="steps",
                          n_active=n, context=ctx,
@@ -654,7 +700,7 @@ class ContinuousBatcher:
         per lane — the verifier's own — exactly like the live engine."""
         spec = self.profile.spec
         t0 = self.t
-        self.t += self.profile.spec_round_s(n, ctx)
+        self._charge(self.profile.spec_round_s(n, ctx))
         if self.tr:
             rids = [r.req.rid for r in decoding]
             self.tr.instant(tr_mod.SPEC_DRAFT, t0, track="steps", k=spec.k,
@@ -803,7 +849,8 @@ def retire_cancelled(eng, req) -> None:
         tr.instant(tr_mod.REQ_CANCEL, eng.t, track="queue", rid=req.rid,
                    cls=getattr(req, "cls_name", "default"),
                    tokens=req.tokens_done,
-                   admitted=req.t_admit is not None)
+                   admitted=req.t_admit is not None,
+                   hedge_loser=bool(getattr(req, "hedge_loser", False)))
     if eng.on_retire is not None:
         eng.on_retire(req)
 

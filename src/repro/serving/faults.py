@@ -1,0 +1,356 @@
+"""Seeded, deterministic fault injection for the serving fleet.
+
+The paper's premise — a late answer is a lost reward — is sharpest when
+an engine *fails*: nothing is later than an answer from a crashed
+engine.  This module injects failures into the serving stack on the same
+``core.latency`` analytic clock every engine already advances, so a
+fault schedule is as replayable as the traffic that runs under it:
+identical ``(plan seed, traffic seed)`` must produce identical event
+sequences, retirements, and emitted tokens (a tested property).
+
+Fault model — four kinds, each a window ``[t, t + duration_s)`` in
+analytic-clock seconds on one engine:
+
+* ``"crash"`` — the engine loses all volatile state: every in-flight
+  request is reclaimed (pages freed, shared references dropped, lanes
+  cleared) and the engine's clock jumps to the end of the down window
+  (restart time).  Reclaimed requests go to the crash handler — the
+  default re-queues them on the same engine for a full redo; the
+  ``FleetRouter`` overrides this to re-route across the fleet; the
+  :func:`strand` handler models the naive baseline that simply loses
+  them.
+* ``"stall"`` — a straggler: the engine freezes for the window (its
+  clock jumps over it, making no progress) but keeps its state.  In
+  flight requests survive, just late.  Routers detect the unresponsive
+  window via :meth:`FaultInjector.dead_window` and open a circuit
+  breaker.
+* ``"slowdown"`` — transient thermal/contention slowdown: every clock
+  charge inside the window is multiplied by ``factor`` (> 1).  Engines
+  route charges through ``_charge`` which consults
+  :meth:`EngineFaultView.scale`; outside any window the scale is exactly
+  1.0, so un-faulted runs stay bit-identical.
+* ``"page_pressure"`` — an external tenant squeezes the KV pool: up to
+  ``pages`` free pages are seized for the window (returned at its end).
+  On the analytic (slot-based) path the same fault seizes ``slots``
+  decode slots instead.
+
+Faults *fire* at engine step boundaries — the first scheduling boundary
+at or after the fault's ``t`` (charges are atomic; a decode step never
+tears in half).  Window *queries* (is the engine responsive at ``t``?)
+are pure functions of the plan, independent of how the engine was
+driven, which is what keeps detection deterministic regardless of drive
+granularity.
+
+Engine protocol (both ``ContinuousBatcher`` and ``ContinuousEngine``
+implement it): ``t`` (the clock), ``reclaim_in_flight()``,
+``requeue(req)``, ``apply_pressure(fault) -> token`` /
+``release_pressure(token)``, and a ``faults`` attribute holding the
+:class:`EngineFaultView` this module hands out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.obs import trace as tr_mod
+
+CRASH = "crash"
+STALL = "stall"
+SLOWDOWN = "slowdown"
+PAGE_PRESSURE = "page_pressure"
+KINDS = (CRASH, STALL, SLOWDOWN, PAGE_PRESSURE)
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Fault:
+    """One scheduled fault on one engine (see module docstring for the
+    per-kind semantics of the extra fields)."""
+    t: float                   # analytic-clock start
+    engine_idx: int
+    kind: str
+    duration_s: float = 0.0    # window length (crash/stall/slowdown/pressure)
+    factor: float = 1.0        # slowdown: clock-charge multiplier (> 1)
+    pages: int = 0             # page_pressure: pool pages seized (paged path)
+    slots: int = 0             # page_pressure: decode slots seized (analytic)
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+        assert self.duration_s >= 0.0, self.duration_s
+
+    @property
+    def end(self) -> float:
+        return self.t + self.duration_s
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, time-sorted fault schedule for a fleet."""
+    faults: Tuple[Fault, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults",
+                           tuple(sorted(self.faults)))
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    def for_engine(self, idx: int) -> Tuple[Fault, ...]:
+        return tuple(f for f in self.faults if f.engine_idx == idx)
+
+    def by_kind(self, kind: str) -> Tuple[Fault, ...]:
+        return tuple(f for f in self.faults if f.kind == kind)
+
+
+def _merge(windows: List[Tuple[float, float]]) -> List[Tuple[float, float]]:
+    """Union of half-open intervals, sorted and coalesced."""
+    out: List[Tuple[float, float]] = []
+    for s, e in sorted(windows):
+        if out and s <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], e))
+        else:
+            out.append((s, e))
+    return out
+
+
+def generate_plan(n_engines: int, horizon_s: float, *, seed: int = 0,
+                  warmup_s: float = 0.0,
+                  crash_rate: float = 0.0,
+                  crash_down_s: Tuple[float, float] = (2.0, 6.0),
+                  stall_rate: float = 0.0,
+                  stall_s: Tuple[float, float] = (1.0, 4.0),
+                  slowdown_rate: float = 0.0,
+                  slowdown_s: Tuple[float, float] = (2.0, 6.0),
+                  slowdown_factor: Tuple[float, float] = (1.5, 4.0),
+                  pressure_rate: float = 0.0,
+                  pressure_s: Tuple[float, float] = (2.0, 6.0),
+                  pressure_pages: Tuple[int, int] = (8, 32),
+                  pressure_slots: Tuple[int, int] = (1, 2),
+                  ) -> FaultPlan:
+    """Draw a Poisson fault schedule.  Rates are events per analytic
+    second per engine; windows start in ``[warmup_s, horizon_s)``.  The
+    draw order is fixed (engine-major, kind-minor), so one seed fully
+    determines the plan."""
+    rng = np.random.default_rng(seed)
+    faults: List[Fault] = []
+
+    def _arrivals(rate: float) -> List[float]:
+        if rate <= 0.0:
+            return []
+        out, t = [], warmup_s
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= horizon_s:
+                return out
+            out.append(t)
+
+    for idx in range(n_engines):
+        for t in _arrivals(crash_rate):
+            faults.append(Fault(t, idx, CRASH,
+                                duration_s=float(rng.uniform(*crash_down_s))))
+        for t in _arrivals(stall_rate):
+            faults.append(Fault(t, idx, STALL,
+                                duration_s=float(rng.uniform(*stall_s))))
+        for t in _arrivals(slowdown_rate):
+            faults.append(Fault(
+                t, idx, SLOWDOWN,
+                duration_s=float(rng.uniform(*slowdown_s)),
+                factor=float(rng.uniform(*slowdown_factor))))
+        for t in _arrivals(pressure_rate):
+            faults.append(Fault(
+                t, idx, PAGE_PRESSURE,
+                duration_s=float(rng.uniform(*pressure_s)),
+                pages=int(rng.integers(pressure_pages[0],
+                                       pressure_pages[1] + 1)),
+                slots=int(rng.integers(pressure_slots[0],
+                                       pressure_slots[1] + 1))))
+    return FaultPlan(tuple(faults))
+
+
+def reset_attempt(req):
+    """A fresh attempt of a reclaimed request: identity and the original
+    absolute deadline survive (``fresh`` copies ``t_arrive`` +
+    ``deadline_s``), lifecycle state clears, and the attempt counter
+    advances.  Because prompts are rid-seeded and the sampler keys every
+    draw by ``(seed, stream, rid, position)``, the redo emits
+    byte-identical tokens — recovery is a correctness property."""
+    r = req.fresh()
+    r.retries = req.retries + 1
+    r.hedged = req.hedged
+    return r
+
+
+def strand(idx: int, eng, fault: Fault, reclaimed: Sequence,
+           t_detect: float) -> None:
+    """The naive crash handler: reclaimed requests are simply lost.
+    They retire as drops (so accounting still closes — stranded work is
+    a failure, not a dangling request) and are never retried."""
+    from repro.serving.continuous import retire_dropped
+    for r in reclaimed:
+        retire_dropped(eng, r)
+
+
+class EngineFaultView:
+    """The per-engine handle an engine holds as ``self.faults``.  Falsy
+    when the engine has no scheduled faults, so ``if self.faults:``
+    guards cost one truthiness check on the clean path."""
+
+    def __init__(self, injector: "FaultInjector", idx: int):
+        self.injector = injector
+        self.idx = idx
+        mine = injector.plan.for_engine(idx)
+        self._has_faults = len(mine) > 0
+        self._slow = tuple(f for f in mine if f.kind == SLOWDOWN)
+
+    def __bool__(self) -> bool:
+        return self._has_faults
+
+    def scale(self, t: float) -> float:
+        """Clock-charge multiplier at ``t`` (1.0 outside windows).  Hot —
+        consulted by every ``_charge`` — so it scans a cached per-engine
+        slowdown list instead of the full plan."""
+        if not self._slow:
+            return 1.0
+        s = 1.0
+        for f in self._slow:
+            if f.t <= t < f.end:
+                s *= f.factor
+        return s
+
+    def tick(self, eng) -> None:
+        """Fire every fault due at the engine's current boundary and
+        release expired pressure seizures.  Engines call this at the top
+        of every scheduling boundary (``_admit``)."""
+        self.injector._tick(self.idx, eng)
+
+
+class FaultInjector:
+    """Replays a :class:`FaultPlan` against live engines and answers
+    pure window queries for routers.
+
+    ``on_crash(idx, eng, fault, reclaimed, t_detect)`` decides what
+    happens to the requests a crash reclaimed (``t_detect`` is the firing
+    boundary, before the engine clock jumps over the dead window); the
+    default re-queues each (via
+    :func:`reset_attempt`) on the same engine.  A router installs its
+    own handler to re-route across the fleet; :func:`strand` models the
+    naive fleet that loses them.
+    """
+
+    def __init__(self, plan: FaultPlan, *, tracer=None,
+                 on_crash: Optional[Callable] = None):
+        self.plan = plan
+        self.tr = tracer or tr_mod.NULL
+        self.on_crash = on_crash
+        self._pending: Dict[int, List[Fault]] = {}
+        self._dead: Dict[int, List[Tuple[float, float]]] = {}
+        for f in plan.faults:
+            self._pending.setdefault(f.engine_idx, []).append(f)
+        for idx, fs in self._pending.items():
+            fs.sort()
+            self._dead[idx] = _merge([(f.t, f.end) for f in fs
+                                      if f.kind in (CRASH, STALL)])
+        #: faults in firing order — the determinism property's witness
+        self.fired: List[Fault] = []
+        #: live page/slot seizures: (fault, engine, token)
+        self._seized: List[Tuple[Fault, object, object]] = []
+
+    # -- wiring ---------------------------------------------------------------
+
+    def view(self, idx: int) -> EngineFaultView:
+        return EngineFaultView(self, idx)
+
+    def attach(self, engines: Sequence) -> None:
+        """Hand each engine its fault view (``eng.faults``)."""
+        for idx, eng in enumerate(engines):
+            eng.faults = self.view(idx)
+
+    # -- pure window queries (independent of drive granularity) --------------
+
+    def _covering(self, idx: int, t: float, kind: str) -> List[Fault]:
+        return [f for f in self.plan.for_engine(idx)
+                if f.kind == kind and f.t <= t < f.end]
+
+    def scale(self, idx: int, t: float) -> float:
+        s = 1.0
+        for f in self._covering(idx, t, SLOWDOWN):
+            s *= f.factor
+        return s
+
+    def dead_window(self, idx: int, t: float
+                    ) -> Optional[Tuple[float, float]]:
+        """The merged crash/stall window covering ``t``, if any — what a
+        router's health scan sees as "unresponsive since ``start``"."""
+        for s, e in self._dead.get(idx, ()):
+            if s <= t < e:
+                return (s, e)
+            if s > t:
+                break
+        return None
+
+    def responsive(self, idx: int, t: float) -> bool:
+        return self.dead_window(idx, t) is None
+
+    def down_until(self, idx: int, t: float) -> Optional[float]:
+        """End of the *crash* window covering ``t`` (None if up)."""
+        ends = [f.end for f in self._covering(idx, t, CRASH)]
+        return max(ends) if ends else None
+
+    # -- firing ---------------------------------------------------------------
+
+    def _emit(self, f: Fault, t: float) -> None:
+        if self.tr:
+            args = {"engine_idx": f.engine_idx, "fault": f.kind,
+                    "scheduled_t": f.t, "duration_s": f.duration_s}
+            if f.kind == SLOWDOWN:
+                args["factor"] = f.factor
+            if f.kind == PAGE_PRESSURE:
+                args["pages"] = f.pages
+                args["slots"] = f.slots
+            self.tr.instant(tr_mod.FAULT_INJECT, t, track="faults", **args)
+
+    def _crash(self, idx: int, eng, f: Fault) -> None:
+        reclaimed = eng.reclaim_in_flight()
+        t_detect = eng.t           # firing boundary, *before* the dead jump
+        eng.t = max(eng.t, f.end)
+        handler = self.on_crash or self._requeue_same_engine
+        handler(idx, eng, f, reclaimed, t_detect)
+
+    def _requeue_same_engine(self, idx: int, eng, f: Fault,
+                             reclaimed: Sequence, t_detect: float) -> None:
+        for r in reclaimed:
+            r2 = reset_attempt(r)
+            if self.tr:
+                self.tr.instant(tr_mod.REQ_REQUEUE, t_detect, track="router",
+                                rid=r.rid, cls=r.cls_name, from_engine=idx,
+                                attempt=r2.retries, tokens_done=r.tokens_done)
+            eng.requeue(r2)
+
+    def _tick(self, idx: int, eng) -> None:
+        # release pressure seizures whose window ended
+        for entry in [s for s in self._seized
+                      if s[0].engine_idx == idx and s[0].end <= eng.t]:
+            self._seized.remove(entry)
+            entry[1].release_pressure(entry[2])
+        due = self._pending.get(idx)
+        while due and due[0].t <= eng.t:
+            f = due.pop(0)
+            self.fired.append(f)
+            self._emit(f, eng.t)
+            if f.kind == CRASH:
+                # A window the engine *skipped over* while idle (a routed-
+                # around breaker, a drain horizon past the window) held no
+                # volatile state: the crash already happened and healed
+                # with nothing to lose.  Firing it against work dispatched
+                # after recovery would kill requests the fault never saw.
+                if eng.t < f.end:
+                    self._crash(idx, eng, f)
+            elif f.kind == STALL:
+                eng.t = max(eng.t, f.end)   # frozen: no progress, no loss
+            elif f.kind == PAGE_PRESSURE:
+                if f.end > eng.t:
+                    token = eng.apply_pressure(f)
+                    if token is not None:
+                        self._seized.append((f, eng, token))
+            # SLOWDOWN needs no action: _charge consults scale() purely

@@ -38,6 +38,7 @@ from repro.core.latency import Hardware, V5E
 from repro.core import latency as lat_mod
 
 from repro.obs import trace as tr_mod
+from repro.serving import faults as faults_mod
 from repro.serving.continuous import ContinuousBatcher, LatencyProfile
 from repro.serving.traffic import SimRequest
 
@@ -144,15 +145,45 @@ def _no_prefix(req) -> int:
     return 0
 
 
+@dataclasses.dataclass
+class EngineHealth:
+    """Circuit-breaker state for one engine.  ``up`` (breaker closed) is
+    the routable state; an open breaker records why it opened, since
+    when, and the exponential-backoff probe schedule that will close it."""
+    up: bool = True
+    reason: Optional[str] = None         # "crash" | "stall" while down
+    down_since: Optional[float] = None
+    next_probe: Optional[float] = None
+    backoff_s: float = 0.0
+
+
 class FleetRouter:
-    """Dispatch + feedback loop over a pool of continuous batchers."""
+    """Dispatch + feedback loop over a pool of continuous batchers.
+
+    With a :class:`~repro.serving.faults.FaultInjector` attached the
+    router is also the fleet's failure domain: crashes push a reclaim
+    callback (in-flight work restarts token-identically on the healthy
+    remainder), stalls are pulled by a heartbeat scan that opens a
+    circuit breaker after ``stall_timeout_s`` of silence, open breakers
+    probe with exponential backoff, and (optionally) requests stuck in a
+    queue longer than a p99-derived delay are hedged — duplicated onto a
+    second engine, first finisher wins, loser torn down mid-decode by
+    the barge-in path."""
+
+    #: cadence of health/hedge sweeps once arrivals stop (simulated s)
+    _SCAN_SLICE_S = 0.025
 
     def __init__(self, candidates: Sequence[Candidate], *,
                  quality: Callable[[Candidate], float],
                  slots: int = 4, policy: str = "degrade",
                  mode: str = "fpx", epsilon: float = 0.1, seed: int = 0,
                  hw: Hardware = V5E, engines: Optional[Sequence] = None,
-                 tracer=None):
+                 tracer=None, injector=None,
+                 stall_timeout_s: float = 0.25,
+                 probe_backoff_s: float = 0.5,
+                 hedge: bool = False,
+                 hedge_delay_s: Optional[float] = None,
+                 recover: bool = True):
         """``engines``: optional pre-built engine per candidate — anything
         speaking the batcher interface (``submit / drain / backlog_s /
         profile / on_retire``), e.g. live paged
@@ -165,7 +196,22 @@ class FleetRouter:
         ``eng<i>:<model>-g<gamma>`` so one fleet trace carries every
         engine's lanes and pool as its own Perfetto process.  Pre-built
         ``engines`` keep whatever tracer they were constructed with.
-        None = the zero-overhead null tracer."""
+        None = the zero-overhead null tracer.
+
+        ``injector``: a :class:`~repro.serving.faults.FaultInjector`; the
+        router attaches it to the engines and installs itself as the
+        crash handler (reclaimed work re-routes across the fleet).
+
+        ``hedge`` / ``hedge_delay_s``: enable hedged dispatch.  An
+        explicit delay is used as-is; with ``hedge=True`` alone the
+        delay is learned online as the p99 of observed request latencies
+        (no hedging until 16 samples exist — hedging against a tail you
+        have not measured is just doubling load).
+
+        ``recover``: with ``False`` the fleet still detects crashes and
+        opens breakers, but reclaimed in-flight work is *stranded*
+        (dropped) instead of re-dispatched — the naive baseline the
+        fault benchmark compares recovery against."""
         assert mode in ("fpx", "bandit"), mode
         self.cands = list(candidates)
         self.quality = quality
@@ -195,6 +241,20 @@ class FleetRouter:
                 e.on_retire = self._retire
         self.selectors: Dict[str, OnlineSelector] = {}
         self.retired: List[SimRequest] = []
+        # -- failure handling -----------------------------------------------
+        self.injector = injector
+        self.health = [EngineHealth() for _ in self.engines]
+        self.stall_timeout_s = stall_timeout_s
+        self.probe_backoff_s = probe_backoff_s
+        self.hedge_enabled = hedge or hedge_delay_s is not None
+        self.hedge_delay_s = hedge_delay_s
+        #: rid -> {attempts, done, t_disp} while any attempt is in flight
+        self._flights: Dict[int, Dict] = {}
+        self._lat_samples: List[float] = []
+        if injector is not None:
+            injector.attach(self.engines)
+            injector.on_crash = (self._on_crash if recover
+                                 else self._on_crash_strand)
 
     # -- feedback -----------------------------------------------------------
 
@@ -208,6 +268,44 @@ class FleetRouter:
         return sel
 
     def _retire(self, req: SimRequest) -> None:
+        """Engine retirement callback: one *attempt* ended.  Unhedged rids
+        account directly; hedged rids wait until every attempt lands,
+        then resolve to a single winner."""
+        fl = self._flights.get(req.rid)
+        if fl is None:
+            self._account(req)
+            return
+        fl["done"].append(req)
+        if (len(fl["attempts"]) > 1 and len(fl["done"]) == 1
+                and not req.dropped and not req.cancelled):
+            # first clean finisher: barge in on the still-running sibling
+            # (retires via the engines' cancel sweep, pages reclaimed)
+            for sib in fl["attempts"]:
+                if sib is not req and sib.t_finish is None:
+                    sib.t_cancel = req.t_finish
+                    sib.hedge_loser = True
+        if len(fl["done"]) >= len(fl["attempts"]):
+            self._resolve_flight(req.rid, fl)
+
+    def _resolve_flight(self, rid: int, fl: Dict) -> None:
+        """Every attempt of a hedged rid has retired: pick the winner —
+        the earliest *clean* finish, falling back to earliest anything —
+        and account the rid exactly once, by that attempt.  Losers are
+        flagged so metrics exclude them from per-request tallies."""
+        del self._flights[rid]
+        done = fl["done"]
+        if len(done) == 1:
+            self._account(done[0])
+            return
+        clean = [a for a in done if not a.cancelled and not a.dropped]
+        win = min(clean or done, key=lambda a: a.t_finish)
+        for a in done:
+            a.hedge_loser = a is not win
+            if a is not win:
+                self.retired.append(a)
+        self._account(win)
+
+    def _account(self, req: SimRequest) -> None:
         """Realized reward: quality earned only by on-time tokens (goodput
         semantics — a late or dropped action is worth nothing)."""
         cand = self.cands[req.engine_idx]
@@ -218,16 +316,157 @@ class FleetRouter:
             req.reward = 0.0
         self._selector(req.cls_name).update(req.engine_idx, req.reward)
         self.retired.append(req)
+        if not req.dropped and req.latency_s is not None:
+            self._lat_samples.append(req.latency_s)
         if self.tr:
             self.tr.instant(tr_mod.ROUTE_RETIRE, req.t_finish,
                             track="router", rid=req.rid, cls=req.cls_name,
                             engine_idx=req.engine_idx, reward=req.reward,
                             dropped=req.dropped)
 
+    # -- failure detection + recovery ---------------------------------------
+
+    def _mark_down(self, idx: int, t: float, reason: str,
+                   in_flight: int) -> None:
+        h = self.health[idx]
+        h.up = False
+        h.reason = reason
+        h.down_since = t
+        h.backoff_s = self.probe_backoff_s
+        h.next_probe = t + h.backoff_s
+        if self.tr:
+            self.tr.instant(tr_mod.ENGINE_DOWN, t, track="router",
+                            engine_idx=idx, reason=reason,
+                            in_flight=in_flight)
+
+    def _on_crash(self, idx: int, eng, fault, reclaimed: Sequence,
+                  t_detect: float) -> None:
+        """Injector crash handler: engine ``idx`` lost its volatile state.
+        Reclaimed requests — decoding lanes *and* the queue that died
+        with the process — restart as fresh attempts on the rest of the
+        fleet.  Because prompts are rid-seeded and the sampler keys every
+        draw by (seed, stream, rid, position), each redo emits tokens
+        byte-identical to the attempt that died: recovery is exact, not
+        best-effort."""
+        if self.health[idx].up:
+            self._mark_down(idx, t_detect, "crash", len(reclaimed))
+        for r in reclaimed:
+            fl = self._flights.get(r.rid)
+            if fl is not None:
+                # identity, not ==: sibling attempts of one rid can be
+                # value-equal while queued
+                fl["attempts"] = [a for a in fl["attempts"] if a is not r]
+                fl["t_disp"].pop(id(r), None)
+                if fl["done"]:
+                    # a sibling already answered this rid — the crashed
+                    # duplicate is moot; resolve if it was the last one out
+                    if len(fl["done"]) >= len(fl["attempts"]):
+                        self._resolve_flight(r.rid, fl)
+                    continue
+            r2 = faults_mod.reset_attempt(r)
+            if self.tr:
+                self.tr.instant(tr_mod.REQ_REQUEUE, t_detect,
+                                track="router", rid=r.rid, cls=r.cls_name,
+                                from_engine=idx, attempt=r2.retries,
+                                tokens_done=r.tokens_done)
+            self.dispatch(r2, now=t_detect, exclude=(idx,))
+
+    def _on_crash_strand(self, idx: int, eng, fault, reclaimed: Sequence,
+                         t_detect: float) -> None:
+        """``recover=False`` crash handler: same detection (the breaker
+        still opens, routing still steers around the outage) but the
+        reclaimed work is dropped on the floor — what a fleet without
+        token-exact recovery loses to the same fault schedule."""
+        if self.health[idx].up:
+            self._mark_down(idx, t_detect, "crash", len(reclaimed))
+        faults_mod.strand(idx, eng, fault, reclaimed, t_detect)
+
+    def _health_scan(self, t: float) -> None:
+        """Stall detection + breaker probing.  Crashes are *pushed* by the
+        injector the moment they fire; stalls are *pulled* — an engine
+        inside a dead window answers no heartbeat, and after
+        ``stall_timeout_s`` of silence the breaker opens (state survives
+        a stall, so nothing is reclaimed — the engine just stops taking
+        new work).  Open breakers probe with exponential backoff and
+        close on the first response."""
+        if self.injector is None:
+            return
+        for i, h in enumerate(self.health):
+            if h.up:
+                win = self.injector.dead_window(i, t)
+                if win is not None and t - win[0] >= self.stall_timeout_s:
+                    self._mark_down(i, t, "stall",
+                                    self.engines[i]._n_active())
+            elif h.next_probe is not None and t >= h.next_probe:
+                if self.injector.responsive(i, t):
+                    if self.tr:
+                        self.tr.instant(tr_mod.ENGINE_UP, t,
+                                        track="router", engine_idx=i,
+                                        down_s=t - h.down_since)
+                    self.health[i] = EngineHealth()
+                else:
+                    h.backoff_s *= 2.0
+                    h.next_probe = t + h.backoff_s
+
+    def _hedge_delay(self) -> Optional[float]:
+        if self.hedge_delay_s is not None:
+            return self.hedge_delay_s
+        if len(self._lat_samples) < 16:
+            return None
+        return float(np.quantile(np.asarray(self._lat_samples), 0.99))
+
+    def _hedge_scan(self, t: float) -> None:
+        """Tail-latency insurance: a dispatched request still *queued*
+        (never admitted) ``delay`` seconds later is probably behind a
+        stall the breaker has not caught yet or a backlog estimate that
+        aged badly.  Launch one duplicate attempt on a different engine;
+        the first finisher wins, the other is torn down by the barge-in
+        path and flagged ``hedge_loser`` so the rid counts once."""
+        if not self.hedge_enabled:
+            return
+        delay = self._hedge_delay()
+        if delay is None:
+            return
+        for rid, fl in list(self._flights.items()):
+            if len(fl["attempts"]) != 1 or fl["done"]:
+                continue                    # already hedged / resolving
+            a = fl["attempts"][0]
+            if (a.t_admit is not None or a.t_finish is not None
+                    or a.deadline_abs <= t
+                    or t - fl["t_disp"][id(a)] < delay):
+                continue
+            clone = a.fresh()
+            clone.retries = a.retries
+            a.hedged = clone.hedged = True
+            if self.tr:
+                self.tr.instant(tr_mod.ROUTE_HEDGE, t, track="router",
+                                rid=rid, cls=a.cls_name,
+                                primary_engine=a.engine_idx,
+                                waited_s=t - fl["t_disp"][id(a)])
+            self.dispatch(clone, now=t, exclude=(a.engine_idx,))
+
     # -- dispatch -----------------------------------------------------------
 
-    def dispatch(self, req: SimRequest) -> int:
-        waits = [e.backlog_s(req.t_arrive) for e in self.engines]
+    def dispatch(self, req: SimRequest, *, now: Optional[float] = None,
+                 exclude: Sequence[int] = ()) -> int:
+        """Route one request (or one recovery / hedge attempt).
+
+        ``now`` defaults to the request's arrival; crash re-dispatch and
+        hedging pass detection time instead, so feasibility is judged on
+        the budget *remaining* — the deadline clock does not restart on
+        retry.  ``exclude`` removes engines from consideration (the
+        crashed source, the hedged primary); open circuit breakers are
+        excluded automatically, falling back to the full pool when
+        nothing is routable rather than deadlocking."""
+        now = req.t_arrive if now is None else now
+        budget_s = req.deadline_abs - now
+        avail = [i for i in range(len(self.engines))
+                 if self.health[i].up and i not in exclude]
+        if not avail:
+            avail = [i for i in range(len(self.engines))
+                     if i not in exclude] or list(range(len(self.engines)))
+        engines = [self.engines[i] for i in avail]
+        waits = [e.backlog_s(now) for e in engines]
         # prefix-aware service estimates: an engine holding this prompt's
         # prefix warm (cached_prefix_len > 0) skips that span's prefill,
         # so its estimate drops by the resume discount — session turns
@@ -235,9 +474,9 @@ class FleetRouter:
         # without the hook (or without a warm prefix) keep the historical
         # estimate exactly.
         cached = [getattr(e, "cached_prefix_len", _no_prefix)(req)
-                  for e in self.engines]
+                  for e in engines]
         lats = []
-        for e, l in zip(self.engines, cached):
+        for e, l in zip(engines, cached):
             t = e.profile.service_s(req.prompt_len, req.max_new)
             if l:
                 t -= (e.profile.prefill_s(req.prompt_len)
@@ -250,47 +489,80 @@ class FleetRouter:
         # completion-deadline rule decides alone rather than deadlocking.
         ok = None
         if req.ttft_deadline_s is not None:
+            ttft_budget = req.t_arrive + req.ttft_deadline_s - now
             ok = [w + e.profile.prefill_s(req.prompt_len - l, context=l)
-                  + e.profile.tok_s(1, req.prompt_len + 1)
-                  <= req.ttft_deadline_s
-                  for e, w, l in zip(self.engines, waits, cached)]
+                  + e.profile.tok_s(1, req.prompt_len + 1) <= ttft_budget
+                  for e, w, l in zip(engines, waits, cached)]
             if not any(ok):
                 ok = None
         if self.mode == "bandit":
-            fits = [w + t <= req.deadline_s for w, t in zip(waits, lats)]
-            if ok is not None:
-                fits = [f and o for f, o in zip(fits, ok)]
-            idx = self._selector(req.cls_name).choose(waits, feasible=fits)
+            n = len(self.engines)
+            full_waits = [float("inf")] * n
+            feasible = [False] * n
+            for j, i in enumerate(avail):
+                full_waits[i] = waits[j]
+                feasible[i] = (waits[j] + lats[j] <= budget_s
+                               and (ok is None or ok[j]))
+            idx = self._selector(req.cls_name).choose(full_waits,
+                                                      feasible=feasible)
+            j = avail.index(idx)
         else:
-            cands = [dataclasses.replace(c, latency_s=t)
-                     for c, t in zip(self.cands, lats)]
-            if ok is not None:
-                sub = [i for i, o in enumerate(ok) if o]
-                pick = fpx.select_for_slack([cands[i] for i in sub],
-                                            req.deadline_s,
-                                            [waits[i] for i in sub],
-                                            self.quality)
-                idx = sub[pick]
-            else:
-                idx = fpx.select_for_slack(cands, req.deadline_s, waits,
-                                           self.quality)
+            sub = (list(range(len(avail))) if ok is None
+                   else [i for i, o in enumerate(ok) if o])
+            cands = [dataclasses.replace(self.cands[avail[i]],
+                                         latency_s=lats[i]) for i in sub]
+            pick = fpx.select_for_slack(cands, budget_s,
+                                        [waits[i] for i in sub],
+                                        self.quality)
+            j = sub[pick]
+            idx = avail[j]
         req.engine_idx = idx
         if self.tr:
-            self.tr.instant(tr_mod.ROUTE_DISPATCH, req.t_arrive,
+            self.tr.instant(tr_mod.ROUTE_DISPATCH, now,
                             track="router", rid=req.rid, cls=req.cls_name,
-                            engine_idx=idx, cached=cached[idx])
+                            engine_idx=idx, cached=cached[j],
+                            attempt=req.retries)
+        if self.hedge_enabled:
+            fl = self._flights.get(req.rid)
+            if fl is None:
+                fl = self._flights[req.rid] = {"attempts": [], "done": [],
+                                               "t_disp": {}}
+            if not any(a is req for a in fl["attempts"]):
+                fl["attempts"].append(req)
+            fl["t_disp"][id(req)] = now
         self.engines[idx].submit(req)
         return idx
 
     # -- simulation ---------------------------------------------------------
 
     def run(self, arrivals: Sequence[SimRequest]) -> List[SimRequest]:
-        """Replay a time-ordered arrival stream through the fleet and drain
-        it; returns every retired request (completed and dropped)."""
+        """Replay a time-ordered arrival stream through the fleet and
+        drain it; returns every retired request — completed, dropped, and
+        hedge losers (filter ``hedge_loser`` for per-request accounting).
+        Between arrivals — and on a fixed ``_SCAN_SLICE_S`` cadence once
+        they stop — the router sweeps health (stall breakers, recovery
+        probes) and hedges stuck work, so detection latency stays bounded
+        even when no new traffic arrives to trigger a sweep."""
         for req in arrivals:
+            t = req.t_arrive
             for eng in self.engines:
-                eng.drain(until=req.t_arrive)
+                eng.drain(until=t)
+            self._health_scan(t)
+            self._hedge_scan(t)
             self.dispatch(req)
-        for eng in self.engines:
-            eng.drain()
+        if self.injector is None and not self.hedge_enabled:
+            for eng in self.engines:
+                eng.drain()
+            return self.retired
+        t = max((e.t for e in self.engines), default=0.0)
+        for _ in range(1_000_000):
+            if not any(e.pending or e._n_active() for e in self.engines):
+                break
+            t += self._SCAN_SLICE_S
+            for eng in self.engines:
+                eng.drain(until=t)
+            self._health_scan(t)
+            self._hedge_scan(t)
+        else:
+            raise RuntimeError("fleet failed to quiesce")
         return self.retired

@@ -98,6 +98,10 @@ DUMMY_PAGE = 0
 #: pool trace events (it holds pages but has no lane or reservation)
 CACHE_SLOT = -1
 
+#: pseudo-slot id fault-injected page-pressure seizures are emitted under
+#: (an "external tenant" squeezing the pool; see serving.faults)
+PRESSURE_SLOT = -2
+
 
 class PagedKVCache:
     """Shared per-group page pools + per-slot block tables for one engine."""
@@ -155,6 +159,10 @@ class PagedKVCache:
             self.block_tables[g.name] = np.full(
                 (slots, self.table_width), DUMMY_PAGE, np.int32)
         self.pos = np.zeros((slots,), np.int32)
+        #: per group: pages currently seized by fault-injected pressure
+        #: (see :meth:`seize`) — outside the slot reservation arrays
+        #: because the "holder" is no lane
+        self._pressure: Dict[str, int] = {g.name: 0 for g in self.groups}
         #: observability: every page transition is emitted through here
         #: once an engine binds its tracer + clock (NULL = no overhead)
         self.tr = tr_mod.NULL
@@ -433,6 +441,65 @@ class PagedKVCache:
     def refcount(self, group: str, page: int) -> int:
         """Current reference count of a physical page (0 = free)."""
         return int(self._refcount[group][page])
+
+    # -- fault-injected page pressure ----------------------------------------
+
+    def seize(self, n: int) -> List[Tuple[str, int]]:
+        """Seize up to ``n`` free pages for an external cause (the
+        fault injector's ``page_pressure`` windows) — each leaves the
+        free list with refcount 1 under the :data:`PRESSURE_SLOT` pseudo
+        holder, so ``available``/``can_admit`` see a genuinely smaller
+        pool while conservation still closes.  Only *available* pages are
+        taken (never pages promised to live slots' reservations — lazy
+        window allocation and CoW must stay deadlock-free), so the actual
+        seizure may fall short of ``n``.  Returns the (group, page) pairs
+        taken; hand them back via :meth:`restore`."""
+        taken: List[Tuple[str, int]] = []
+        for g in self.groups:
+            grabbed: List[int] = []
+            # available() already sees the pops (the free list shrinks)
+            while len(taken) + len(grabbed) < n and self.available(g) > 0:
+                page = self._free[g.name].pop()
+                assert self._refcount[g.name][page] == 0, (g.name, page)
+                grabbed.append(page)
+            if not grabbed:
+                continue
+            self._pressure[g.name] += len(grabbed)
+            if self.tr:
+                self.tr.instant(tr_mod.PAGE_RESERVE, self._clock(),
+                                track="pool", group=g.name,
+                                slot=PRESSURE_SLOT,
+                                pages=self._pressure[g.name])
+            for page in grabbed:
+                self._refcount[g.name][page] = 1
+                taken.append((g.name, page))
+                if self.tr:
+                    self.tr.instant(tr_mod.PAGE_ALLOC, self._clock(),
+                                    track="pool", group=g.name, page=page,
+                                    slot=PRESSURE_SLOT)
+        return taken
+
+    def restore(self, taken: List[Tuple[str, int]]) -> None:
+        """Return a :meth:`seize` batch to the free lists (the pressure
+        window ended)."""
+        touched = set()
+        for name, page in taken:
+            assert self._refcount[name][page] == 1, (name, page)
+            self._refcount[name][page] = 0
+            self._free[name].append(page)
+            self._pressure[name] -= 1
+            touched.add(name)
+            if self.tr:
+                self.tr.instant(tr_mod.PAGE_FREE, self._clock(),
+                                track="pool", group=name, page=page,
+                                slot=PRESSURE_SLOT, refs=0,
+                                mid_flight=False)
+        if self.tr:
+            for name in sorted(touched):
+                self.tr.instant(tr_mod.PAGE_RESERVE, self._clock(),
+                                track="pool", group=name,
+                                slot=PRESSURE_SLOT,
+                                pages=self._pressure[name])
 
     # -- prefix sharing ------------------------------------------------------
 

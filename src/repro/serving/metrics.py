@@ -48,6 +48,13 @@ class SLOReport:
     cancelled: int = 0
     #: met_ttft / requests carrying a ttft_deadline_s (nan when none do)
     ttft_hit_rate: float = float("nan")
+    # -- failure recovery: attempts vs requests ---------------------------
+    #: requests that survived >= 1 engine crash (re-dispatched attempts);
+    #: counted once per request, by the attempt that finally retired
+    retried: int = 0
+    #: requests that had a duplicate attempt launched (hedged dispatch);
+    #: again once per request — losing attempts never enter the tallies
+    hedged: int = 0
     itl_p50_s: float = float("nan")    # per-request mean inter-token latency
     itl_p99_s: float = float("nan")
     # -- slack attribution: mean seconds per served request ---------------
@@ -109,6 +116,15 @@ def request_slack(r) -> Dict[str, Optional[float]]:
 
 def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
               split_classes: bool = True) -> SLOReport:
+    # Attempt-vs-request accounting: a fleet under failure recovery may
+    # retire *two attempts* of one rid (a hedged pair — the loser is torn
+    # down and flagged).  Every tally below is per request, attributed to
+    # the winning attempt: losers are excluded up front, so ``n`` counts
+    # rids, latency is the winner's, and ``cancelled`` means client
+    # barge-in — not the router cannibalizing its own duplicate.  Crash
+    # retries never double count by construction (a reclaimed attempt is
+    # reclaimed *instead of* retiring) and surface only in ``retried``.
+    reqs = [r for r in reqs if not getattr(r, "hedge_loser", False)]
     done = [r for r in reqs if not r.dropped and r.t_finish is not None]
     lats = [r.latency_s for r in done]
     slacks = [request_slack(r) for r in done]
@@ -130,6 +146,8 @@ def summarize(reqs: Sequence[SimRequest], horizon_s: float, *,
         queue_s=_mean(pick("queue_s")), prefill_s=_mean(pick("prefill_s")),
         decode_s=_mean(pick("decode_s")),
         cancelled=sum(bool(getattr(r, "cancelled", False)) for r in reqs),
+        retried=sum(getattr(r, "retries", 0) > 0 for r in reqs),
+        hedged=sum(bool(getattr(r, "hedged", False)) for r in reqs),
     )
     slod = [r for r in reqs if getattr(r, "ttft_deadline_s", None) is not None]
     if slod:

@@ -265,6 +265,50 @@ class ContinuousEngine:
         self.dropped: List = []
         #: (rid, page ids) per admission — observability for tests/benchmarks
         self.admissions: List[Tuple[int, List[int]]] = []
+        #: fault injection (serving.faults): the per-engine view, or None
+        self.faults = None
+
+    # -- fault-injection protocol (serving.faults) ---------------------------
+
+    def _charge(self, dt: float) -> None:
+        """Advance the clock by ``dt`` engine-seconds, stretched by any
+        active slowdown fault (exactly 1.0x on the clean path, so
+        un-faulted runs stay bit-identical)."""
+        if self.faults:
+            dt *= self.faults.scale(self.t)
+        self.t += dt
+
+    def reclaim_in_flight(self) -> List:
+        """Crash teardown: every lane and queued request leaves the
+        engine.  Lanes drop their page references (private pages return
+        to the free list, shared pages merely unref), and the prefix
+        cache — volatile pool state — is cleared too, so after a crash
+        every page is back on the free list.  The reclaimed requests are
+        returned for the crash handler to requeue, strand, or re-route;
+        they do not retire here."""
+        out: List = []
+        for i, l in enumerate(self.lanes):
+            if l is None:
+                continue
+            self.lanes[i] = None
+            self.cache.free(i)
+            out.append(l.req)
+        if self.prefix is not None:
+            self.prefix.clear()
+        out.extend(self.pending)
+        self.pending = []
+        return out
+
+    def requeue(self, req) -> None:
+        """Accept a recovered attempt without re-emitting its arrival."""
+        self.pending.append(req)
+
+    def apply_pressure(self, fault):
+        taken = self.cache.seize(fault.pages)
+        return taken or None
+
+    def release_pressure(self, token) -> None:
+        self.cache.restore(token)
 
     # -- jit'd model steps ---------------------------------------------------
 
@@ -522,6 +566,8 @@ class ContinuousEngine:
             retire_cancelled(self, l.req)
 
     def _admit(self) -> None:
+        if self.faults:
+            self.faults.tick(self)
         self._sweep_cancels()
         while self._admit_one():
             pass
@@ -578,7 +624,7 @@ class ContinuousEngine:
             self.cache.write_prefill(
                 lane, transformer.raw_prefill_group_kv(self.cfg, raw_cache))
         t0 = self.t
-        self.t += self.profile.prefill_s(S - cached, context=cached)
+        self._charge(self.profile.prefill_s(S - cached, context=cached))
         if self.tr:
             self.tr.span(tr_mod.REQ_PREFILL, t0, self.t,
                          track=f"lane{lane}", rid=req.rid, tokens=S - cached,
@@ -619,7 +665,7 @@ class ContinuousEngine:
             # window — back to the pool mid-flight, before the next event
             self.cache.advance(i, c)
             t0 = self.t
-            self.t += self.profile.prefill_s(c, context=l.absorbed)
+            self._charge(self.profile.prefill_s(c, context=l.absorbed))
             if self.tr:
                 self.tr.span(tr_mod.REQ_PREFILL_CHUNK, t0, self.t,
                              track=f"lane{i}", rid=l.req.rid, chunk=c,
@@ -748,7 +794,7 @@ class ContinuousEngine:
         nxt = np.asarray(next_toks)                  # (slots, 1) int32 only
         t0 = self.t
         ctx = max(l.context for _, l in active)
-        self.t += self.profile.step_s(len(active), ctx)
+        self._charge(self.profile.step_s(len(active), ctx))
         if self.tr:
             self.tr.span(tr_mod.ENGINE_STEP, t0, self.t, track="steps",
                          n_active=len(active), context=ctx,
@@ -811,7 +857,7 @@ class ContinuousEngine:
         n_emit = np.asarray(n_emit)                  # (slots,) int32
         t0 = self.t
         ctx = max(l.context for _, l in active)
-        self.t += self.profile.spec_round_s(len(active), ctx)
+        self._charge(self.profile.spec_round_s(len(active), ctx))
         lane_rids = [l.req.rid for _, l in active]
         if self.tr:
             self.tr.instant(tr_mod.SPEC_DRAFT, t0, track="steps", k=k,

@@ -95,6 +95,17 @@ class SimRequest:
     cancelled: bool = False
     reward: float = 0.0
 
+    # failure-recovery lifecycle (serving.faults / fleet failover)
+    #: attempt number: how many times this request was reclaimed from a
+    #: crashed engine and re-dispatched (0 = first attempt)
+    retries: int = 0
+    #: a duplicate attempt was launched for this rid (set on *both*
+    #: attempts of a hedged pair)
+    hedged: bool = False
+    #: this attempt lost its hedge race and was torn down mid-decode;
+    #: metrics count the rid once, by the winning attempt
+    hedge_loser: bool = False
+
     @property
     def deadline_abs(self) -> float:
         return self.t_arrive + self.deadline_s

@@ -74,9 +74,21 @@ SESSIONS = (["path", "offered", "served", "dropped", "cancelled",
              ["no-sharing", "280", "185", "95", "14", "0.540", "0.620",
               "155.0", "395.0", "1000.0", "148.0", "2080"]])
 
+FAULTS = (["path", "offered", "served", "dropped", "retried", "hedged",
+           "hit_rate", "p99_ms", "goodput", "tokens", "faults_fired"],
+          [["ceiling", "243", "243", "0", "0", "0", "1.000", "4100.0",
+            "250.0", "5660", "0"],
+           ["naive", "243", "226", "17", "0", "0", "0.901", "5350.0",
+            "198.0", "5086", "21"],
+           ["recovering", "243", "235", "8", "13", "0", "0.938", "5790.0",
+            "210.0", "5562", "21"],
+           ["recovering+hedge", "243", "240", "3", "13", "20", "0.963",
+            "3690.0", "209.0", "5628", "21"]])
+
 ALL = {"table_paged.csv": PAGED, "table_chunked.csv": CHUNKED,
        "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID,
-       "table_spec.csv": SPEC, "table_sessions.csv": SESSIONS}
+       "table_spec.csv": SPEC, "table_sessions.csv": SESSIONS,
+       "table_faults.csv": FAULTS}
 
 
 def mutate_spec(mix, arm, column, value):
@@ -126,7 +138,7 @@ def mutate(name, path_key, column, value, key_col="path"):
 
 def test_identical_tables_pass(tmp_path, capsys):
     assert run_gate(tmp_path) == 0
-    assert "6 tables OK" in capsys.readouterr().out
+    assert "7 tables OK" in capsys.readouterr().out
 
 
 def test_within_tolerance_passes(tmp_path):
@@ -275,6 +287,51 @@ def test_sessions_sharing_goodput_below_cold_fails(tmp_path, capsys):
                     base_override=over) == 1
     assert "sharing goodput 140.0 below no-sharing" in \
         capsys.readouterr().err
+
+
+def test_faults_goodput_drift_fails(tmp_path, capsys):
+    over = mutate("table_faults.csv", "recovering", "goodput", "180.0")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "goodput dropped" in capsys.readouterr().err
+
+
+def test_faults_recovery_not_beating_naive_fails(tmp_path, capsys):
+    # drift-clean (fresh == base) but recovery no longer strictly beats
+    # stranding: the claim the table exists to prove is gone
+    over = mutate("table_faults.csv", "recovering", "goodput", "198.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "not strictly above naive" in capsys.readouterr().err
+
+
+def test_faults_row_above_ceiling_fails(tmp_path, capsys):
+    over = mutate("table_faults.csv", "recovering", "goodput", "260.0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "above the fault-free ceiling" in capsys.readouterr().err
+
+
+def test_faults_recovery_dropping_more_fails(tmp_path, capsys):
+    over = mutate("table_faults.csv", "recovering", "dropped", "20")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "more than naive" in capsys.readouterr().err
+
+
+def test_faults_no_retries_fails(tmp_path, capsys):
+    over = mutate("table_faults.csv", "recovering", "retried", "0")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "exercises no recovery" in capsys.readouterr().err
+
+
+def test_faults_missing_row_fails(tmp_path, capsys):
+    def drop_naive(header, rows):
+        return header, [r for r in rows if r[0] != "naive"]
+    assert run_gate(tmp_path,
+                    fresh_override={"table_faults.csv": drop_naive},
+                    base_override={"table_faults.csv": drop_naive}) == 1
+    assert "missing rows" in capsys.readouterr().err
 
 
 def test_hybrid_pool_goodput_ordering_fails(tmp_path, capsys):

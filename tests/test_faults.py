@@ -1,0 +1,380 @@
+"""Fault injection, failover, and token-exact recovery — the PR 9 suite.
+
+The contract under test: a seeded :class:`~repro.serving.faults.FaultPlan`
+replayed against the fleet is deterministic end to end (same (plan seed,
+traffic seed) ⇒ same fired faults, same retirements, same tokens); a
+request killed mid-decode by an injected crash is re-routed and its full
+output is **byte-identical** to an uninterrupted run (rid-seeded prompts
+plus the (seed, stream, rid, position)-keyed sampler make recovery a
+correctness property, not best effort); the router's circuit breaker
+opens on stalls and closes via backoff probes; hedged dispatch retires
+each rid exactly once; and every fault trace passes ``check_trace`` —
+no page leaks through crash reclamation, no unlicensed double
+admissions or double retirements.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import pallas_modes, servable_smoke_configs, smoke_params
+from repro.configs import get_config
+from repro.models.modules import ExecContext
+from repro.obs import trace as tr_mod
+from repro.obs.check_trace import check
+from repro.serving import faults as faults_mod
+from repro.serving import metrics as metrics_mod
+from repro.serving import traffic
+from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.faults import (CRASH, PAGE_PRESSURE, SLOWDOWN, STALL,
+                                  Fault, FaultInjector, FaultPlan,
+                                  generate_plan)
+from repro.serving.fleet import FleetRouter, pool_candidates
+from repro.serving.paged_engine import ContinuousEngine
+
+SERVABLE = servable_smoke_configs()
+DENSE = [(n, c) for n, c in SERVABLE if not c.sliding_window]
+NAME, CFG = DENSE[0]
+
+
+def _eps(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"L{i}.lin{j}": float(rng.uniform(0.05, 0.9))
+            for i in range(cfg.n_layers) for j in range(4)}
+
+
+def _pool(n=2, name="qwen2.5-1.5b", gamma=1.0):
+    cfg = get_config(name)
+    return pool_candidates([(name, cfg, _eps(cfg), gamma)] * n)
+
+
+def _reqs(n, *, deadline=50.0, max_new=8, prompt=24, gap=0.01):
+    return [traffic.SimRequest(rid=i, cls_name="t", t_arrive=i * gap,
+                               prompt_len=prompt, max_new=max_new,
+                               deadline_s=deadline) for i in range(n)]
+
+
+# -- plan generation: seeded determinism (the property the module promises)
+
+@settings(max_examples=15)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_plan_seeded_determinism_and_structure(seed):
+    kw = dict(crash_rate=0.2, stall_rate=0.2, slowdown_rate=0.2,
+              pressure_rate=0.2, warmup_s=1.0)
+    a = generate_plan(3, 20.0, seed=seed, **kw)
+    b = generate_plan(3, 20.0, seed=seed, **kw)
+    assert a == b                            # frozen dataclass equality
+    for f in a.faults:
+        assert 1.0 <= f.t < 20.0
+        assert 0 <= f.engine_idx < 3
+        assert f.kind in faults_mod.KINDS
+        assert f.duration_s > 0.0
+        if f.kind == SLOWDOWN:
+            assert f.factor > 1.0
+        if f.kind == PAGE_PRESSURE:
+            assert f.pages > 0 and f.slots > 0
+    assert list(a.faults) == sorted(a.faults)
+
+
+def test_plan_different_seeds_differ():
+    a = generate_plan(2, 50.0, seed=0, crash_rate=0.3)
+    b = generate_plan(2, 50.0, seed=1, crash_rate=0.3)
+    assert a != b
+
+
+# -- clean-path bit-identity + slowdown scaling ------------------------------
+
+def _analytic_run(plan, reqs, *, slots=2):
+    prof = LatencyProfile(get_config("qwen2.5-1.5b"), 16.0)
+    eng = ContinuousBatcher(prof, slots=slots, policy="serve")
+    if plan is not None:
+        FaultInjector(plan).attach([eng])
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run()
+    return {r.rid: r for r in out}
+
+
+def test_attached_injector_with_no_overlapping_fault_is_bit_identical():
+    """A fault window that never covers the run must not move a single
+    timestamp — the clean path through ``_charge`` is exactly the
+    historical arithmetic (scale 1.0 short-circuits)."""
+    base = _analytic_run(None, _reqs(6))
+    late = FaultPlan((Fault(1e6, 0, SLOWDOWN, duration_s=1.0, factor=3.0),))
+    slow = _analytic_run(late, _reqs(6))
+    for rid, r in base.items():
+        assert slow[rid].t_finish == r.t_finish
+        assert slow[rid].t_first_token == r.t_first_token
+
+
+def test_slowdown_window_stretches_covered_charges_only():
+    base = _analytic_run(None, _reqs(6))
+    horizon = max(r.t_finish for r in base.values())
+    cover = FaultPlan((Fault(0.0, 0, SLOWDOWN, duration_s=10 * horizon,
+                             factor=4.0),))
+    slow = _analytic_run(cover, _reqs(6))
+    assert all(slow[rid].t_finish > r.t_finish for rid, r in base.items())
+
+
+def test_analytic_pressure_seizes_and_releases_slots():
+    """During the window the batcher decodes with fewer concurrent slots;
+    after it, full concurrency returns (seizure is released)."""
+    prof = LatencyProfile(get_config("qwen2.5-1.5b"), 16.0)
+    eng = ContinuousBatcher(prof, slots=2, policy="serve")
+    plan = FaultPlan((Fault(0.0, 0, PAGE_PRESSURE, duration_s=1e-3,
+                            slots=1, pages=4),))
+    FaultInjector(plan).attach([eng])
+    for r in _reqs(2, gap=0.0):
+        eng.submit(r)
+    eng.drain(until=1e-4)
+    assert eng._slots_now() == 1 and len(eng.active) == 1
+    out = eng.run()
+    assert eng._slots_now() == 2             # window over: released
+    assert all(r.t_finish is not None for r in out)
+
+
+# -- crash recovery: default same-engine redo is deterministic ---------------
+
+def test_crash_requeue_same_engine_deterministic_tokens():
+    """Satellite: identical (plan seed, traffic seed) ⇒ identical fired
+    sequence, retirements, and *emitted tokens* across runs.  Live paged
+    engine, default crash handler (full redo on the same engine)."""
+    params = smoke_params(NAME)
+
+    def run(plan):
+        eng = ContinuousEngine(params, CFG, slots=2, page_size=8,
+                               max_ctx=64, policy="serve",
+                               ctx=ExecContext(use_pallas=False))
+        inj = None
+        if plan is not None:
+            inj = FaultInjector(plan)
+            inj.attach([eng])
+        for r in _reqs(3, prompt=16, max_new=6, gap=0.0):
+            eng.submit(r)
+        eng.run()
+        return inj, {r.rid: r for r in eng.completed}
+
+    _, base = run(None)             # dry run fixes the crash time mid-decode
+    v = base[0]
+    plan = FaultPlan((Fault(v.t_first_token + 0.5 * (v.t_finish
+                                                     - v.t_first_token),
+                            0, CRASH, duration_s=0.05),))
+    ia, a = run(plan)
+    ib, b = run(plan)
+    assert ia.fired == ib.fired and len(ia.fired) == 1
+    assert set(a) == set(b) == set(base)
+    retried = [r for r in a.values() if r.retries > 0]
+    assert retried, "mid-decode crash should have reclaimed in-flight work"
+    for rid, r in a.items():
+        assert b[rid].retries == r.retries
+        assert b[rid].t_finish == r.t_finish
+        assert np.array_equal(b[rid].result_tokens, r.result_tokens)
+        # the redo is byte-identical to the uninterrupted run, too
+        assert np.array_equal(base[rid].result_tokens, r.result_tokens)
+
+
+# -- the tentpole acceptance: token-exact recovery across a crash ------------
+
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_token_exact_recovery_across_crash(use_pallas):
+    """A two-engine live fleet; engine 0 crashes mid-decode.  The victim
+    is reclaimed, re-routed to engine 1, fully redone — and every rid's
+    final output is byte-identical to the fault-free run.  The whole
+    trace passes check_trace: exactly-once final retirement per rid
+    (crash re-admission licensed by req.requeue) and zero page leaks
+    through crash reclamation."""
+    params = smoke_params(NAME)
+    cands = _pool(2)
+
+    def fleet(tracer, injector):
+        engines = [
+            ContinuousEngine(params, CFG, slots=2, page_size=8, max_ctx=64,
+                             policy="serve",
+                             ctx=ExecContext(use_pallas=use_pallas),
+                             tracer=tracer.scope(f"eng{i}")
+                             if tracer else None)
+            for i in range(2)]
+        return FleetRouter(cands, quality=lambda c: 1.0, engines=engines,
+                           tracer=tracer, injector=injector)
+
+    base = {r.rid: r for r in fleet(None, None).run(_reqs(4, prompt=16,
+                                                          max_new=6))}
+    victim = base[0]
+    assert victim.engine_idx == 0            # empty fleet: tie -> first
+    t_crash = victim.t_first_token + 0.5 * (victim.t_finish
+                                            - victim.t_first_token)
+
+    tr = tr_mod.Tracer()
+    inj = FaultInjector(FaultPlan((Fault(t_crash, 0, CRASH,
+                                         duration_s=0.2),)), tracer=tr)
+    router = fleet(tr, inj)
+    done = {r.rid: r for r in router.run(_reqs(4, prompt=16, max_new=6))}
+
+    requeues = [e for e in tr.events if e.name == tr_mod.REQ_REQUEUE]
+    assert requeues and any(e.args["tokens_done"] > 0 for e in requeues)
+    assert done[0].retries >= 1 and done[0].engine_idx == 1  # re-routed
+    for rid, want in base.items():
+        got = done[rid]
+        assert not got.dropped and got.result_tokens is not None
+        assert np.array_equal(want.result_tokens, got.result_tokens), rid
+    assert any(e.name == tr_mod.ENGINE_DOWN for e in tr.events)
+    assert check(tr.events) == []
+    for eng in router.engines:               # reclamation freed every page
+        assert eng.cache.free_pages == sum(
+            n - 1 for n in eng.cache._group_pages.values())
+
+
+# -- fleet-scale failover, breaker, hedging ----------------------------------
+
+def _mixed_fleet(plan, *, hedge_delay_s=None, recover=True, seed=1):
+    tr = tr_mod.Tracer()
+    inj = FaultInjector(plan, tracer=tr) if plan is not None else None
+    from repro.serving.fleet import demo_pool, demo_quality
+    router = FleetRouter(demo_pool(), quality=demo_quality, seed=seed,
+                         tracer=tr, injector=inj, recover=recover,
+                         hedge_delay_s=hedge_delay_s)
+    reqs = traffic.generate(traffic.scenario("mixed"), 8.0, seed=7)
+    done = router.run([r.fresh() for r in reqs])
+    return tr, router, reqs, done
+
+
+def test_fleet_failover_accounts_every_rid_exactly_once():
+    # seed 2's schedule crashes the *busy* engines (in-flight work exists
+    # to reclaim) — a crash on an idle engine is a correct no-op
+    plan = generate_plan(4, 8.0, seed=2, crash_rate=0.2, stall_rate=0.1,
+                         slowdown_rate=0.1)
+    tr, router, reqs, done = _mixed_fleet(plan, hedge_delay_s=0.5)
+    winners = [r for r in done if not r.hedge_loser]
+    assert sorted(r.rid for r in winners) == sorted(r.rid for r in reqs)
+    assert any(r.retries > 0 for r in winners)
+    assert any(e.name == tr_mod.ENGINE_DOWN for e in tr.events)
+    assert any(e.name == tr_mod.ENGINE_UP for e in tr.events)
+    assert check(tr.events) == []
+    rep = metrics_mod.summarize(done, 8.0)
+    assert rep.n == len(reqs)                # losers never enter tallies
+    assert rep.retried >= 1
+    # recovery must beat stranding on the same schedule and traffic
+    _, _, _, naive = _mixed_fleet(plan, recover=False)
+    assert (sum(r.reward for r in done) >
+            sum(r.reward for r in naive))
+
+
+def test_stall_opens_breaker_and_probe_closes_it():
+    """A stall is detected by silence (no reclamation — state survives),
+    the breaker excludes the engine while open, and a backoff probe
+    closes it after the window."""
+    cands = _pool(2)
+    tr = tr_mod.Tracer()
+    plan = FaultPlan((Fault(0.2, 0, STALL, duration_s=1.0),))
+    router = FleetRouter(cands, quality=lambda c: 1.0, tracer=tr,
+                         injector=FaultInjector(plan, tracer=tr),
+                         stall_timeout_s=0.1, probe_backoff_s=0.05)
+    router.run(_reqs(40, gap=0.05, deadline=20.0, max_new=4))
+    downs = [e for e in tr.events if e.name == tr_mod.ENGINE_DOWN]
+    ups = [e for e in tr.events if e.name == tr_mod.ENGINE_UP]
+    assert len(downs) == 1 and downs[0].args["reason"] == "stall"
+    assert 0.3 <= downs[0].t0 <= 0.6         # start + timeout + scan slack
+    assert len(ups) == 1 and ups[0].t0 >= 1.2
+    assert not any(e.name == tr_mod.REQ_REQUEUE for e in tr.events)
+    # while the breaker is open, nothing routes to engine 0
+    for e in tr.events:
+        if (e.name == tr_mod.ROUTE_DISPATCH
+                and downs[0].t0 <= e.t0 < ups[0].t0):
+            assert e.args["engine_idx"] == 1
+    assert check(tr.events) == []
+
+
+def test_hedge_first_finisher_wins_and_loser_is_flagged():
+    """A request stuck behind a busy engine is hedged onto the other one;
+    the idle engine's attempt wins, the stuck primary is torn down and
+    flagged, and metrics count the rid exactly once (``cancelled``
+    excludes the router's own duplicate)."""
+    fast = get_config("qwen2.5-1.5b")
+    slow = get_config("qwen2.5-14b")
+    cands = pool_candidates([("qwen2.5-1.5b", fast, _eps(fast), 1.0),
+                             ("qwen2.5-14b", slow, _eps(slow), 0.0)])
+    quality = lambda c: {"qwen2.5-1.5b": 0.9, "qwen2.5-14b": 0.5}[
+        c.model_name]
+    tr = tr_mod.Tracer()
+    router = FleetRouter(cands, quality=quality, slots=1, tracer=tr,
+                         hedge_delay_s=0.05)
+    blocker = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                                 prompt_len=64, max_new=4096,
+                                 deadline_s=100.0)
+    victim = traffic.SimRequest(rid=1, cls_name="t", t_arrive=0.01,
+                                prompt_len=64, max_new=8, deadline_s=100.0)
+    done = router.run([blocker, victim])
+    assert any(e.name == tr_mod.ROUTE_HEDGE for e in tr.events)
+    attempts = [r for r in done if r.rid == 1]
+    assert len(attempts) == 2                # winner + torn-down loser
+    win = next(r for r in attempts if not r.hedge_loser)
+    lose = next(r for r in attempts if r.hedge_loser)
+    assert win.engine_idx == 1 and win.hedged and not win.cancelled
+    assert win.tokens_done == 8
+    assert lose.cancelled                    # barge-in teardown, not a drop
+    rep = metrics_mod.summarize(done, 2.0)
+    assert rep.n == 2 and rep.hedged == 1 and rep.cancelled == 0
+    assert check(tr.events) == []
+
+
+def test_router_infeasible_deadline_degrades_to_fastest():
+    """Satellite regression: an empty feasible set in mode="fpx" (nothing
+    meets the deadline) degrades to the fastest effective engine — the
+    win-fast rule — instead of failing or routing by quality."""
+    fast = get_config("qwen2.5-1.5b")
+    slow = get_config("qwen2.5-14b")
+    cands = pool_candidates([("qwen2.5-14b", slow, _eps(slow), 0.0),
+                             ("qwen2.5-1.5b", fast, _eps(fast), 1.0)])
+    quality = lambda c: {"qwen2.5-1.5b": 0.1, "qwen2.5-14b": 0.9}[
+        c.model_name]
+    router = FleetRouter(cands, quality=quality)
+    req = traffic.SimRequest(rid=0, cls_name="t", t_arrive=0.0,
+                             prompt_len=256, max_new=8, deadline_s=1e-9)
+    assert router.dispatch(req) == 1         # fastest, despite quality 0.1
+
+
+# -- check_trace: the new lifecycle licenses ---------------------------------
+
+def _ev(name, t, track, **args):
+    return tr_mod.Event("instant", name, t, None, track, args, 0.0)
+
+
+def test_check_trace_rejects_unlicensed_readmission():
+    events = [_ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=7),
+              _ev(tr_mod.REQ_ADMIT, 1.0, "queue", rid=7),
+              _ev(tr_mod.REQ_FINISH, 2.0, "queue", rid=7)]
+    assert any("admitted twice" in e for e in check(events))
+
+
+def test_check_trace_accepts_requeue_licensed_readmission():
+    events = [_ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=7),
+              _ev(tr_mod.REQ_REQUEUE, 0.5, "router", rid=7, attempt=1),
+              _ev(tr_mod.REQ_ADMIT, 1.0, "queue", rid=7),
+              _ev(tr_mod.REQ_FINISH, 2.0, "queue", rid=7)]
+    assert check(events) == []
+
+
+def test_check_trace_requeue_licenses_exactly_one_extra_admit():
+    events = [_ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=7),
+              _ev(tr_mod.REQ_REQUEUE, 0.5, "router", rid=7, attempt=1),
+              _ev(tr_mod.REQ_ADMIT, 1.0, "queue", rid=7),
+              _ev(tr_mod.REQ_ADMIT, 1.5, "queue", rid=7),
+              _ev(tr_mod.REQ_FINISH, 2.0, "queue", rid=7)]
+    assert any("admitted 3 times" in e for e in check(events))
+
+
+def test_check_trace_rejects_unlicensed_double_retirement():
+    events = [_ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=7),
+              _ev(tr_mod.REQ_FINISH, 1.0, "queue", rid=7),
+              _ev(tr_mod.REQ_CANCEL, 1.5, "queue", rid=7)]
+    assert any("retired twice" in e for e in check(events))
+
+
+def test_check_trace_hedge_licenses_twin_terminals():
+    events = [_ev(tr_mod.REQ_ADMIT, 0.0, "queue", rid=7),
+              _ev(tr_mod.ROUTE_HEDGE, 0.5, "router", rid=7),
+              _ev(tr_mod.REQ_ADMIT, 0.6, "queue", rid=7),
+              _ev(tr_mod.REQ_FINISH, 1.0, "queue", rid=7),
+              _ev(tr_mod.REQ_CANCEL, 1.5, "queue", rid=7,
+                  hedge_loser=True)]
+    assert check(events) == []

@@ -129,3 +129,40 @@ def test_online_selector_learns():
         reward = 1.0 if grid[i].gamma == 0.5 else 0.0   # true optimum
         sel.update(i, reward)
     assert sel.best().gamma == 0.5
+
+
+def _slack_grid():
+    cfg = get_config("qwen2.5-1.5b")
+    eps = {f"L{i}.l": 0.1 for i in range(cfg.n_layers)}
+    grid = fpx.make_grid([("m", cfg, eps)], gammas=(0.0, 1.0))
+    return sorted(grid, key=lambda c: c.latency_s)     # [fast, slow]
+
+
+def test_select_for_slack_empty_feasible_degrades_to_fastest():
+    """Regression (fleet dispatch, mode="fpx"): when *nothing* meets the
+    deadline the pick must degrade to the fastest effective candidate —
+    the win-fast rule — never raise or route by quality."""
+    fast, slow = _slack_grid()
+    q = lambda c: 1.0 - c.gamma                        # quality prefers slow
+    # deadline below every wait+service: feasible set is empty
+    i = fpx.select_for_slack([slow, fast], 1e-12, [0.5, 0.5], q)
+    assert i == 1                                      # fastest, not best-q
+    # waits dominate: the *effective* fastest wins, not the raw-latency one
+    i = fpx.select_for_slack([slow, fast], 1e-12, [0.0, 10.0], q)
+    assert i == 0
+
+
+def test_select_for_slack_duplicate_replicas_route_by_index():
+    """Regression: a pool of *identical* operating points (a replicated
+    static fleet) must resolve picks by index, not equality search — the
+    old ``adj.index(pick)`` collapsed every pick onto replica 0, breaking
+    least-loaded degradation."""
+    fast, _ = _slack_grid()
+    pool = [fast, fast, fast]
+    q = lambda c: 1.0
+    # replica 1 is least loaded and feasible: the pick must be index 1
+    assert fpx.select_for_slack(pool, 10.0, [0.4, 0.1, 0.4], q) == 1
+    # empty feasible set with duplicates: still the least-loaded index
+    assert fpx.select_for_slack(pool, 1e-12, [0.4, 0.1, 0.4], q) == 1
+    # all-equal waits tie-break deterministically to the first replica
+    assert fpx.select_for_slack(pool, 10.0, [0.2, 0.2, 0.2], q) == 0

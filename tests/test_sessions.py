@@ -252,6 +252,44 @@ def test_barge_in_mid_decode_keeps_corunner_identical(use_pallas):
     assert eng.cache.free_pages == _total_pages(eng.cache)
 
 
+@pytest.mark.parametrize("use_pallas", pallas_modes())
+def test_barge_in_racing_prefill_chunk_reclaims_cleanly(use_pallas):
+    """A cancel landing *mid-chunked-prefill* — after admission, before
+    the prompt is absorbed — must tear the lane down with zero emitted
+    tokens, reclaim every page it held (prefix refs merely decremented),
+    and leave co-resident lanes token-identical.  The trace replay proves
+    the pool closes; the cancelled rid still retires exactly once."""
+    params = smoke_params(NAME)
+    want = _shared_prefix_requests(CFG)
+    run_wave_reference(params, CFG, want)
+    # dry run to find the victim's prefill window under chunk=8
+    dry, _ = run_paged(params, CFG, _shared_prefix_requests(CFG),
+                       page_size=8, chunk=8, slots=3,
+                       use_pallas=use_pallas, prefix_cache=True)
+    victim = dry[1]
+    assert victim.t_admit is not None and victim.t_prefill_done is not None
+    assert victim.t_prefill_done > victim.t_admit, \
+        "chunked prefill must leave an open admit->absorbed window"
+    t_cancel = victim.t_admit + 0.5 * (victim.t_prefill_done
+                                       - victim.t_admit)
+    reqs = _shared_prefix_requests(CFG)
+    reqs[1].t_cancel = t_cancel
+    tr = tr_mod.Tracer()
+    reqs, eng = run_paged(params, CFG, reqs, page_size=8, chunk=8,
+                          slots=3, use_pallas=use_pallas,
+                          prefix_cache=True, tracer=tr)
+    r = reqs[1]
+    assert r.cancelled and not r.dropped
+    assert r.tokens_done == 0 and r.t_first_token is None
+    for i in (0, 2):                         # co-runners: token-identical
+        assert not reqs[i].cancelled
+        assert np.array_equal(want[i].result_tokens, reqs[i].result_tokens)
+    assert any(e.name == tr_mod.REQ_CANCEL for e in tr.events)
+    assert check(tr.events) == []            # conservation: no leaked pages
+    eng.prefix.clear()
+    assert eng.cache.free_pages == _total_pages(eng.cache)
+
+
 def test_analytic_barge_in_before_admission_is_a_miss(profile):
     """A request cancelled while still queued retires as cancelled (not
     dropped), with no first token and a missed deadline."""
