@@ -20,6 +20,8 @@ turns the tables into a gate:
    TTFT percentiles, hit rates, and goodput.
    ``results/table_faults.csv`` gates the fault-injected fleet per
    path (ceiling / naive / recovering) on goodput and p99.
+   ``results/table_sharded.csv`` gates the sharded fleet per arm
+   (sharded / fallback / net-aware / net-blind) the same way.
 2. **Structural orderings.**  Invariants the tables exist to prove are
    re-checked from the fresh CSVs, so the job fails even if a benchmark's
    own asserts are edited away: paged beats wave (p99 down, goodput up);
@@ -39,7 +41,10 @@ turns the tables into a gate:
    equal capacity; under the identical seeded fault schedule the
    token-exact-recovery fleet's goodput is strictly above the stranding
    (naive) fleet's, neither out-earns the fault-free ceiling, and
-   recovery drops no more requests than stranding.
+   recovery drops no more requests than stranding; at equal chip
+   capacity one tensor-parallel engine out-earns eight single-chip
+   replicas on deadline-tight decisions, and DCN/ICI-aware routing
+   strictly out-earns the link-blind twin that took the DCN bait.
 
 Malformed tables (empty, or missing the gated columns) fail the gate
 with a named error rather than a traceback — a refactor that drops a
@@ -86,6 +91,8 @@ SPEC_TABLE = "table_spec.csv"
 SESSIONS_TABLE = "table_sessions.csv"
 #: fault recovery: token-exact recovery vs stranding under one schedule
 FAULTS_TABLE = "table_faults.csv"
+#: sharded fleet: tensor parallelism vs replication, link-aware routing
+SHARDED_TABLE = "table_sharded.csv"
 
 
 def read_rows(text: str):
@@ -448,6 +455,65 @@ def check_faults_orderings(rows, errors):
                       "the schedule exercises no recovery")
 
 
+def check_sharded_drift(fresh, base, tol_pct: float, errors):
+    """The sharded table: per-arm goodput must not drop and p99 must not
+    rise beyond tolerance.  Rows key on ``arm``."""
+    fresh_by, base_by = ({r.get("arm"): r for r in rows}
+                         for rows in (fresh, base))
+    if set(fresh_by) != set(base_by):
+        errors.append(f"{SHARDED_TABLE}: row set changed; commit the "
+                      "regenerated CSV if intentional")
+        return
+    tol = tol_pct / 100.0
+    for k, b in base_by.items():
+        f = fresh_by[k]
+        bv, fv = (col(r, "goodput", SHARDED_TABLE, errors) for r in (b, f))
+        if None not in (bv, fv) and fv < bv * (1 - tol):
+            errors.append(f"{SHARDED_TABLE} {k}: goodput dropped "
+                          f"{bv} -> {fv} (tol {tol_pct}%)")
+        bv, fv = (col(r, "p99_ms", SHARDED_TABLE, errors) for r in (b, f))
+        if None not in (bv, fv) and fv > bv * (1 + tol):
+            errors.append(f"{SHARDED_TABLE} {k}: p99 rose "
+                          f"{bv}ms -> {fv}ms (tol {tol_pct}%)")
+
+
+def check_sharded_orderings(rows, errors):
+    """The claims the sharded table exists to prove: at equal chip
+    capacity one tensor-parallel engine out-earns eight single-chip
+    replicas on deadline-tight decisions, and pricing the DCN/ICI
+    collective tax into routing beats the link-blind twin — with the
+    blind router having actually taken the bait (used the DCN-spanning
+    engine), so the comparison is not vacuous."""
+    by = {r.get("arm"): r for r in rows}
+    need = ("sharded-tp8", "fallback-tp1", "net-aware", "net-blind")
+    missing = [a for a in need if by.get(a) is None]
+    if missing:
+        errors.append(f"{SHARDED_TABLE}: missing rows {missing}")
+        return
+    g = {a: col(by[a], "goodput", SHARDED_TABLE, errors) for a in need}
+    if None not in g.values():
+        if g["sharded-tp8"] <= g["fallback-tp1"]:
+            errors.append(f"{SHARDED_TABLE}: sharded-tp8 goodput "
+                          f"{g['sharded-tp8']} not strictly above "
+                          f"fallback-tp1 {g['fallback-tp1']} at equal "
+                          "capacity")
+        if g["net-aware"] <= g["net-blind"]:
+            errors.append(f"{SHARDED_TABLE}: net-aware goodput "
+                          f"{g['net-aware']} not strictly above "
+                          f"net-blind {g['net-blind']}")
+    shares = (by["net-blind"].get("engine_shares") or "").split("/")
+    try:
+        blind_dcn = int(shares[1])
+    except (IndexError, ValueError):
+        errors.append(f"{SHARDED_TABLE}: net-blind engine_shares "
+                      f"{by['net-blind'].get('engine_shares')!r} malformed")
+        return
+    if blind_dcn <= 0:
+        errors.append(f"{SHARDED_TABLE}: blind router never chose the "
+                      "DCN-spanning engine — the aware/blind comparison "
+                      "is vacuous")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(REPO, "results"),
@@ -497,6 +563,11 @@ def main(argv=None) -> int:
                 load_baseline(FAULTS_TABLE, args.baseline_dir),
                 args.tol_pct, errors)
     check_faults_orderings(faults_fresh, errors)
+    sharded_fresh = load_fresh(args.results, SHARDED_TABLE)
+    check_sharded_drift(sharded_fresh,
+                        load_baseline(SHARDED_TABLE, args.baseline_dir),
+                        args.tol_pct, errors)
+    check_sharded_orderings(sharded_fresh, errors)
 
     for trace_path in args.trace:
         sys.path.insert(0, os.path.join(REPO, "src"))
@@ -509,7 +580,7 @@ def main(argv=None) -> int:
             print(f"REGRESSION: {e}", file=sys.stderr)
         return 1
     traced = f" + {len(args.trace)} trace(s)" if args.trace else ""
-    print(f"regression gate: {len(TABLES) + 5} tables OK{traced} "
+    print(f"regression gate: {len(TABLES) + 6} tables OK{traced} "
           f"(tolerance {args.tol_pct}%)")
     return 0
 

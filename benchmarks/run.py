@@ -108,6 +108,16 @@ def main() -> None:
                  f"goodput={rec[8]}_vs_naive{nv[8]}"
                  f":retried={rec[4]}:ceiling={tf_by['ceiling'][8]}"))
 
+    # --- Sharded fleet: tensor parallelism + link-aware routing -----------
+    import table_sharded
+    tsh = table_sharded.main(verbose=False)
+    tsh_by = {r[0]: r for r in tsh}
+    shd, rep = tsh_by["sharded-tp8"], tsh_by["fallback-tp1"]
+    aware, blind = tsh_by["net-aware"], tsh_by["net-blind"]
+    rows.append(("table_sharded", float(shd[9]) * 1e3,
+                 f"goodput={shd[10]}_vs_tp1{rep[10]}"
+                 f":aware={aware[10]}_vs_blind{blind[10]}"))
+
     # --- Speculative decoding: learned draft depth vs dense/fixed-k -------
     import table_spec
     tsp = table_spec.main(verbose=False)

@@ -31,6 +31,9 @@ ICI_BW = 50e9             # B/s per link
 VPU_DEQ = 5e11            # elem/s: VPU int4->bf16 dequant (W4A16 penalty)
 DEQ_CALL_OVERHEAD = 20e-6  # s per linear: separate dequant kernel dispatch
 LAYER_OVERHEAD = 4e-6     # s: per-block dispatch/fusion overhead
+DCN_BW = 25e9             # B/s per host NIC (data-center network hop)
+ICI_LAT_S = 1e-6          # s per ICI message (intra-host, chip-to-chip)
+DCN_LAT_S = 25e-6         # s per DCN message (host-to-host)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +45,61 @@ class Hardware:
     vpu_deq: float = VPU_DEQ
     layer_overhead: float = LAYER_OVERHEAD
     n_chips: int = 1
+    #: interconnect terms (see :func:`xfer_s` / :func:`allreduce_s`):
+    #: ICI is the intra-host chip fabric, DCN the between-hosts network
+    dcn_bw: float = DCN_BW
+    ici_lat_s: float = ICI_LAT_S
+    dcn_lat_s: float = DCN_LAT_S
 
 
 V5E = Hardware()
+
+
+def _link(link: str, hw: Hardware) -> tuple:
+    if link == "ici":
+        return hw.ici_bw, hw.ici_lat_s
+    if link == "dcn":
+        return hw.dcn_bw, hw.dcn_lat_s
+    raise ValueError(f"unknown link {link!r} (want 'ici' or 'dcn')")
+
+
+def xfer_s(nbytes: float, link: str = "ici", hw: Hardware = V5E) -> float:
+    """Point-to-point transfer time of ``nbytes`` over one ``link`` hop.
+
+    The clock contract's interconnect term: ``latency + bytes /
+    bandwidth``.  ``link="ici"`` is the intra-host chip fabric,
+    ``link="dcn"`` the host-to-host network — what cross-host dispatch
+    (prompt tokens out, response tokens back) costs the router."""
+    if nbytes <= 0:
+        return 0.0
+    bw, lat = _link(link, hw)
+    return lat + nbytes / bw
+
+
+def allreduce_s(nbytes: float, n_chips: int, link: str = "ici",
+                hw: Hardware = V5E) -> float:
+    """Ring all-reduce of ``nbytes`` across ``n_chips`` over ``link``:
+    ``2 * (n-1)/n`` traversals of the payload plus ``2 * (n-1)`` hop
+    latencies (reduce-scatter + all-gather phases)."""
+    if n_chips <= 1 or nbytes <= 0:
+        return 0.0
+    bw, lat = _link(link, hw)
+    return 2.0 * (n_chips - 1) / n_chips * nbytes / bw \
+        + 2.0 * (n_chips - 1) * lat
+
+
+def tp_collective_s(cfg: ModelConfig, n_tokens: int, tp: int,
+                    link: str = "ici", hw: Hardware = V5E) -> float:
+    """Per-forward collective tax of ``tp``-way tensor parallelism: two
+    all-reduces of the ``(n_tokens, d_model)`` bf16 activations per layer
+    (the partial attention outputs after the o-projection, and the FFN
+    down-projection's partial sums).  This is the term that makes a TP
+    group spanning a DCN hop catastrophically slower than the same group
+    on one host's ICI — the mispricing the fleet router must see."""
+    if tp <= 1 or n_tokens <= 0:
+        return 0.0
+    per_layer = allreduce_s(n_tokens * cfg.d_model * 2.0, tp, link, hw)
+    return 2.0 * cfg.n_layers * per_layer
 
 
 def _bytes_per_weight(w_bits: int) -> float:

@@ -12,10 +12,14 @@ Usage:
 """
 # The VERY FIRST lines, before ANY other import: jax locks the device count
 # on first backend init, and the dry-run needs 512 host placeholder devices.
+# An explicit forced count in the environment wins (the simulated-mesh CI
+# pass runs at 8 devices and imports this module for run_one(mesh=...)).
 import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import json
@@ -246,14 +250,18 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             sharding_policy: str = "baseline",
             constrain_acts: bool = False,
             moe_expert_parallel: bool = False,
-            w8: bool = False) -> Dict[str, Any]:
+            w8: bool = False, mesh=None) -> Dict[str, Any]:
+    """``mesh``: explicit mesh override (e.g. a small simulated mesh from
+    :func:`repro.launch.mesh.sim_mesh`) — the smoke tests compile on an
+    8-device mesh instead of forcing 512 placeholder devices."""
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     reason = skip_reason(arch, shape_name)
     if reason:
         return {"arch": arch, "shape": shape_name, "skipped": reason}
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     with mesh:
         fn, args = build_step(cfg, shape, mesh, remat=remat,
@@ -281,6 +289,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mem_d = {"error": str(e)}
         try:
             cost = compiled.cost_analysis()
+            # jax returned a one-dict-per-device *list* here historically
+            # and a plain dict in current releases — accept both (the
+            # list form drifted this launcher: `cost.get` on a list)
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             cost_d = {"flops": cost.get("flops"),
                       "bytes_accessed": cost.get("bytes accessed")}
         except Exception as e:          # pragma: no cover
@@ -300,7 +313,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return res
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -317,7 +330,7 @@ def main() -> None:
                     help="FPX serving variant: weights stored as e4m3 "
                          "(half the HBM/collective bytes of bf16)")
     ap.add_argument("--out", default=None, help="append JSONL results here")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     pairs = []
     if args.all:

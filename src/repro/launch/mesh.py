@@ -28,3 +28,27 @@ def make_host_mesh() -> jax.sharding.Mesh:
 def batch_axes(mesh: jax.sharding.Mesh):
     """Mesh axes over which the batch dimension shards."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def sim_device_count() -> int:
+    """Devices available for a simulated mesh (CI forces 8 CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; tier-1 runs see
+    1 and the sharded paths skip)."""
+    return jax.device_count()
+
+
+def sim_mesh(n_model: int = 2, *, n_data: int = 1):
+    """(data, model) mesh over simulated host devices, or ``None`` when the
+    process doesn't have ``n_data * n_model`` devices.
+
+    This is how the serving stack places a tensor-parallel engine in CI:
+    the same axis names as :func:`make_production_mesh`, so the
+    :mod:`repro.launch.shardings` FSDP x TP rules apply unchanged, but
+    built from however many host devices ``XLA_FLAGS`` conjured — the
+    keras-jax ``distribution_lib_test`` trick that makes multi-chip
+    placement differential-testable on one CPU."""
+    need = n_data * n_model
+    if jax.device_count() < need or need < 2:
+        return None
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         devices=jax.devices()[:need])

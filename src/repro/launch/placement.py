@@ -1,0 +1,100 @@
+"""Fleet placement on a (simulated) multi-host topology.
+
+The fleet router's candidates are *operating points* (model, gamma); this
+module pins each one to hardware: which host its engine lives on, how many
+chips it spans (tensor parallelism), and which link its collectives cross.
+Two physical facts flow from a placement into the clock contract
+(:mod:`repro.core.latency`):
+
+* **Dispatch hops.**  A request arrives at the ingress host; serving it on
+  another host moves the prompt over DCN before prefill can start and the
+  response back after the last token (:meth:`Topology.dispatch`).  The
+  router stamps both on the request (``t_ready`` / ``net_out_s``) so
+  engine admission gates on prompt arrival and the deadline shrinks by
+  the return hop.
+* **Collective link.**  A tensor-parallel group confined to one host
+  all-reduces over ICI; a group that *spans* hosts pays every per-layer
+  all-reduce over DCN — three orders of magnitude more latency per hop.
+  :meth:`Topology.place_tp` picks the link honestly, and
+  :class:`~repro.serving.continuous.LatencyProfile` prices it into every
+  prefill/step/service projection.  A router that ignores the link
+  ("net-blind") believes a DCN-spanning engine is as fast as an ICI one,
+  overloads it, and misses deadlines — the mispricing
+  ``benchmarks/table_sharded.py`` measures.
+
+Everything here is host-side arithmetic: no jax, no devices — placements
+feed :class:`~repro.serving.fleet.FleetRouter` pricing whether the engines
+are analytic or live.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.latency import Hardware, V5E, xfer_s
+
+#: wire bytes per prompt/response token (int32 token ids)
+TOKEN_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One engine's seat in the fleet: ``tp`` chips on ``host`` (or
+    spanning hosts when ``link == "dcn"``), collectives over ``link``."""
+    host: int = 0
+    tp: int = 1
+    link: str = "ici"
+
+    def __post_init__(self):
+        assert self.tp >= 1, self.tp
+        assert self.link in ("ici", "dcn"), self.link
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """The (simulated) machine the fleet is placed on."""
+    n_hosts: int = 1
+    chips_per_host: int = 8
+    #: host requests arrive at (and responses leave from)
+    ingress_host: int = 0
+    hw: Hardware = V5E
+
+    def dispatch(self, p: Placement, prompt_len: int,
+                 max_new: int) -> Tuple[float, float, str]:
+        """(inbound_s, outbound_s, link) of serving a request on ``p``:
+        the prompt's DCN hop ingress->host before prefill can start, and
+        the response's hop back — both zero for an engine co-located with
+        the ingress."""
+        if p.host == self.ingress_host:
+            return 0.0, 0.0, "local"
+        return (xfer_s(prompt_len * TOKEN_BYTES, "dcn", self.hw),
+                xfer_s(max_new * TOKEN_BYTES, "dcn", self.hw), "dcn")
+
+    def place_tp(self, tp: int, host: int = 0) -> Placement:
+        """Seat a ``tp``-way engine honestly: on one host's ICI fabric
+        when it fits, spanning hosts over DCN when it doesn't (the case
+        a link-blind router misprices)."""
+        assert 1 <= tp <= self.n_hosts * self.chips_per_host, tp
+        link = "ici" if tp <= self.chips_per_host else "dcn"
+        return Placement(host=host, tp=tp, link=link)
+
+    def spread(self, n_engines: int, tp: int = 1) -> List[Placement]:
+        """Round-robin ``n_engines`` single-host engines across hosts —
+        the equal-capacity fallback arm (every engine past the ingress
+        host pays dispatch hops)."""
+        per_host = max(1, self.chips_per_host // max(tp, 1))
+        out: List[Placement] = []
+        for i in range(n_engines):
+            host = (i // per_host) % self.n_hosts
+            out.append(self.place_tp(tp, host=host))
+        return out
+
+
+def placements_summary(placements: List[Placement],
+                       topo: Optional[Topology]) -> str:
+    """One-line human summary for benchmark logs."""
+    if not placements:
+        return "co-located (no topology)"
+    parts = [f"host{p.host}:tp{p.tp}/{p.link}" for p in placements]
+    hosts = f"{topo.n_hosts} hosts" if topo else "untopologized"
+    return f"{hosts}: " + " ".join(parts)

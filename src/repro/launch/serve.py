@@ -1,18 +1,30 @@
-"""Serving launcher: batched requests through the FPX-aware engine.
+"""Serving launcher: one entry point over all three serving paths.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen-sim-3b \
-      --requests 32 --gamma 0.3
+      --requests 32 --gamma 0.3                       # wave scheduler
+  PYTHONPATH=src python -m repro.launch.serve --path paged \
+      --arch qwen-sim-1.5b --deadline-ms 500          # paged engine
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --path sharded \
+      --arch dbrx-132b --tp 2                         # tensor-parallel
 
-Loads (or initializes) a model, applies the FPX assignment at the requested
-gamma (running Algorithm-1 calibration first), and drives the scheduler over
-a synthetic request stream, reporting modeled TPU latency per wave.
+Loads (or initializes) a model, optionally applies the FPX assignment at
+the requested gamma (running Algorithm-1 calibration first — ``--gamma``
+omitted serves the FP16 baseline), and drives the chosen serving path
+over a synthetic request stream, reporting modeled latency.
+
+``--path sharded`` places the engine on a simulated (1, tp) device mesh
+(:func:`repro.launch.mesh.sim_mesh`): params under the FSDP x TP rules,
+paged KV pools head-sharded over the "model" axis, per-forward all-reduce
+tax priced on the clock.  Requires ``jax.device_count() >= tp`` — set
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* launch.
 """
 from __future__ import annotations
 
 import argparse
+from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
@@ -22,21 +34,31 @@ from repro.core import calibrate as calib_mod
 from repro.data import pipeline as dp
 from repro.models import transformer
 from repro.models.modules import ExecContext
-from repro.serving.engine import ServingEngine
-from repro.serving.scheduler import Request, Scheduler
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", default="qwen-sim-3b")
+    ap.add_argument("--path", choices=("wave", "paged", "sharded"),
+                    default="wave",
+                    help="wave scheduler, paged continuous engine, or "
+                         "tensor-parallel paged engine on a simulated mesh")
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--gamma", type=float, default=0.0)
+    ap.add_argument("--gamma", type=float, default=None,
+                    help="FPX gamma (omit = FP16 baseline, no assignment)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--batch-slots", type=int, default=8)
+    ap.add_argument("--batch-slots", type=int, default=8,
+                    help="wave batch slots / continuous decode lanes")
     ap.add_argument("--deadline-ms", type=float, default=None)
-    args = ap.parse_args()
+    ap.add_argument("--tp", type=int, default=2,
+                    help="model-axis shards for --path sharded")
+    return ap
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = build_argparser().parse_args(argv)
 
     cfg = get_config(args.arch)
     key = jax.random.PRNGKey(0)
@@ -44,9 +66,11 @@ def main() -> None:
     if args.ckpt:
         params = ckpt.restore(args.ckpt, params)
 
-    # FPX: calibrate -> assign -> serve at delta(l)
+    # FPX: calibrate -> assign -> serve at delta(l).  --gamma omitted is
+    # the FP16 baseline (the drifted launcher quantized unconditionally:
+    # its default gamma 0.0 passed a `>= 0.0` gate that was always true)
     policy, default_bits, avg_bits = None, 16, 16.0
-    if args.gamma >= 0.0:
+    if args.gamma is not None:
         eps = calib_mod.calibrate(params, cfg,
                                   dp.calibration_batches(cfg, n=2, seq=64))
         assignment = assign_mod.assign_precision(eps, args.gamma)
@@ -55,26 +79,67 @@ def main() -> None:
         print(f"# FPX gamma={args.gamma}: avg bits {avg_bits:.2f} over "
               f"{len(assignment)} linear layers")
 
-    lat_cfg = get_config(SIM_TO_FULL[args.arch]) if args.arch in SIM_TO_FULL else cfg
-    engine = ServingEngine(params, cfg,
-                           ctx=ExecContext(policy=policy,
-                                           default_bits=default_bits),
-                           max_ctx=args.prompt_len + args.max_new,
-                           latency_cfg=lat_cfg, avg_bits=avg_bits)
-    sched = Scheduler(engine, batch_slots=args.batch_slots)
+    lat_cfg = get_config(SIM_TO_FULL[args.arch]) \
+        if args.arch in SIM_TO_FULL else cfg
+    ctx = ExecContext(policy=policy, default_bits=default_bits)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
 
     rng = np.random.default_rng(0)
-    for rid in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
-        sched.submit(Request(rid=rid, prompt=prompt, max_new=args.max_new,
-                             deadline_s=(args.deadline_ms or 0) / 1e3 or None))
-    done = sched.run()
+    prompts = [rng.integers(0, cfg.vocab, size=args.prompt_len)
+               .astype(np.int32) for _ in range(args.requests)]
+
+    if args.path == "wave":
+        from repro.serving.engine import ServingEngine
+        from repro.serving.scheduler import Request, Scheduler
+        engine = ServingEngine(params, cfg, ctx=ctx,
+                               max_ctx=args.prompt_len + args.max_new,
+                               latency_cfg=lat_cfg, avg_bits=avg_bits)
+        sched = Scheduler(engine, batch_slots=args.batch_slots)
+        for rid, prompt in enumerate(prompts):
+            sched.submit(Request(rid=rid, prompt=prompt,
+                                 max_new=args.max_new,
+                                 deadline_s=deadline_s))
+        done = sched.run()
+    else:
+        from repro.serving.paged_engine import ContinuousEngine
+        from repro.serving.scheduler import Request
+        mesh = None
+        if args.path == "sharded":
+            from repro.launch.mesh import sim_mesh
+            mesh = sim_mesh(args.tp)
+            if mesh is None:
+                print(f"# need {args.tp} devices for --path sharded, have "
+                      f"{jax.device_count()} — set XLA_FLAGS="
+                      "--xla_force_host_platform_device_count=8 before "
+                      "launch")
+                return 2
+            print(f"# sharded: tp={args.tp} over {jax.device_count()} "
+                  "simulated devices")
+        page_size = 16
+        max_ctx = -(-(args.prompt_len + args.max_new) // page_size) \
+            * page_size
+        eng = ContinuousEngine(params, cfg, slots=args.batch_slots,
+                               page_size=page_size, max_ctx=max_ctx,
+                               policy="serve" if deadline_s is None
+                               else "degrade",
+                               latency_cfg=lat_cfg, avg_bits=avg_bits,
+                               ctx=ctx, mesh=mesh)
+        reqs = [Request(rid=rid, prompt=prompt, max_new=args.max_new,
+                        deadline_s=deadline_s)
+                for rid, prompt in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        done = [r for r in reqs if not r.dropped]
 
     met = [r for r in done if r.met_deadline]
-    print(f"# served {len(done)} requests; modeled latency "
-          f"{done[0].latency_s*1e3:.1f} ms/action"
-          + (f"; {len(met)}/{len(done)} met deadline" if args.deadline_ms else ""))
+    lat = [r.latency_s for r in done if r.latency_s is not None]
+    print(f"# served {len(done)}/{args.requests} requests; modeled latency "
+          f"{1e3 * (sum(lat) / len(lat) if lat else 0.0):.1f} ms/action"
+          + (f"; {len(met)}/{len(done)} met deadline"
+             if args.deadline_ms else ""))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

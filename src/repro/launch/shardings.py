@@ -204,6 +204,24 @@ def _mesh_prod(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def paged_pool_spec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """Spec for one paged-KV pool group, shape ``(layers, pages,
+    page_size, kv_heads, head_dim)`` (:class:`repro.serving.kv_cache.
+    PagedKVCache`): kv-heads shard on "model" when they divide the axis —
+    each chip owns its heads' pages and the fused paged-attention kernel
+    runs per shard, GSPMD all-gathering the per-head partial outputs into
+    the row-parallel o-projection.  Heads that don't divide replicate (the
+    pool is the *decode* hot path; a mis-shard here silently multiplies
+    HBM traffic)."""
+    if _fits(cfg.n_kv_heads, mesh, "model"):
+        return P(None, None, None, "model", None)
+    return P()
+
+
+def paged_pool_shardings(cfg: ModelConfig, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, paged_pool_spec(cfg, mesh))
+
+
 def logits_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
     return NamedSharding(mesh, P(*batch_spec(mesh, global_batch), None, "model"))
 

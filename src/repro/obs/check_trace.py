@@ -60,23 +60,29 @@ import argparse
 import sys
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.obs.trace import (Event, ENGINE_STEP, PAGE_ALLOC, PAGE_COW,
-                             PAGE_FREE, PAGE_RESERVE, PAGE_SHARE,
-                             POOL_CONFIG, PREFIX_EVICT, PREFIX_INSERT,
-                             REQ_ADMIT, REQ_CANCEL, REQ_DROP, REQ_FINISH,
-                             REQ_FIRST_TOKEN, REQ_PREFILL,
+from repro.obs.trace import (Event, ENGINE_SHARD_STEP, ENGINE_STEP,
+                             PAGE_ALLOC, PAGE_COW, PAGE_FREE, PAGE_RESERVE,
+                             PAGE_SHARE, POOL_CONFIG, PREFIX_EVICT,
+                             PREFIX_INSERT, REQ_ADMIT, REQ_CANCEL, REQ_DROP,
+                             REQ_FINISH, REQ_FIRST_TOKEN, REQ_PREFILL,
                              REQ_PREFILL_CHUNK, REQ_REQUEUE, REQ_TOKEN,
-                             ROUTE_HEDGE, SPEC_ACCEPT, SPEC_DRAFT,
-                             SPEC_VERIFY, WAVE_STEP)
+                             ROUTE_HEDGE, ROUTE_XFER, SPEC_ACCEPT,
+                             SPEC_DRAFT, SPEC_VERIFY, WAVE_STEP)
 
 #: events whose analytic timestamps must be non-decreasing per track
 #: (queue spans and arrivals are excluded by design: EDF admission emits
 #: them out of arrival order on shared tracks)
-_MONOTONIC = {ENGINE_STEP, WAVE_STEP, REQ_PREFILL, REQ_PREFILL_CHUNK,
-              REQ_TOKEN, REQ_FIRST_TOKEN, PAGE_ALLOC, PAGE_FREE,
-              PAGE_RESERVE, PAGE_SHARE, PAGE_COW, PREFIX_INSERT,
+_MONOTONIC = {ENGINE_STEP, ENGINE_SHARD_STEP, WAVE_STEP, REQ_PREFILL,
+              REQ_PREFILL_CHUNK, REQ_TOKEN, REQ_FIRST_TOKEN, PAGE_ALLOC,
+              PAGE_FREE, PAGE_RESERVE, PAGE_SHARE, PAGE_COW, PREFIX_INSERT,
               PREFIX_EVICT, SPEC_DRAFT, SPEC_VERIFY, SPEC_ACCEPT}
 _EPS = 1e-12
+
+
+def _scope(track: str) -> str:
+    """Engine scope of a track: everything before the last path component
+    ("eng0:m-g1/steps" -> "eng0:m-g1"; unscoped tracks -> "")."""
+    return track.rsplit("/", 1)[0] if "/" in track else ""
 
 
 class _Pool:
@@ -241,6 +247,8 @@ def check(events: Sequence[Event]) -> List[str]:
     requeues: Dict = {}                   # rid -> crash-reclaim licenses
     hedges: Dict = {}                     # rid -> hedge licenses
     spec_pending: Dict[str, int] = {}     # track -> uncommitted drafted
+    pool_tp: Dict[str, int] = {}          # engine scope -> pool-config tp
+    shard_tp: Dict[str, int] = {}         # engine scope -> shard-step tp
 
     for ev in events:
         a = ev.args or {}
@@ -260,12 +268,40 @@ def check(events: Sequence[Event]) -> List[str]:
                 errors.append(f"{ev.track}: duplicate pool.config")
             pools[ev.track] = _Pool(ev.track, a.get("groups", {}),
                                     int(a.get("slots", 0)))
+            pool_tp[_scope(ev.track)] = int(a.get("tp", 1))
         elif ev.name in (PAGE_ALLOC, PAGE_FREE, PAGE_RESERVE, PAGE_SHARE):
             pool = pools.get(ev.track)
             if pool is None:
                 errors.append(f"{ev.track}: {ev.name} before pool.config")
             else:
                 pool.apply(ev, errors)
+        # -- tensor-parallel shard discipline ----------------------------
+        elif ev.name == ENGINE_SHARD_STEP:
+            tp = int(a.get("tp", 0))
+            scope = _scope(ev.track)
+            if tp < 2:
+                errors.append(
+                    f"{ev.track}: engine.shard_step with tp={tp} "
+                    f"(a sharded step means >= 2 shards; t={ev.t0:.6f})")
+            prev_tp = shard_tp.setdefault(scope, tp)
+            if tp != prev_tp:
+                errors.append(
+                    f"{ev.track}: shard count changed mid-run "
+                    f"({prev_tp} -> {tp} at t={ev.t0:.6f}) — pages are "
+                    "head-sharded at bind time, a tp change would "
+                    "orphan every shard's pool slice")
+            if float(a.get("collective_s", 0.0)) < 0:
+                errors.append(f"{ev.track}: negative collective_s on "
+                              f"engine.shard_step at t={ev.t0:.6f}")
+        elif ev.name == ROUTE_XFER:
+            if a.get("link") not in ("dcn", "ici", "local"):
+                errors.append(
+                    f"{ev.track}: route.xfer with unknown link "
+                    f"{a.get('link')!r} at t={ev.t0:.6f}")
+            if float(a.get("in_s", 0.0)) < 0 or float(a.get("out_s",
+                                                            0.0)) < 0:
+                errors.append(f"{ev.track}: route.xfer with negative "
+                              f"transfer time at t={ev.t0:.6f}")
         # -- speculation commit discipline -------------------------------
         elif ev.name == SPEC_DRAFT:
             if ev.track in spec_pending:
@@ -325,6 +361,18 @@ def check(events: Sequence[Event]) -> List[str]:
     for track in sorted(spec_pending):
         errors.append(f"{track}: spec.draft never committed "
                       "(dangling round at end of trace)")
+    # per-shard page conservation: a tp-way engine's shards each hold
+    # 1/tp of every page's kv-heads, so the page ledger replayed above
+    # covers all shards at once *iff* the decode steps ran at the tp the
+    # pool was bound with — a mismatch means some shard's slice was
+    # allocated under different geometry than it decoded with
+    for scope, tp in sorted(shard_tp.items()):
+        bound = pool_tp.get(scope)
+        if bound is not None and bound != tp:
+            errors.append(
+                f"{scope or '<root>'}: engine.shard_step tp={tp} but the "
+                f"pool was bound with tp={bound} (per-shard page "
+                "conservation broken)")
     if not open_rids:                     # quiescent: no request live
         for pool in pools.values():
             if pool.lane_holdings():

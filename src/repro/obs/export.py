@@ -114,7 +114,10 @@ def drift_report(events: Sequence[Event],
     time their jit'd steps), returns per name ``{n, modeled_s, wall_s,
     ratio}`` — ``ratio`` is wall/modeled, the correction factor a
     calibration pass would fit.  Spans without ``wall_s`` aggregate
-    modeled time only (``wall_s``/``ratio`` = None)."""
+    modeled time only (``wall_s``/``ratio`` = None).  ``ratio`` is also
+    None when the modeled time sums to zero (an instantaneous span — a
+    zero-token chunk, a clock stub): there is no finite correction
+    factor, and emitting ``inf`` would poison any mean over ratios."""
     agg: Dict[str, Dict] = {}
     for ev in events:
         if ev.kind != "span" or (names is not None and ev.name not in names):
@@ -130,7 +133,7 @@ def drift_report(events: Sequence[Event],
     for a in agg.values():
         if a["measured"]:
             a["ratio"] = a["wall_s"] / a["modeled_s"] if a["modeled_s"] \
-                else float("inf")
+                else None
         else:
             a["wall_s"] = None
             a["ratio"] = None

@@ -101,6 +101,22 @@ ROUTE_RETIRE = "route.retire"
 #: request).  args: rid, cls, from_engine, to_engine, waited_s.
 #: track: "router"
 ROUTE_HEDGE = "route.hedge"
+#: instant — the router priced and applied an interconnect hop for a
+#: dispatch: prompt bytes ingress→engine over DCN (or free when
+#: co-located), response bytes back.  args: rid, cls, engine_idx, link
+#: ("dcn" | "ici" | "local"), in_s (inbound prompt transfer), out_s
+#: (outbound response transfer), aware (True = the hop entered the
+#: routing projection; the physics applies either way).  track: "router"
+ROUTE_XFER = "route.xfer"
+#: span — one batched decode step of a tensor-parallel sharded engine,
+#: emitted alongside ENGINE_STEP.  args: n_active, tp (model-axis size,
+#: constant for the engine's lifetime and >= 2), link ("ici" | "dcn"),
+#: collective_s (modeled per-step all-reduce tax).  check_trace audits
+#: that tp never changes mid-run and matches the pool config's tp — the
+#: per-shard page-conservation guarantee: every shard holds 1/tp of each
+#: page's kv-heads, so the *page* ledger is shared and the existing pool
+#: replay covers all shards at once.  track: engine-scoped
+ENGINE_SHARD_STEP = "engine.shard_step"
 
 #: instant — the fault injector fired one scheduled fault on an engine.
 #: args: engine_idx, fault ("crash" | "stall" | "slowdown" |
@@ -125,7 +141,9 @@ ENGINE_UP = "engine.up"
 REQ_REQUEUE = "req.requeue"
 
 #: instant at bind time — pool geometry the invariant checker needs.
-#: args: groups ({name: n_pages}), page_size, slots.  track: "pool"
+#: args: groups ({name: n_pages}), page_size, slots, tp (model-axis
+#: shards the pool's kv-heads split over; 1/absent = unsharded).
+#: track: "pool"
 POOL_CONFIG = "pool.config"
 #: instant — a page left the free list into *exclusive* ownership
 #: (refcount 1).  args: group, page, slot.  track: "pool"

@@ -75,12 +75,22 @@ class LatencyProfile:
     14b); ``None`` drafts with the same config at ``spec.draft_bits``
     (self-speculation, what the live engine runs).  Speculation pricing
     assumes the fused chunk-attend semantics, so it requires
-    ``attn_impl="fused"``."""
+    ``attn_impl="fused"``.
+
+    ``tp`` (tensor parallelism) shards every matmul across ``tp`` chips:
+    compute and weight traffic divide by ``tp`` (via ``hw.n_chips``), and
+    every forward pays the per-layer all-reduce tax of
+    :func:`repro.core.latency.tp_collective_s` over ``tp_link`` ("ici"
+    for a group on one host's fabric, "dcn" when the group spans hosts —
+    the spanning case is where the collective tax dominates and a
+    link-blind router misprices the engine).  :meth:`net_blind` returns
+    the collective-free twin used to model that blindness."""
 
     def __init__(self, cfg: ModelConfig, avg_bits: float, *,
                  hw: Hardware = V5E, attn_impl: str = "fused",
                  padded_ctx: Optional[int] = None, spec=None,
-                 draft_cfg: Optional[ModelConfig] = None):
+                 draft_cfg: Optional[ModelConfig] = None,
+                 tp: int = 1, tp_link: Optional[str] = "ici"):
         assert attn_impl in ("fused", "gather"), attn_impl
         assert spec is None or attn_impl == "fused", \
             "speculation is priced with fused chunk-attend semantics"
@@ -94,17 +104,52 @@ class LatencyProfile:
             raise ValueError(
                 "attn_impl='gather' models the paged decode path, which "
                 f"supports dense/moe attention stacks only (got {cfg.name})")
+        assert tp >= 1, tp
         self.cfg = cfg
         self.avg_bits = avg_bits
-        self.hw = hw
+        # a tp-way engine splits each matmul over tp chips: the roofline
+        # divides compute/bandwidth by hw.n_chips, and the collective tax
+        # is added separately below (None tp_link = priced collective-free,
+        # the "net-blind" router arm).
+        self.hw = dataclasses.replace(hw, n_chips=hw.n_chips * tp) \
+            if tp > 1 else hw
         self.attn_impl = attn_impl
         self.padded_ctx = padded_ctx
         self.spec = spec
         self.draft_cfg = draft_cfg
+        self.tp = tp
+        self.tp_link = tp_link
         self._prefill: Dict[Tuple[int, int], float] = {}
         self._step: Dict[Tuple[int, int], float] = {}
         self._service: Dict[Tuple[int, int], float] = {}
         self._spec_round: Dict[Tuple[int, int], float] = {}
+        self._blind: Optional["LatencyProfile"] = None
+
+    def _collective_s(self, n_tokens: int) -> float:
+        """Per-forward TP all-reduce tax on ``n_tokens`` activations (0 for
+        unsharded profiles and for the net-blind twin)."""
+        if self.tp <= 1 or self.tp_link is None:
+            return 0.0
+        return lat_mod.tp_collective_s(self.cfg, n_tokens, self.tp,
+                                       link=self.tp_link, hw=self.hw)
+
+    def net_blind(self) -> "LatencyProfile":
+        """The collective-free twin of this profile: same config, bits and
+        tp-way compute split, but no interconnect terms — what a router
+        that prices only roofline FLOPs believes this engine costs.  The
+        physics stays with the true profile; this one exists so the
+        net-blind baseline arm can mis-plan honestly."""
+        if self.tp <= 1 or self.tp_link is None:
+            return self
+        if self._blind is None:
+            self._blind = LatencyProfile(
+                self.cfg, self.avg_bits, hw=self.hw,
+                attn_impl=self.attn_impl, padded_ctx=self.padded_ctx,
+                spec=self.spec, draft_cfg=self.draft_cfg,
+                tp=self.tp, tp_link=None)
+            # hw already carries the tp-way n_chips split; don't double it
+            self._blind.hw = self.hw
+        return self._blind
 
     def prefill_s(self, prompt_len: int, context: int = 0) -> float:
         """Cost of absorbing ``prompt_len`` prompt tokens with ``context``
@@ -120,6 +165,7 @@ class LatencyProfile:
             t = lat_mod.resume_prefill_s(self.cfg, n_new=prompt_len,
                                          context=context,
                                          w_bits=self.avg_bits, hw=self.hw)
+            t += self._collective_s(prompt_len)
             self._prefill[key] = t
         return t
 
@@ -147,6 +193,7 @@ class LatencyProfile:
                     - lat_mod.paged_attn_step_s(
                         self.cfg, n_lanes=n_active, context=ctx_rep,
                         impl="fused", hw=self.hw)
+            t += self._collective_s(n_active)
             self._step[key] = t
         return t
 
@@ -164,6 +211,8 @@ class LatencyProfile:
                 context=bucket * _CTX_BUCKET, w_bits=self.avg_bits,
                 draft_bits=self.spec.draft_bits, draft_cfg=self.draft_cfg,
                 hw=self.hw)
+            # one collective per forward: k draft steps + the verify chunk
+            t += (self.spec.k + 1) * self._collective_s(n_active)
             self._spec_round[key] = t
         return t
 
@@ -190,6 +239,8 @@ class LatencyProfile:
                 t = lat_mod.decision_latency(self.cfg, prompt_len=prompt_len,
                                              gen_tokens=gen_tokens,
                                              w_bits=self.avg_bits, hw=self.hw)
+                t += self._collective_s(prompt_len) \
+                    + gen_tokens * self._collective_s(1)
             else:
                 t = self.prefill_s(prompt_len) + gen_tokens * self.tok_s(
                     1, prompt_len + gen_tokens // 2)
@@ -242,6 +293,15 @@ class _Running:
 # Admission math, shared by the analytic batcher and the live paged engine
 # (serving.paged_engine) — both project finish times on the same clock.
 # ---------------------------------------------------------------------------
+
+def ready_at(req) -> float:
+    """When an engine may start serving ``req``: its arrival at the fleet
+    ingress plus any network hop the router charged delivering the prompt
+    to this engine's host (``t_ready``, stamped at dispatch).  Engines gate
+    admission and idle-advance on this, so a cross-host dispatch cannot
+    start prefilling before its bytes have landed."""
+    t = getattr(req, "t_ready", None)
+    return req.t_arrive if t is None else t
 
 def _prefill_charge(profile: LatencyProfile, prompt_len: int,
                     n_active_after: int, prefill_chunk: Optional[int],
@@ -498,7 +558,7 @@ class ContinuousBatcher:
         """Admit the earliest-deadline *arrived* pending request, applying
         the drop/degrade policy.  Returns True if a slot was filled."""
         while True:
-            arrived = [r for r in self.pending if r.t_arrive <= self.t]
+            arrived = [r for r in self.pending if ready_at(r) <= self.t]
             if not arrived or len(self.active) >= self._slots_now():
                 return False
             req = min(arrived, key=lambda r: (r.deadline_abs, r.rid))
@@ -885,7 +945,7 @@ def drive(eng, until: Optional[float] = None) -> None:
     which engine happened to idle last."""
     while True:
         if eng._n_active() == 0 and eng.pending:
-            nxt = min(r.t_arrive for r in eng.pending)
+            nxt = min(ready_at(r) for r in eng.pending)
             if until is not None and nxt >= until and nxt > eng.t:
                 eng.t = max(eng.t, until)        # idle through the horizon
                 return

@@ -183,7 +183,9 @@ class FleetRouter:
                  probe_backoff_s: float = 0.5,
                  hedge: bool = False,
                  hedge_delay_s: Optional[float] = None,
-                 recover: bool = True):
+                 recover: bool = True,
+                 placements: Optional[Sequence] = None,
+                 topo=None, net_aware: bool = True):
         """``engines``: optional pre-built engine per candidate — anything
         speaking the batcher interface (``submit / drain / backlog_s /
         profile / on_retire``), e.g. live paged
@@ -211,7 +213,22 @@ class FleetRouter:
         ``recover``: with ``False`` the fleet still detects crashes and
         opens breakers, but reclaimed in-flight work is *stranded*
         (dropped) instead of re-dispatched — the naive baseline the
-        fault benchmark compares recovery against."""
+        fault benchmark compares recovery against.
+
+        ``placements`` / ``topo``: pin each candidate to a
+        :class:`~repro.launch.placement.Placement` on a
+        :class:`~repro.launch.placement.Topology`.  Internally built
+        engines then price their placement's physics — ``tp``-way
+        compute split plus per-layer all-reduces over the placement's
+        link — and every dispatch *applies* the topology's network hops
+        to the chosen request (prompt-landing ``t_ready``, response-hop
+        ``net_out_s``), whether or not the router priced them.
+        ``net_aware=False`` is the blind arm: routing projections use
+        each profile's :meth:`~repro.serving.continuous.LatencyProfile.
+        net_blind` twin and ignore dispatch hops, so a DCN-spanning
+        engine looks as fast as an ICI one — the physics still bites,
+        and the mispricing shows up as goodput lost
+        (``benchmarks/table_sharded.py``)."""
         assert mode in ("fpx", "bandit"), mode
         self.cands = list(candidates)
         self.quality = quality
@@ -219,6 +236,13 @@ class FleetRouter:
         self.epsilon = epsilon
         self.seed = seed
         self.tr = tracer or tr_mod.NULL
+        if placements is not None:
+            assert len(placements) == len(self.cands), \
+                (len(placements), len(self.cands))
+        self.placements = list(placements) if placements is not None \
+            else None
+        self.topo = topo
+        self.net_aware = net_aware
         if engines is None:
             self.engines = [
                 ContinuousBatcher(
@@ -226,7 +250,11 @@ class FleetRouter:
                         c.cfg, c.avg_bits, hw=hw, spec=c.spec,
                         draft_cfg=get_config(c.spec.draft_name)
                         if c.spec is not None and c.spec.draft_name
-                        else None),
+                        else None,
+                        tp=self.placements[i].tp if self.placements
+                        else 1,
+                        tp_link=self.placements[i].link
+                        if self.placements else "ici"),
                     slots=slots, policy=policy, on_retire=self._retire,
                     tracer=self.tr.scope(
                         f"eng{i}:{c.model_name}-g{c.gamma:g}"
@@ -308,6 +336,13 @@ class FleetRouter:
     def _account(self, req: SimRequest) -> None:
         """Realized reward: quality earned only by on-time tokens (goodput
         semantics — a late or dropped action is worth nothing)."""
+        if req.net_out_s and req.t_finish is not None and not req.dropped:
+            # client-facing clock: the response hop lands net_out_s after
+            # the engine finished.  met_deadline was already judged
+            # against the hop-shrunk engine deadline, so on-time stays
+            # on-time — only the reported finish/latency move.
+            req.t_finish += req.net_out_s
+            req.latency_s = req.t_finish - req.t_arrive
         cand = self.cands[req.engine_idx]
         if req.met_deadline and not req.dropped and req.max_new:
             frac = req.tokens_done / req.max_new
@@ -467,6 +502,23 @@ class FleetRouter:
                      if i not in exclude] or list(range(len(self.engines)))
         engines = [self.engines[i] for i in avail]
         waits = [e.backlog_s(now) for e in engines]
+        # network hops per engine: (inbound, outbound, link) from the
+        # topology.  Aware routing folds both hops into the wait term
+        # (the prompt can't start before it lands, the response eats
+        # deadline on the way back) and prices engines with their true
+        # collective-taxed profiles; blind routing uses the collective-
+        # free net_blind twins and ignores hops — but the chosen
+        # engine's physics is APPLIED below either way.
+        xfers = [(0.0, 0.0, "local")] * len(avail)
+        profs = [e.profile for e in engines]
+        if self.topo is not None and self.placements is not None:
+            xfers = [self.topo.dispatch(self.placements[i],
+                                        req.prompt_len, req.max_new)
+                     for i in avail]
+            if self.net_aware:
+                waits = [w + x[0] + x[1] for w, x in zip(waits, xfers)]
+        if not self.net_aware:
+            profs = [p.net_blind() for p in profs]
         # prefix-aware service estimates: an engine holding this prompt's
         # prefix warm (cached_prefix_len > 0) skips that span's prefill,
         # so its estimate drops by the resume discount — session turns
@@ -476,11 +528,11 @@ class FleetRouter:
         cached = [getattr(e, "cached_prefix_len", _no_prefix)(req)
                   for e in engines]
         lats = []
-        for e, l in zip(engines, cached):
-            t = e.profile.service_s(req.prompt_len, req.max_new)
+        for p, l in zip(profs, cached):
+            t = p.service_s(req.prompt_len, req.max_new)
             if l:
-                t -= (e.profile.prefill_s(req.prompt_len)
-                      - e.profile.prefill_s(req.prompt_len - l, context=l))
+                t -= (p.prefill_s(req.prompt_len)
+                      - p.prefill_s(req.prompt_len - l, context=l))
             lats.append(t)
         # first-token slack: with a streaming SLO, engines whose projected
         # TTFT (wait + discounted prefill + one uncontended step — a
@@ -490,9 +542,9 @@ class FleetRouter:
         ok = None
         if req.ttft_deadline_s is not None:
             ttft_budget = req.t_arrive + req.ttft_deadline_s - now
-            ok = [w + e.profile.prefill_s(req.prompt_len - l, context=l)
-                  + e.profile.tok_s(1, req.prompt_len + 1) <= ttft_budget
-                  for e, w, l in zip(engines, waits, cached)]
+            ok = [w + p.prefill_s(req.prompt_len - l, context=l)
+                  + p.tok_s(1, req.prompt_len + 1) <= ttft_budget
+                  for p, w, l in zip(profs, waits, cached)]
             if not any(ok):
                 ok = None
         if self.mode == "bandit":
@@ -517,6 +569,20 @@ class FleetRouter:
             j = sub[pick]
             idx = avail[j]
         req.engine_idx = idx
+        if self.topo is not None and self.placements is not None:
+            # physics, not pricing: the prompt lands after its hop (the
+            # engine cannot admit before t_ready) and the response hop
+            # shrinks the engine-side deadline (deadline_abs property) —
+            # applied to EVERY dispatch, aware and blind alike
+            in_s, out_s, link = xfers[j]
+            req.net_in_s = in_s
+            req.net_out_s = out_s
+            req.t_ready = now + in_s if in_s > 0 else None
+            if self.tr:
+                self.tr.instant(tr_mod.ROUTE_XFER, now, track="router",
+                                rid=req.rid, cls=req.cls_name,
+                                engine_idx=idx, link=link, in_s=in_s,
+                                out_s=out_s, aware=self.net_aware)
         if self.tr:
             self.tr.instant(tr_mod.ROUTE_DISPATCH, now,
                             track="router", rid=req.rid, cls=req.cls_name,

@@ -159,6 +159,9 @@ class PagedKVCache:
             self.block_tables[g.name] = np.full(
                 (slots, self.table_width), DUMMY_PAGE, np.int32)
         self.pos = np.zeros((slots,), np.int32)
+        #: model-axis shards the pools' kv-heads are split over (1 =
+        #: unsharded; set by :meth:`shard`, reported in ``pool.config``)
+        self.tp = 1
         #: per group: pages currently seized by fault-injected pressure
         #: (see :meth:`seize`) — outside the slot reservation arrays
         #: because the "holder" is no lane
@@ -182,7 +185,24 @@ class PagedKVCache:
         if self.tr:
             self.tr.instant(tr_mod.POOL_CONFIG, clock(), track="pool",
                             groups=dict(self._group_pages),
-                            page_size=self.page_size, slots=self.slots)
+                            page_size=self.page_size, slots=self.slots,
+                            tp=self.tp)
+
+    def shard(self, sharding, *, tp: int = 1) -> None:
+        """Place every group's k/v pool under ``sharding`` (a
+        :class:`jax.sharding.NamedSharding`, typically
+        :func:`repro.launch.shardings.paged_pool_shardings` — kv-heads on
+        the "model" axis).  The block tables, free lists and refcounts
+        stay host-side and *shared*: every shard holds the same pages'
+        head-slice, so page accounting is per-page, not per-shard.  GSPMD
+        propagates the placement through the jit'd decode steps, so pools
+        written by ``update_from`` stay sharded.  Call before the first
+        step (re-placing hot pools would re-transfer them)."""
+        assert tp >= 1, tp
+        self.tp = tp
+        for g in self.groups:
+            self.kpool[g.name] = jax.device_put(self.kpool[g.name], sharding)
+            self.vpool[g.name] = jax.device_put(self.vpool[g.name], sharding)
 
     def free_by_group(self) -> Dict[str, int]:
         """Current free-list sizes per group (the pool gauges)."""
@@ -749,19 +769,30 @@ class PrefixCache:
         return hashlib.blake2b(raw, digest_size=16).digest()
 
     def lookup(self, toks: np.ndarray) -> Tuple[Optional[dict], int]:
-        """Longest cached strict prefix of ``toks`` -> (snapshot, length),
-        or (None, 0).  A hit refreshes the entry's LRU position."""
+        """Longest adoptable cached prefix of ``toks`` -> (snapshot,
+        adoptable length), or (None, 0).  A hit refreshes the entry's LRU
+        position.
+
+        Adoption is *strictly* shorter than the prompt: at least one
+        token must be re-absorbed, because the first output token is
+        sampled from the prefill logits.  An entry covering the whole
+        prompt (an identical prompt served earlier — the in-flight
+        registry's wait-and-adopt case) is therefore adopted at
+        ``len(toks) - 1``: :meth:`PagedKVCache.alloc` truncates the
+        snapshot and the boundary page's final position is rewritten
+        post-CoW by the one absorbed token."""
         lens = sorted({e["len"] for e in self._entries.values()},
                       reverse=True)
         for n in lens:
-            if n > len(toks) - 1:
+            adopt = min(n, len(toks) - 1)
+            if n > len(toks) or adopt < 1:
                 continue
             key = self._key(toks, n)
             e = self._entries.get(key)
             if e is not None and np.array_equal(e["toks"], toks[:n]):
                 self._entries.move_to_end(key)
                 self.hits += 1
-                return e["snap"], n
+                return e["snap"], adopt
         self.misses += 1
         return None, 0
 
@@ -772,11 +803,12 @@ class PrefixCache:
         eviction order just by estimating."""
         for n in sorted({e["len"] for e in self._entries.values()},
                        reverse=True):
-            if n > len(toks) - 1:
+            adopt = min(n, len(toks) - 1)
+            if n > len(toks) or adopt < 1:
                 continue
             e = self._entries.get(self._key(toks, n))
             if e is not None and np.array_equal(e["toks"], toks[:n]):
-                return n
+                return adopt
         return 0
 
     def insert(self, slot: int, toks: np.ndarray, n_tokens: int) -> bool:

@@ -79,7 +79,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -96,8 +96,9 @@ from repro.serving.continuous import (LatencyProfile, degraded_budget,
                                       emit_admit, emit_arrive, emit_finish,
                                       estimate_backlog, mark_first_token,
                                       post_prefill_fit, projected_finish,
-                                      projected_first_token, retire_cancelled,
-                                      retire_dropped, spec_round_fits)
+                                      projected_first_token, ready_at,
+                                      retire_cancelled, retire_dropped,
+                                      spec_round_fits)
 from repro.serving.continuous import drive as continuous_drive
 from repro.serving.kv_cache import PagedKVCache, PrefixCache
 from repro.serving.traffic import session_prompt_tokens
@@ -114,6 +115,10 @@ class _Lane:
     #: once prefill completes and the lane is decoding)
     prompt_toks: Optional[np.ndarray] = None
     absorbed: int = 0
+    #: in-flight prefill registry key (full-prompt hash) this lane holds
+    #: while its prompt is being prefilled — cleared on publication or
+    #: teardown (see ContinuousEngine._inflight)
+    inflight_key: Optional[bytes] = None
 
     @property
     def prefilling(self) -> bool:
@@ -136,7 +141,9 @@ class ContinuousEngine:
                  attn_impl: str = "fused", tracer=None,
                  sampler: Optional[sampler_mod.SamplerPolicy] = None,
                  speculate: Optional[SpecPoint] = None,
-                 prefix_cache=False):
+                 prefix_cache=False, mesh=None,
+                 sharding_policy: str = "baseline",
+                 tp_link: str = "ici"):
         """``n_pages`` defaults to enough for every lane to hold ``max_ctx``
         tokens (plus the reserved dummy page); size it *below* that to study
         page-pressure admission.  ``profile`` / ``latency_cfg`` / ``avg_bits``
@@ -199,7 +206,19 @@ class ContinuousEngine:
         (``cached_prefix=``) — and publishes the finished prompt's
         shareable spans back into the cache.  Requires an
         all-full-attention stack (window groups trim pages positionally,
-        so prefix snapshots are not reusable)."""
+        so prefix snapshots are not reusable).
+
+        ``mesh``: a jax ("data", "model") mesh (e.g. :func:`repro.launch.
+        mesh.sim_mesh`) makes the engine *tensor-parallel*: params are
+        placed under the :mod:`repro.launch.shardings` FSDP x TP rules
+        (``sharding_policy``), the paged KV pools shard their kv-heads
+        over the "model" axis, and GSPMD partitions the existing jit'd
+        steps — same graphs, sharded operands, token-identical outputs.
+        The default-constructed profile prices the split honestly:
+        per-chip compute/bandwidth divide by the model-axis size and
+        every forward pays the per-layer all-reduce tax over ``tp_link``
+        ("ici" intra-host, "dcn" when the TP group spans hosts).  None
+        (default) = unsharded, bit-identical to the historical engine."""
         if not transformer.paged_supported(cfg):
             raise NotImplementedError(
                 "ContinuousEngine needs the paged decode path, which "
@@ -228,12 +247,19 @@ class ContinuousEngine:
         #: the larger of a prefill chunk and a speculative write span
         self._page_chunk = (prefill_chunk if speculate is None
                             else max(prefill_chunk or 1, speculate.k + 1))
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None and "model" in mesh.axis_names:
+            self.tp = int(mesh.shape["model"])
+        assert tp_link in ("ici", "dcn"), tp_link
+        self._tp_link = tp_link
         width = -(-max_ctx // page_size)
         self.profile = profile or LatencyProfile(latency_cfg or cfg,
                                                  avg_bits, hw=hw,
                                                  attn_impl=attn_impl,
                                                  padded_ctx=width * page_size,
-                                                 spec=speculate)
+                                                 spec=speculate,
+                                                 tp=self.tp, tp_link=tp_link)
         assert self.profile.spec == speculate, \
             "engine speculate and profile.spec must agree (one clock)"
         self.ctx = ctx or ExecContext()
@@ -243,6 +269,18 @@ class ContinuousEngine:
             n_pages = slots * width + 1
         self.cache = PagedKVCache(cfg, slots=slots, n_pages=n_pages,
                                   page_size=page_size, max_ctx=max_ctx)
+        if self.tp > 1:
+            # committed shardings drive GSPMD through the jit'd steps:
+            # params under the FSDP x TP rules, pools head-sharded — the
+            # step graphs are unchanged and outputs stay token-identical
+            # to the unsharded twin (tests/test_sharded.py pins this)
+            from repro.launch import shardings as sh_mod
+            self.params = jax.device_put(
+                params, sh_mod.param_shardings(params, mesh,
+                                               sharding_policy))
+            params = self.params
+            self.cache.shard(sh_mod.paged_pool_shardings(cfg, mesh),
+                             tp=self.tp)
         self.prefix: Optional[PrefixCache] = None
         if prefix_cache:
             if any(g.window is not None for g in self.cache.groups):
@@ -261,6 +299,15 @@ class ContinuousEngine:
         self.cache.bind_tracer(self.tr, lambda: self.t)
         self.lanes: List[Optional[_Lane]] = [None] * slots
         self.pending: List = []
+        #: in-flight prefill registry (prefix cache on): full-prompt hash
+        #: -> rid of the lane currently prefilling that exact prompt.
+        #: Admission *skips* (not drops) a pending request whose prompt is
+        #: in flight — publication happens only at prefill completion, so
+        #: without this, N identical prompts admitted in one wave would
+        #: all miss the cache and each re-prefill the full prompt; with
+        #: it, the waiters admit after publication and adopt all but the
+        #: last token (lookup is strict-prefix), absorbing one token each.
+        self._inflight: Dict[bytes, int] = {}
         self.completed: List = []
         self.dropped: List = []
         #: (rid, page ids) per admission — observability for tests/benchmarks
@@ -293,6 +340,7 @@ class ContinuousEngine:
             self.lanes[i] = None
             self.cache.free(i)
             out.append(l.req)
+        self._inflight.clear()
         if self.prefix is not None:
             self.prefix.clear()
         out.extend(self.pending)
@@ -457,9 +505,16 @@ class ContinuousEngine:
         EDF queue and waits for a retirement to free some.  With the
         prefix cache on, the prompt is looked up first and every
         projection prices the discounted (remainder-only) prefill; under
-        page pressure cold cache entries are evicted before waiting."""
+        page pressure cold prefix-cache entries are evicted before
+        waiting.  A request whose exact prompt is *currently being
+        prefilled* by another lane is skipped (not dropped, not admitted):
+        it waits for that prefill to publish, then adopts the cached
+        prefix instead of duplicating the work — the in-flight registry
+        fix for the all-waiters-miss bug."""
+        skipped: set = set()
         while True:
-            arrived = [r for r in self.pending if r.t_arrive <= self.t]
+            arrived = [r for r in self.pending
+                       if ready_at(r) <= self.t and r.rid not in skipped]
             lane = self._free_lane()
             if not arrived or lane is None:
                 return False
@@ -478,6 +533,14 @@ class ContinuousEngine:
             cached = 0
             if self.prefix is not None:
                 toks = self._prompt_for(req)
+                holder = self._inflight.get(
+                    PrefixCache._key(toks, len(toks)))
+                if holder is not None and holder != req.rid:
+                    # same prompt mid-prefill on another lane: wait for
+                    # it to publish, then adopt — try the next EDF
+                    # candidate meanwhile (the lane stays usable)
+                    skipped.add(req.rid)
+                    continue
                 snap, cached = self.prefix.lookup(toks)
                 if self.tr:
                     self.tr.instant(tr_mod.PREFIX_LOOKUP, self.t,
@@ -561,6 +624,7 @@ class ContinuousEngine:
                     or l.req.t_cancel > self.t:
                 continue
             self.lanes[i] = None
+            self._release_inflight(l)
             self.cache.free(i)
             l.req.result_tokens = np.asarray(l.produced, np.int32)
             retire_cancelled(self, l.req)
@@ -599,10 +663,16 @@ class ContinuousEngine:
             emit_admit(self.tr, req, self.t, n_tok, track=f"lane{lane}")
         if toks is None:
             toks = self._prompt_for(req)
+        ikey = None
+        if self.prefix is not None:
+            # claim the prompt in the in-flight registry until the prefill
+            # publishes — concurrent identical prompts wait-and-adopt
+            ikey = PrefixCache._key(toks, len(toks))
+            self._inflight[ikey] = req.rid
         if self.prefill_chunk is not None:
             self.lanes[lane] = _Lane(req, last_token=None, remaining=n_tok,
                                      context=cached, prompt_toks=toks,
-                                     absorbed=cached)
+                                     absorbed=cached, inflight_key=ikey)
             return
         w0 = time.perf_counter()
         if cached:
@@ -630,7 +700,7 @@ class ContinuousEngine:
                          track=f"lane{lane}", rid=req.rid, tokens=S - cached,
                          cached=cached, wall_s=time.perf_counter() - w0)
         lane_state = _Lane(req, last_token=None, remaining=n_tok,
-                           context=S)
+                           context=S, inflight_key=ikey)
         self.lanes[lane] = lane_state
         self._finish_prefill(lane, lane_state, first_tok, toks)
 
@@ -678,6 +748,14 @@ class ContinuousEngine:
                 l.prompt_toks = None
                 self._finish_prefill(i, l, first_tok, prompt)
 
+    def _release_inflight(self, l: _Lane) -> None:
+        """Drop the lane's in-flight registry claim (prefill published, or
+        the lane tore down without publishing — waiters then prefill
+        themselves)."""
+        if l.inflight_key is not None:
+            self._inflight.pop(l.inflight_key, None)
+            l.inflight_key = None
+
     def _maybe_insert(self, lane: int, req, toks) -> None:
         """Publish the finished prompt's shareable spans into the prefix
         cache: the lengths the request declared in ``prefix_keys``
@@ -709,6 +787,7 @@ class ContinuousEngine:
         # exists the instant the prompt is absorbed: TTFT == prefill done
         mark_first_token(req, self.t)
         self._maybe_insert(lane, req, prompt_toks)
+        self._release_inflight(l)         # published: waiters may adopt
         t0 = int(np.asarray(first_tok)[0, 0])
         l.last_token = t0
         l.produced = [t0]
@@ -800,6 +879,12 @@ class ContinuousEngine:
                          n_active=len(active), context=ctx,
                          lanes=[l.req.rid for _, l in active],
                          wall_s=time.perf_counter() - w0)
+            if self.tp > 1:
+                self.tr.span(tr_mod.ENGINE_SHARD_STEP, t0, self.t,
+                             track="steps", n_active=len(active),
+                             tp=self.tp, link=self._tp_link,
+                             collective_s=self.profile._collective_s(
+                                 len(active)))
         for i, l in active:
             # the step wrote position pos; window-group pages that fell
             # out of the window go back to the pool immediately

@@ -61,6 +61,12 @@ class Request:
     t_cancel: Optional[float] = None
     cancelled: bool = False
 
+    # network placement (SimRequest contract): prompt-landing time and
+    # modeled hop costs, stamped by a topology-aware router
+    t_ready: Optional[float] = None
+    net_in_s: float = 0.0
+    net_out_s: float = 0.0
+
     @property
     def prompt_len(self) -> int:
         return len(self.prompt)
@@ -69,7 +75,7 @@ class Request:
     def deadline_abs(self) -> float:
         if self.deadline_s is None:
             return float("inf")
-        return self.t_arrive + self.deadline_s
+        return self.t_arrive + self.deadline_s - self.net_out_s
 
 
 class Scheduler:

@@ -106,9 +106,22 @@ class SimRequest:
     #: metrics count the rid once, by the winning attempt
     hedge_loser: bool = False
 
+    # network placement (stamped by the fleet router at dispatch when a
+    # topology is configured; zero/None for co-located engines)
+    #: absolute time the prompt bytes land on the serving host — the
+    #: engine may not start prefill before this (None = t_arrive)
+    t_ready: Optional[float] = None
+    #: modeled inbound / outbound hop costs (ingress→engine prompt
+    #: transfer, engine→ingress response transfer), for accounting
+    net_in_s: float = 0.0
+    net_out_s: float = 0.0
+
     @property
     def deadline_abs(self) -> float:
-        return self.t_arrive + self.deadline_s
+        """When the *engine* must finish: the client's absolute deadline
+        pulled in by the response hop — tokens generated at the client's
+        deadline minus the return transfer still arrive on time."""
+        return self.t_arrive + self.deadline_s - self.net_out_s
 
     def fresh(self) -> "SimRequest":
         """Copy with lifecycle state cleared — lets the same workload be

@@ -85,10 +85,22 @@ FAULTS = (["path", "offered", "served", "dropped", "retried", "hedged",
            ["recovering+hedge", "243", "240", "3", "13", "20", "0.963",
             "3690.0", "209.0", "5628", "21"]])
 
+SHARDED = (["arm", "engines", "max_tp", "max_link", "net_aware",
+            "offered", "served", "dropped", "hit_rate", "p99_ms",
+            "goodput", "engine_shares"],
+           [["sharded-tp8", "1", "8", "ici", "1", "49", "49", "0",
+             "1.000", "63.0", "49.0", "49"],
+            ["fallback-tp1", "8", "1", "ici", "1", "49", "49", "0",
+             "1.000", "249.8", "42.3", "28/14/6/1/0/0/0/0"],
+            ["net-aware", "2", "16", "dcn", "1", "49", "49", "0",
+             "1.000", "63.0", "49.0", "49/0"],
+            ["net-blind", "2", "16", "dcn", "0", "49", "47", "2",
+             "0.959", "253.5", "22.6", "18/29"]])
+
 ALL = {"table_paged.csv": PAGED, "table_chunked.csv": CHUNKED,
        "table_paged_attn.csv": ATTN, "table_hybrid.csv": HYBRID,
        "table_spec.csv": SPEC, "table_sessions.csv": SESSIONS,
-       "table_faults.csv": FAULTS}
+       "table_faults.csv": FAULTS, "table_sharded.csv": SHARDED}
 
 
 def mutate_spec(mix, arm, column, value):
@@ -138,7 +150,7 @@ def mutate(name, path_key, column, value, key_col="path"):
 
 def test_identical_tables_pass(tmp_path, capsys):
     assert run_gate(tmp_path) == 0
-    assert "7 tables OK" in capsys.readouterr().out
+    assert "8 tables OK" in capsys.readouterr().out
 
 
 def test_within_tolerance_passes(tmp_path):
@@ -331,6 +343,51 @@ def test_faults_missing_row_fails(tmp_path, capsys):
     assert run_gate(tmp_path,
                     fresh_override={"table_faults.csv": drop_naive},
                     base_override={"table_faults.csv": drop_naive}) == 1
+    assert "missing rows" in capsys.readouterr().err
+
+
+def test_sharded_goodput_drift_fails(tmp_path, capsys):
+    over = mutate("table_sharded.csv", "sharded-tp8", "goodput", "30.0",
+                  key_col="arm")
+    assert run_gate(tmp_path, fresh_override=over) == 1
+    assert "goodput dropped" in capsys.readouterr().err
+
+
+def test_sharded_not_beating_fallback_fails(tmp_path, capsys):
+    # drift-clean, but tensor parallelism no longer wins at equal
+    # capacity: the claim the table exists to prove is gone
+    over = mutate("table_sharded.csv", "sharded-tp8", "goodput", "42.3",
+                  key_col="arm")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "not strictly above fallback-tp1" in capsys.readouterr().err
+
+
+def test_sharded_aware_not_beating_blind_fails(tmp_path, capsys):
+    over = mutate("table_sharded.csv", "net-blind", "goodput", "49.0",
+                  key_col="arm")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "not strictly above net-blind" in capsys.readouterr().err
+
+
+def test_sharded_vacuous_blind_comparison_fails(tmp_path, capsys):
+    # the blind router never used the DCN-spanning engine: the
+    # aware/blind goodput gap proves nothing about link pricing
+    over = mutate("table_sharded.csv", "net-blind", "engine_shares",
+                  "47/0", key_col="arm")
+    assert run_gate(tmp_path, fresh_override=over,
+                    base_override=over) == 1
+    assert "never chose the DCN-spanning engine" in \
+        capsys.readouterr().err
+
+
+def test_sharded_missing_row_fails(tmp_path, capsys):
+    def drop_blind(header, rows):
+        return header, [r for r in rows if r[0] != "net-blind"]
+    assert run_gate(tmp_path,
+                    fresh_override={"table_sharded.csv": drop_blind},
+                    base_override={"table_sharded.csv": drop_blind}) == 1
     assert "missing rows" in capsys.readouterr().err
 
 

@@ -267,6 +267,31 @@ def test_drift_report_ratio():
     assert rep[tr_mod.REQ_QUEUE]["ratio"] is None    # no wall_s arg
 
 
+def test_drift_report_zero_modeled_span_has_no_ratio():
+    """A measured span whose modeled time is zero (zero-token chunk, clock
+    stub) has no finite correction factor: ratio must be None, not inf —
+    inf would poison any mean over ratios and is not JSON-serializable."""
+    tr = Tracer(wall_clock=lambda: 0.0)
+    tr.span(tr_mod.ENGINE_STEP, 1.0, 1.0, track="steps", n_active=1,
+            wall_s=0.005)
+    rep = drift_report(tr.events)
+    step = rep[tr_mod.ENGINE_STEP]
+    assert step["modeled_s"] == 0.0
+    assert step["wall_s"] == pytest.approx(0.005)
+    assert step["ratio"] is None
+    json.dumps(rep)                        # exportable as-is
+
+
+def test_reservoir_empty_percentile_is_nan_not_inf():
+    """Percentile of an empty reservoir is nan at every q (not inf, not a
+    crash) — the empty-window case every percentile gauge hits at t=0."""
+    r = Reservoir(k=4, seed=0)
+    for q in (0, 50, 99, 100):
+        assert np.isnan(r.percentile(q))
+    r.add(2.0)
+    assert r.percentile(99) == 2.0
+
+
 # -- the invariant checker rejects corrupted streams ------------------------
 
 def _pool_stream(*extra_args_events):

@@ -240,3 +240,68 @@ def test_fleet_router_drives_live_paged_engines(params):
     # tight deadlines landed on the fast engine, loose ones on the 14b
     assert {r.engine_idx for r in arrivals if r.deadline_s < 0.1} == {0}
     assert 1 in {r.engine_idx for r in arrivals if r.deadline_s > 1.0}
+
+
+# -- in-flight prefill registry ----------------------------------------------
+
+def test_identical_prompts_share_one_prefill(params):
+    """Regression: N identical prompts admitted in one wave used to ALL
+    miss the prefix cache — publication happens only at prefill
+    completion, so every concurrent admission prefilled the full prompt
+    from scratch.  The in-flight registry holds the waiters in the queue
+    until the leader publishes; each then adopts all but the last token
+    and absorbs exactly one (the first output token is sampled from the
+    prefill logits, so one token must be re-absorbed)."""
+    from repro.obs import trace as tr_mod
+
+    N, P = 3, 20
+    prompt = _prompts([P])[0]
+
+    def wave():
+        return _reqs([prompt] * N, max_new=4, deadline=100.0)
+
+    base = wave()
+    beng = ContinuousEngine(params, CFG, slots=N, page_size=8, max_ctx=40,
+                            policy="serve", prefill_chunk=8)
+    for r in base:
+        beng.submit(r)
+    beng.run()
+
+    reqs = wave()
+    tr = tr_mod.Tracer()
+    eng = ContinuousEngine(params, CFG, slots=N, page_size=8, max_ctx=40,
+                           policy="serve", prefill_chunk=8,
+                           prefix_cache=True, tracer=tr)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+
+    # token identity with the registry-free engine
+    for b, r in zip(base, reqs):
+        assert r.result_tokens is not None
+        assert np.array_equal(b.result_tokens, r.result_tokens)
+    # exactly one prefill's worth of chunk charges plus one absorbed
+    # token per waiter — not N full prefills
+    chunks = [e for e in tr.events
+              if e.name == tr_mod.REQ_PREFILL_CHUNK]
+    assert sum(e.args["chunk"] for e in chunks) == P + (N - 1)
+    assert eng.prefix.hits == N - 1 and eng.prefix.misses == 1
+    # the registry is empty at quiescence (every key released)
+    assert eng._inflight == {}
+
+
+def test_inflight_registry_released_on_cancel(params):
+    """A leader cancelled mid-prefill must release its registry key, or
+    the identical waiter would be skipped forever (admission livelock)."""
+    P = 20
+    prompt = _prompts([P])[0]
+    leader, waiter = _reqs([prompt] * 2, max_new=4, deadline=100.0)
+    leader.t_cancel = 1e-9                # barge-in before prefill finishes
+    eng = ContinuousEngine(params, CFG, slots=1, page_size=8, max_ctx=40,
+                           policy="serve", prefill_chunk=8,
+                           prefix_cache=True)
+    eng.submit(leader)
+    eng.submit(waiter)
+    eng.run()
+    assert waiter.result_tokens is not None and len(waiter.result_tokens)
+    assert eng._inflight == {}

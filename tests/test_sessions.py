@@ -170,16 +170,23 @@ def test_share_adopt_cow_refcount_lifecycle():
 
 
 def test_prefix_cache_lookup_is_strict_and_verified():
-    """An exact-length prompt never hits its own entry (at least one token
-    must remain to prefill), probe() matches lookup() without perturbing
-    LRU order, and a hash key never serves mismatched tokens."""
+    """*Adoption* is strictly shorter than the prompt (at least one token
+    must remain to prefill — the first output token is sampled from the
+    prefill logits), but an exact-length match IS adoptable at all but
+    its last token: that is what lets a wave of identical prompts reuse
+    the leader's prefill (the in-flight registry fix).  probe() matches
+    lookup() without perturbing LRU order, and a hash key never serves
+    mismatched tokens."""
     cache = PagedKVCache(CFG, slots=2, n_pages=24, page_size=4, max_ctx=32)
     pc = PrefixCache(cache)
     toks = np.arange(12, dtype=np.int32)
     cache.alloc(0, 16)
     cache.write_prefill(0, _zero_prefill_kv(CFG, cache, 12))
     assert pc.insert(0, toks, 12)
-    assert pc.lookup(toks) == (None, 0)                 # strict prefix only
+    snap, n = pc.lookup(toks)
+    assert n == 11 and snap is not None     # exact match: adopt all but 1
+    assert pc.probe(toks) == 11
+    assert pc.probe(toks[:1]) == 0          # nothing shorter than 1 adoptable
     longer = np.concatenate([toks, [99]]).astype(np.int32)
     order_before = list(pc._entries)
     assert pc.probe(longer) == 12

@@ -1,0 +1,324 @@
+"""Multi-host sharded fleet: the DCN/ICI clock terms, tensor-parallel
+profile pricing, network-aware routing, and the sharded-vs-unsharded
+differential on a simulated device mesh.
+
+The differential tests need >= 2 devices.  Tier-1 CI runs single-device
+and skips them; the dedicated simulated-mesh pass sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before pytest so
+``jax.device_count()`` reports 8 and the full suite runs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import (make_requests, pallas_modes, run_paged,
+                      servable_smoke_configs, smoke_params)
+from repro.configs import get_config
+from repro.core import latency as lat
+from repro.launch.mesh import sim_mesh
+from repro.launch.placement import Placement, Topology, placements_summary
+from repro.obs import trace as tr_mod
+from repro.obs.check_trace import check
+from repro.serving import fleet as fleet_mod
+from repro.serving.continuous import ContinuousBatcher, LatencyProfile
+from repro.serving.fleet import FleetRouter, pool_candidates
+from repro.serving.traffic import SimRequest
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a simulated multi-device mesh (set XLA_FLAGS="
+           "--xla_force_host_platform_device_count=8 before jax imports)")
+
+
+# -- the clock contract's transfer terms ------------------------------------
+
+def test_xfer_zero_and_monotone():
+    assert lat.xfer_s(0) == 0.0
+    assert lat.xfer_s(-4) == 0.0
+    a, b = lat.xfer_s(1 << 10), lat.xfer_s(1 << 20)
+    assert 0.0 < a < b
+    # latency floor: a single byte still pays the link latency
+    assert lat.xfer_s(1, "ici") >= lat.ICI_LAT_S
+    assert lat.xfer_s(1, "dcn") >= lat.DCN_LAT_S
+
+
+def test_xfer_dcn_much_slower_than_ici():
+    # latency-dominated regime: small payloads pay the 25x hop latency
+    assert lat.xfer_s(64, "dcn") > 10.0 * lat.xfer_s(64, "ici")
+    # bandwidth-dominated regime: still strictly slower
+    assert lat.xfer_s(1 << 24, "dcn") > lat.xfer_s(1 << 24, "ici")
+    with pytest.raises(ValueError):
+        lat.xfer_s(64, "pcie")
+
+
+def test_allreduce_zero_cases_and_scaling():
+    assert lat.allreduce_s(1 << 20, 1) == 0.0      # no peers, no collective
+    assert lat.allreduce_s(0, 8) == 0.0
+    n = 1 << 20
+    t2, t8 = lat.allreduce_s(n, 2), lat.allreduce_s(n, 8)
+    # ring all-reduce: 2(n-1)/n * bytes/bw — grows with group size but
+    # stays bounded by 2x the wire time
+    assert 0.0 < t2 < t8
+    assert t8 < 2.0 * n / lat.Hardware().ici_bw + 16 * lat.ICI_LAT_S
+
+
+def test_tp_collective_prices_per_layer_allreduces():
+    cfg = get_config("dbrx-132b")
+    assert lat.tp_collective_s(cfg, 1, 1) == 0.0
+    assert lat.tp_collective_s(cfg, 0, 8) == 0.0
+    one = lat.tp_collective_s(cfg, 1, 8)
+    assert one == pytest.approx(
+        2.0 * cfg.n_layers * lat.allreduce_s(cfg.d_model * 2.0, 8))
+    # the mispricing lever: the same group over DCN is orders slower
+    assert lat.tp_collective_s(cfg, 1, 8, link="dcn") > 10.0 * one
+
+
+# -- tensor-parallel profile pricing ----------------------------------------
+
+def test_profile_tp_splits_compute_and_taxes_collectives():
+    cfg = get_config("dbrx-132b")
+    base = LatencyProfile(cfg, 16.0)
+    tp8 = LatencyProfile(cfg, 16.0, tp=8, tp_link="ici")
+    free = LatencyProfile(cfg, 16.0, tp=8, tp_link=None)
+    # collective-free tp split is strictly faster per step (8x the chips)
+    assert free.step_s(1, 256) < base.step_s(1, 256)
+    # the priced profile pays exactly the collective on top
+    assert tp8.step_s(1, 256) == pytest.approx(
+        free.step_s(1, 256) + lat.tp_collective_s(cfg, 1, 8, hw=tp8.hw))
+    assert tp8.prefill_s(256) == pytest.approx(
+        free.prefill_s(256) + lat.tp_collective_s(cfg, 256, 8, hw=tp8.hw))
+    # service_s inherits both terms; a DCN-spanning group is far slower
+    dcn = LatencyProfile(cfg, 16.0, tp=8, tp_link="dcn")
+    assert dcn._collective_s(1) > 10.0 * tp8._collective_s(1)
+    assert dcn.step_s(1, 256) > 3.0 * tp8.step_s(1, 256)
+
+
+def test_net_blind_twin_drops_collectives_only():
+    cfg = get_config("qwen2.5-7b")
+    tp = LatencyProfile(cfg, 16.0, tp=4, tp_link="dcn")
+    blind = tp.net_blind()
+    assert blind is tp.net_blind()           # memoized
+    assert blind.hw is tp.hw                 # same compute split, no re-split
+    assert blind._collective_s(1) == 0.0
+    assert blind.step_s(1, 128) < tp.step_s(1, 128)
+    # a tp=1 profile is its own blind twin
+    flat = LatencyProfile(cfg, 16.0)
+    assert flat.net_blind() is flat
+
+
+# -- network physics on requests --------------------------------------------
+
+def _req(rid, *, t=0.0, prompt=64, new=8, deadline=1.0):
+    return SimRequest(rid=rid, cls_name="t", t_arrive=t, prompt_len=prompt,
+                      max_new=new, deadline_s=deadline)
+
+
+def test_deadline_abs_shrinks_by_response_hop():
+    r = _req(0, deadline=1.0)
+    assert r.deadline_abs == pytest.approx(1.0)
+    r.net_out_s = 0.25
+    assert r.deadline_abs == pytest.approx(0.75)
+    # fresh() clears placement physics along with lifecycle state
+    assert r.fresh().net_out_s == 0.0 and r.fresh().t_ready is None
+
+
+def test_admission_waits_for_prompt_landing():
+    prof = LatencyProfile(get_config("qwen2.5-1.5b"), 4.0)
+    b = ContinuousBatcher(prof, slots=2, policy="serve")
+    here = _req(0, deadline=10.0)
+    remote = _req(1, deadline=10.0)
+    remote.t_ready = 0.2                     # prompt lands after its hop
+    for r in (here, remote):
+        b.submit(r)
+    b.run()
+    assert here.t_admit < 0.2
+    assert remote.t_admit >= 0.2
+    assert not remote.dropped
+
+
+def test_topology_dispatch_and_placement():
+    topo = Topology(n_hosts=2, chips_per_host=8)
+    assert topo.dispatch(Placement(host=0), 64, 8) == (0.0, 0.0, "local")
+    in_s, out_s, link = topo.dispatch(Placement(host=1), 64, 8)
+    assert link == "dcn" and in_s > 0.0 and out_s > 0.0
+    assert in_s > out_s                      # 64 prompt tokens vs 8 out
+    assert topo.place_tp(8).link == "ici"
+    assert topo.place_tp(16).link == "dcn"   # spans hosts
+    hosts = [p.host for p in topo.spread(4, tp=4)]
+    assert hosts == [0, 0, 1, 1]             # 2 tp-4 engines per 8-chip host
+    assert "2 hosts" in placements_summary(topo.spread(2), topo)
+
+
+# -- net-aware vs net-blind routing -----------------------------------------
+
+def _two_engine_fleet(net_aware, topo, placements, *, slots=1):
+    """Two identical operating points; only their placement differs —
+    engine 0 co-located with the ingress, engine 1 across DCN."""
+    cfg = get_config("qwen2.5-7b")
+    eps = fleet_mod._synthetic_eps(cfg)
+    cands = pool_candidates([("qwen2.5-7b", cfg, eps, 0.0)] * 2)
+    return FleetRouter(cands, quality=lambda c: 1.0, slots=slots,
+                       policy="serve", placements=placements, topo=topo,
+                       net_aware=net_aware, tracer=tr_mod.Tracer())
+
+
+def test_router_prices_dispatch_hops_when_aware():
+    """With a (deliberately) slow DCN, the aware router eats queue wait on
+    the co-located engine rather than pay the hop; the blind router
+    load-balances onto the remote engine — and pays the hop anyway,
+    because physics is applied to every dispatch, priced or not."""
+    slow = dataclasses.replace(lat.V5E, dcn_lat_s=2.0)
+    topo = Topology(n_hosts=2, chips_per_host=8, hw=slow)
+    placements = [Placement(host=0), Placement(host=1)]
+    reqs = [_req(i, t=0.05 * i, prompt=256, new=8, deadline=100.0)
+            for i in range(4)]
+
+    aware = _two_engine_fleet(True, topo, placements)
+    aware.run([r.fresh() for r in reqs])
+    blind = _two_engine_fleet(False, topo, placements)
+    blind.run([r.fresh() for r in reqs])
+
+    assert all(r.engine_idx == 0 for r in aware.retired)
+    assert any(r.engine_idx == 1 for r in blind.retired)
+    # physics bites the blind remote request: the prompt lands a hop
+    # late (admission gated on t_ready) and the response hop lands in
+    # the client-facing latency
+    remote = [r for r in blind.retired if r.engine_idx == 1][0]
+    assert remote.net_in_s >= 2.0 and remote.net_out_s >= 2.0
+    assert remote.t_admit >= remote.t_arrive + remote.net_in_s
+    assert remote.latency_s >= remote.net_in_s + remote.net_out_s
+    # the route.xfer vocabulary is emitted and the stream stays clean
+    for fl, aware_flag in ((aware, True), (blind, False)):
+        xf = [e for e in fl.tr.events
+              if e.name == tr_mod.ROUTE_XFER]
+        assert len(xf) == len(reqs)
+        assert all(e.args["aware"] is aware_flag for e in xf)
+        assert check(fl.tr.events) == []
+    links = {e.args["link"] for e in blind.tr.events
+             if e.name == tr_mod.ROUTE_XFER}
+    assert links == {"local", "dcn"}
+
+
+def test_router_mispricing_costs_goodput_on_dcn_spanning_tp():
+    """An engine whose tp group spans hosts (DCN collectives) is honestly
+    slow.  The aware router steers around it; the blind router — seeing
+    its collective-free twin — keeps using it and misses deadlines."""
+    cfg = get_config("qwen2.5-7b")
+    eps = fleet_mod._synthetic_eps(cfg)
+    cands = pool_candidates([("qwen2.5-7b", cfg, eps, 0.0)] * 2)
+    topo = Topology(n_hosts=2, chips_per_host=8)
+    placements = [Placement(host=0, tp=4, link="ici"),
+                  topo.place_tp(16)]          # spans hosts -> dcn
+    assert placements[1].link == "dcn"
+
+    fast = LatencyProfile(cfg, cands[0].avg_bits, tp=4, tp_link="ici")
+    slow = LatencyProfile(cfg, cands[1].avg_bits, tp=16, tp_link="dcn")
+    s_fast, s_slow = fast.service_s(256, 8), slow.service_s(256, 8)
+    assert s_slow > 3.0 * s_fast          # the mispricing is material...
+    # ...and blind pricing inverts the ordering: 16 chips with free
+    # collectives look faster than 4
+    assert slow.net_blind().service_s(256, 8) < s_fast
+
+    deadline = 3.0 * s_fast
+    reqs = [_req(i, t=s_fast * i, prompt=256, new=8, deadline=deadline)
+            for i in range(10)]
+    outs = {}
+    for awarev in (True, False):
+        fl = FleetRouter(cands, quality=lambda c: 1.0, slots=2,
+                         policy="serve", placements=placements, topo=topo,
+                         net_aware=awarev)
+        fl.run([r.fresh() for r in reqs])
+        outs[awarev] = fl.retired
+    met = {k: sum(1 for r in v if r.met_deadline) for k, v in outs.items()}
+    assert all(r.engine_idx == 0 for r in outs[True])
+    assert any(r.engine_idx == 1 for r in outs[False])
+    assert met[True] == len(reqs)
+    assert met[True] > met[False]
+
+
+# -- sharded vs unsharded differential (needs the simulated mesh) -----------
+
+def _mesh_cases():
+    names = [n for n, _ in servable_smoke_configs()
+             if n in ("qwen-sim-1.5b", "dbrx-132b")]
+    return [(n, p) for n in names for p in pallas_modes()]
+
+
+@needs_mesh
+@pytest.mark.parametrize("name,use_pallas", _mesh_cases())
+def test_sharded_decode_token_identical(name, use_pallas):
+    """A tp=2 head-sharded engine emits byte-identical tokens to its
+    unsharded twin — GSPMD partitions the same jitted computation, it
+    must not change it.  Covers a dense and a moe stack, both kernel
+    modes."""
+    cfg = dict(servable_smoke_configs())[name]
+    params = smoke_params(name)
+    mesh = sim_mesh(2)
+    assert mesh is not None
+
+    base = make_requests(cfg, [9, 17, 5], max_new=4)
+    shard = make_requests(cfg, [9, 17, 5], max_new=4)
+    run_paged(params, cfg, base, use_pallas=use_pallas)
+    _, eng = run_paged(params, cfg, shard, use_pallas=use_pallas, mesh=mesh,
+                       tracer=tr_mod.Tracer())
+
+    assert eng.tp == 2
+    assert eng.cache.tp == 2
+    for a, b in zip(base, shard):
+        assert a.result_tokens is not None
+        assert np.array_equal(a.result_tokens, b.result_tokens), \
+            f"{name} pallas={use_pallas}: sharded decode diverged"
+
+    # the shard-step vocabulary is emitted with the engine's tp and a
+    # non-negative collective price, and the checker (including the
+    # per-shard page-conservation cross-check) accepts the stream
+    ev = eng.tr.events
+    steps = [e for e in ev if e.name == tr_mod.ENGINE_SHARD_STEP]
+    assert steps, "sharded engine emitted no engine.shard_step spans"
+    assert all(e.args["tp"] == 2 for e in steps)
+    assert all(e.args["collective_s"] >= 0.0 for e in steps)
+    assert check(ev) == []
+
+
+@needs_mesh
+def test_sharded_engine_profile_carries_collective_tax():
+    name = "qwen-sim-1.5b"
+    cfg = dict(servable_smoke_configs())[name]
+    reqs = make_requests(cfg, [8], max_new=2)
+    _, eng = run_paged(params=smoke_params(name), cfg=cfg, reqs=reqs,
+                       mesh=sim_mesh(2))
+    assert eng.tp == 2
+    assert eng.profile.tp == 2
+    assert eng.profile._collective_s(1) > 0.0
+
+
+def test_checker_rejects_shard_tp_mismatch():
+    """engine.shard_step claiming tp=4 over a pool configured tp=2 is a
+    page-conservation violation (each shard must hold 1/tp of every
+    page's kv heads)."""
+    tr = tr_mod.Tracer(wall_clock=lambda: 0.0)
+    tr.instant(tr_mod.POOL_CONFIG, 0.0, track="e0/pool",
+               groups={"layers": 4}, page_size=8, slots=2, tp=2)
+    tr.span(tr_mod.ENGINE_SHARD_STEP, 0.0, 0.1, track="e0/steps",
+            n_active=1, tp=4, link="ici", collective_s=1e-4)
+    assert any("tp" in f for f in check(tr.events))
+
+
+def test_checker_rejects_bad_shard_step_and_xfer_args():
+    tr = tr_mod.Tracer(wall_clock=lambda: 0.0)
+    tr.span(tr_mod.ENGINE_SHARD_STEP, 0.0, 0.1, track="steps",
+            n_active=1, tp=1, link="ici", collective_s=1e-4)
+    tr.span(tr_mod.ENGINE_SHARD_STEP, 0.2, 0.3, track="steps",
+            n_active=1, tp=2, link="ici", collective_s=-1.0)
+    tr.instant(tr_mod.ROUTE_XFER, 0.4, track="router", rid=0, cls="t",
+               engine_idx=0, link="carrier-pigeon", in_s=0.0, out_s=0.0,
+               aware=True)
+    tr.instant(tr_mod.ROUTE_XFER, 0.5, track="router", rid=1, cls="t",
+               engine_idx=0, link="dcn", in_s=-0.1, out_s=0.0, aware=True)
+    f = check(tr.events)
+    assert any("tp" in x for x in f)
+    assert any("collective" in x for x in f)
+    assert any("link" in x for x in f)
+    assert any("negative" in x for x in f)
